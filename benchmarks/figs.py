@@ -1,0 +1,167 @@
+"""Paper figures 8-15 from the event-driven simulator.
+
+Each ``fig*`` function returns (rows, summary) where rows are per-workload
+dicts and summary carries the paper-comparison aggregate.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.isa import annotate_locations, location_stats
+from repro.core.simulator import SimConfig, end_to_end_time, simulate
+from repro.core.workloads import PROGRAMS
+
+PAPER = {
+    "fig8_speedup": 3.46,
+    "fig9_energy": 2.57,
+    "fig11_smem_speedup": 1.48,
+    "fig12_rb2": 1.10,
+    "fig12_rb4": 1.25,
+    "fig12_miss1": 0.156,
+    "fig12_miss2": 0.092,
+    "fig12_miss4": 0.0545,
+    "fig13_ponb": 1.46,
+    "fig14_N": 0.325,
+    "fig14_F": 0.637,
+    "fig14_B": 0.038,
+    "fig15_annotated": 3.45,
+    "fig15_hw_default": 1.92,
+    "fig15_all_near": 1.22,
+    "fig15_all_far": 1.78,
+}
+
+
+def _gm(vals):
+    return statistics.geometric_mean(vals)
+
+
+def fig8_9_speedup_energy(warp_iters: int = 2048):
+    rows = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        cm = SimConfig("mpu", warp_iters=warp_iters)
+        cg = SimConfig("gpu", warp_iters=warp_iters)
+        rm, rg = simulate(prog, cm), simulate(prog, cg)
+        tm, tg = end_to_end_time(rm, cm), end_to_end_time(rg, cg)
+        rows.append({
+            "workload": name,
+            "mpu_us": tm * 1e6,
+            "gpu_us": tg * 1e6,
+            "speedup": tg / tm,
+            "energy_reduction": rg.total_energy / rm.total_energy,
+            "bytes_per_instr": rm.bytes_per_instr,
+            "mpu_energy_breakdown": rm.energy,
+        })
+    summary = {
+        "mean_speedup": _gm([r["speedup"] for r in rows]),
+        "paper_speedup": PAPER["fig8_speedup"],
+        "mean_energy_reduction": _gm([r["energy_reduction"] for r in rows]),
+        "paper_energy": PAPER["fig9_energy"],
+    }
+    return rows, summary
+
+
+def fig10_energy_breakdown(warp_iters: int = 2048):
+    total = {}
+    for name, mk in PROGRAMS.items():
+        rm = simulate(mk(), SimConfig("mpu", warp_iters=warp_iters))
+        for k, v in rm.energy.items():
+            total[k] = total.get(k, 0.0) + v
+    s = sum(total.values())
+    return [{"component": k, "fraction": v / s}
+            for k, v in sorted(total.items())], {"total_j": s}
+
+
+def fig11_smem(warp_iters: int = 2048):
+    rows = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        near = simulate(prog, SimConfig("mpu", smem_near=True,
+                                        warp_iters=warp_iters))
+        far = simulate(prog, SimConfig("mpu", smem_near=False,
+                                       warp_iters=warp_iters))
+        rows.append({
+            "workload": name,
+            "speedup_near_vs_far": far.cycles / near.cycles,
+            "tsv_traffic_improvement":
+                (far.tsv_bytes / near.tsv_bytes) if near.tsv_bytes else 1.0,
+        })
+    summary = {
+        "mean_speedup": _gm([r["speedup_near_vs_far"] for r in rows]),
+        "paper": PAPER["fig11_smem_speedup"],
+    }
+    return rows, summary
+
+
+def fig12_rowbuffers(warp_iters: int = 2048):
+    rows = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        res = {rb: simulate(prog, SimConfig("mpu", row_buffers=rb,
+                                            warp_iters=warp_iters))
+               for rb in (1, 2, 4)}
+        rows.append({
+            "workload": name,
+            "speedup_rb2": res[1].cycles / res[2].cycles,
+            "speedup_rb4": res[1].cycles / res[4].cycles,
+            "miss_rb1": res[1].row_miss_rate,
+            "miss_rb2": res[2].row_miss_rate,
+            "miss_rb4": res[4].row_miss_rate,
+        })
+    summary = {
+        "mean_rb2": _gm([r["speedup_rb2"] for r in rows]),
+        "mean_rb4": _gm([r["speedup_rb4"] for r in rows]),
+        "mean_miss1": sum(r["miss_rb1"] for r in rows) / len(rows),
+        "mean_miss2": sum(r["miss_rb2"] for r in rows) / len(rows),
+        "mean_miss4": sum(r["miss_rb4"] for r in rows) / len(rows),
+        "paper_rb2": PAPER["fig12_rb2"], "paper_rb4": PAPER["fig12_rb4"],
+    }
+    return rows, summary
+
+
+def fig13_ponb(warp_iters: int = 2048):
+    rows = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        rm = simulate(prog, SimConfig("mpu", warp_iters=warp_iters))
+        rp = simulate(prog, SimConfig("ponb", warp_iters=warp_iters))
+        rows.append({"workload": name, "speedup_vs_ponb":
+                     rp.cycles / rm.cycles})
+    summary = {"mean": _gm([r["speedup_vs_ponb"] for r in rows]),
+               "paper": PAPER["fig13_ponb"]}
+    return rows, summary
+
+
+def fig14_register_locations():
+    rows = []
+    for name, mk in PROGRAMS.items():
+        st = location_stats(annotate_locations(mk())[0])
+        rows.append({"workload": name, **st})
+    summary = {
+        "mean_N": sum(r["N"] for r in rows) / len(rows),
+        "mean_F": sum(r["F"] for r in rows) / len(rows),
+        "mean_B": sum(r["B"] for r in rows) / len(rows),
+        "paper": (PAPER["fig14_N"], PAPER["fig14_F"], PAPER["fig14_B"]),
+    }
+    return rows, summary
+
+
+def fig15_policies(warp_iters: int = 2048):
+    rows = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        cg = SimConfig("gpu", warp_iters=warp_iters)
+        tg = end_to_end_time(simulate(prog, cg), cg)
+        row = {"workload": name}
+        for pol in ("annotated", "hw_default", "all_near", "all_far"):
+            cm = SimConfig("mpu", policy=pol, warp_iters=warp_iters)
+            tm = end_to_end_time(simulate(prog, cm), cm)
+            row[pol] = tg / tm
+        rows.append(row)
+    summary = {
+        pol: _gm([r[pol] for r in rows])
+        for pol in ("annotated", "hw_default", "all_near", "all_far")
+    }
+    summary["paper"] = {k.split("_", 1)[1]: v for k, v in PAPER.items()
+                        if k.startswith("fig15")}
+    return rows, summary

@@ -1,0 +1,18 @@
+"""Table III: DRAM-die area accounting for MPU's near-bank components."""
+from __future__ import annotations
+
+from repro.core.machine import AREA_TABLE_III, DRAM_DIE_AREA_MM2
+
+
+def run():
+    rows = []
+    total = 0.0
+    for name, (count, area) in AREA_TABLE_III.items():
+        total += area
+        rows.append({"component": name, "count": count,
+                     "area_mm2": area,
+                     "overhead_pct": 100.0 * area / DRAM_DIE_AREA_MM2})
+    summary = {"total_mm2": total,
+               "total_overhead_pct": 100.0 * total / DRAM_DIE_AREA_MM2,
+               "paper_overhead_pct": 20.62}
+    return rows, summary

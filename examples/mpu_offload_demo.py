@@ -1,0 +1,67 @@
+"""The paper's technique, end to end on real JAX code.
+
+1. Algorithm 1 annotates a kernel's jaxpr (Fig. 14 register breakdown);
+2. the offload engine extracts near-bank segments and runs them as
+   single-pass fused kernels (instruction offloading, §IV-B1);
+3. the event-driven simulator reproduces the paper's headline numbers.
+
+    PYTHONPATH=src python examples/mpu_offload_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpu_offload, offload_report
+from repro.core.isa import annotate_locations, location_stats
+from repro.core.simulator import SimConfig, end_to_end_time, simulate
+from repro.core.workloads import PROGRAMS
+
+
+def gelu_mlp_epilogue(x, w, b, res):
+    h = x @ w                       # far-bank (MXU)
+    h = jax.nn.gelu(h + b)          # near-bank value chain...
+    h = h * jax.nn.sigmoid(h)
+    return h + res                  # ...fused to ONE HBM pass
+
+
+def main():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (2048, 512))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (512, 512)) * 0.02
+    b = jnp.zeros((512,))
+    res = jax.random.normal(jax.random.fold_in(k, 2), (2048, 512))
+
+    print("== Algorithm 1 on the jaxpr ==")
+    plan = offload_report(gelu_mlp_epilogue, x, w, b, res)
+    stats = plan.annotation.stats()
+    print(f"register locations: N={stats['N']:.2f} F={stats['F']:.2f} "
+          f"B={stats['B']:.2f}")
+    print(f"near segments: {[s.n_eqns for s in plan.segments]} eqns each")
+    print(f"HBM traffic: naive {plan.naive_hbm_bytes/1e6:.1f}MB -> fused "
+          f"{plan.fused_hbm_bytes/1e6:.1f}MB "
+          f"({plan.traffic_reduction:.2f}x reduction)")
+
+    fused = mpu_offload(gelu_mlp_epilogue)
+    err = jnp.max(jnp.abs(fused(x, w, b, res)
+                          - gelu_mlp_epilogue(x, w, b, res)))
+    print(f"fused == eager: max err {float(err):.2e}")
+
+    print("\n== Fig. 14 breakdown on the paper's SIMT programs ==")
+    for name in ("AXPY", "GEMV", "HIST", "TTRANS"):
+        st = location_stats(annotate_locations(PROGRAMS[name]())[0])
+        print(f"  {name:8s} N={st['N']:.2f} F={st['F']:.2f} B={st['B']:.2f}")
+
+    print("\n== simulator headline (Fig. 8) ==")
+    import statistics
+    sp = []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        cm, cg = SimConfig("mpu"), SimConfig("gpu")
+        tm = end_to_end_time(simulate(prog, cm), cm)
+        tg = end_to_end_time(simulate(prog, cg), cg)
+        sp.append(tg / tm)
+    print(f"geomean MPU-vs-GPU speedup: "
+          f"{statistics.geometric_mean(sp):.2f}x (paper: 3.46x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: build a tiny model, train briefly, generate tokens.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs import TrainConfig, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.serve import Engine, Request
+from repro.train import train
+
+
+def main():
+    # any assigned architecture works: --arch analogue is get_config(id)
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              num_layers=2)
+    shape = ShapeConfig("quick", seq_len=64, global_batch=8, kind="train")
+    tcfg = TrainConfig(total_steps=30, warmup_steps=5, learning_rate=1e-3,
+                       checkpoint_every=0)
+    print(f"training {cfg.name} (reduced, {cfg.param_count()/1e6:.1f}M "
+          f"params analytic) for {tcfg.total_steps} steps")
+    state, hist = train(cfg, shape, tcfg, log_every=10)
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    engine = Engine(cfg, state.params, slots=4, max_len=64)
+    reqs = [Request(np.arange(8, dtype=np.int32) + i, max_new_tokens=8,
+                    rid=i) for i in range(3)]
+    for rid, comp in engine.generate(reqs).items():
+        print(f"request {rid}: {comp.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: a production-grade JAX reproduction of MPU (near-bank SIMT
+computing) adapted to TPU, plus the multi-arch LM framework it lives in.
+
+See DESIGN.md for the paper→TPU mapping and EXPERIMENTS.md for results.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,11 @@
+from repro.ckpt.checkpoint import all_steps, latest_step, restore, save
+from repro.ckpt.manager import (
+    CheckpointManager,
+    StragglerMonitor,
+    elastic_data_axis,
+)
+
+__all__ = [
+    "all_steps", "latest_step", "restore", "save",
+    "CheckpointManager", "StragglerMonitor", "elastic_data_axis",
+]

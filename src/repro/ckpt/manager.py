@@ -1,0 +1,87 @@
+"""Fault-tolerance manager: periodic checkpoints, restart, elastic
+re-mesh, and straggler accounting.
+
+Designed for the 1000+-node regime (DESIGN.md §5):
+
+  * ``maybe_save`` checkpoints every N steps (atomic, bounded retention);
+  * ``restore_or_init`` resumes from the newest complete checkpoint —
+    a crashed/preempted job restarts from the last commit, and the data
+    pipeline's (seed, step) determinism replays the exact batch stream;
+  * ``elastic_data_axis`` shrinks the data axis to the largest feasible
+    size when hosts are lost (model/pod axes are topology-fixed; batch
+    rows redistribute across surviving hosts);
+  * ``StragglerMonitor`` tracks per-step wall times and flags steps
+    beyond ``deadline = median * tolerance`` — the runbook response is
+    hierarchical (pod-local) collectives plus hot-spare swap, both
+    config-level actions recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import TrainConfig
+
+
+@dataclass
+class StragglerMonitor:
+    tolerance: float = 2.0
+    window: int = 50
+    times: list[float] = field(default_factory=list)
+    flagged: list[tuple[int, float]] = field(default_factory=list)
+    _t0: float | None = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        """Returns True if this step was a straggler."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+        med = sorted(self.times)[len(self.times) // 2]
+        if len(self.times) >= 5 and dt > med * self.tolerance:
+            self.flagged.append((step, dt))
+            return True
+        return False
+
+
+def elastic_data_axis(requested: int, surviving_hosts: int,
+                      hosts_per_data_shard: int = 1) -> int:
+    """Largest data-axis size <= requested that the surviving hosts can
+    populate evenly. Model/pod axes are fixed by interconnect topology."""
+    capacity = max(1, surviving_hosts // hosts_per_data_shard)
+    size = min(requested, capacity)
+    while size > 1 and requested % size != 0:
+        size -= 1
+    return max(1, size)
+
+
+class CheckpointManager:
+    def __init__(self, cfg: TrainConfig, *, host_id: int = 0,
+                 num_hosts: int = 1):
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+
+    def restore_or_init(self, init_fn: Callable[[], Any]) -> tuple[Any, int]:
+        """Returns (state, start_step)."""
+        step = ckpt.latest_step(self.cfg.checkpoint_dir)
+        example = init_fn()
+        if step is None:
+            return example, 0
+        state = ckpt.restore(self.cfg.checkpoint_dir, step, example,
+                             num_hosts_now=self.num_hosts)
+        return state, step
+
+    def maybe_save(self, step: int, state: Any, *, force: bool = False):
+        if not force and (self.cfg.checkpoint_every <= 0
+                          or step % self.cfg.checkpoint_every != 0
+                          or step == 0):
+            return None
+        return ckpt.save(self.cfg.checkpoint_dir, step, state,
+                         host_id=self.host_id, num_hosts=self.num_hosts,
+                         keep=self.cfg.keep_checkpoints)

@@ -1,0 +1,21 @@
+"""internvl2-26b — VLM: InternViT frontend (stub) + InternLM2 backbone.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553 [arXiv:2404.16821; hf].
+The vision frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed patch embeddings of length ``frontend_len``.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    frontend="vision",
+    frontend_len=1024,  # 4 tiles x 256 patch tokens
+    source="arXiv:2404.16821; hf",
+)

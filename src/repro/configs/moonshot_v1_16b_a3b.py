@@ -1,0 +1,19 @@
+"""moonshot-v1-16b-a3b (Moonlight) — fine-grained MoE, 64 experts top-6.
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840
+[hf:moonshotai/Moonlight-16B-A3B; hf].
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    moe=MoEConfig(num_experts=64, top_k=6),
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)

@@ -1,0 +1,37 @@
+"""The paper's own benchmark suite (Table I) as a config.
+
+Twelve data-intensive workloads; each is realized both as (a) an abstract
+SIMT instruction trace consumed by the event-driven MPU simulator
+(``repro.core.workloads``) and (b) a JAX function whose memory-bound value
+chains ``repro.core.offload.mpu_offload`` fuses into near-memory Pallas
+kernels.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    name: str
+    domain: str
+    reference: str
+    description: str
+    # default problem size used by benchmarks (elements on the hot path)
+    size: int = 1 << 22
+
+
+TABLE_I: tuple[WorkloadConfig, ...] = (
+    WorkloadConfig("BLUR", "Image Processing", "Halide", "3x3 blur."),
+    WorkloadConfig("CONV", "Machine Learning", "TensorFlow", "3x3 conv."),
+    WorkloadConfig("GEMV", "Linear Algebra", "cuBLAS", "Matrix-vector multiply."),
+    WorkloadConfig("HIST", "Image Processing", "CUB", "Histogram."),
+    WorkloadConfig("KMEANS", "Machine Learning", "Rodinia", "K-means clustering."),
+    WorkloadConfig("KNN", "Machine Learning", "Rodinia", "K-nearest-neighbour."),
+    WorkloadConfig("TTRANS", "Linear Algebra", "cuBLAS", "Tensor transposition."),
+    WorkloadConfig("MAXP", "Machine Learning", "TensorFlow", "Max-pooling."),
+    WorkloadConfig("NW", "Bioinformatics", "Rodinia", "Sequence alignment."),
+    WorkloadConfig("UPSAMP", "Image Processing", "Halide", "Image upsample."),
+    WorkloadConfig("AXPY", "Linear Algebra", "cuBLAS", "Vector add."),
+    WorkloadConfig("PR", "Linear Algebra", "CUB", "Parallel reduction."),
+)
+
+WORKLOAD_NAMES = tuple(w.name for w in TABLE_I)

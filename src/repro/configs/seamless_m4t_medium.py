@@ -1,0 +1,27 @@
+"""seamless-m4t-medium — enc-dec multimodal (audio) backbone.
+
+12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206
+[arXiv:2308.11596; hf].  The speech frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings of length
+``frontend_len`` to the encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    kind="encoder_decoder",
+    num_layers=12,
+    enc_num_layers=12,
+    enc_seq_len=1024,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    act="relu",
+    gated_mlp=False,
+    frontend="audio",
+    frontend_len=1024,
+    source="arXiv:2308.11596; hf",
+)

@@ -1,0 +1,225 @@
+"""Abstract SIMT instruction IR + the paper's Algorithm 1.
+
+The IR is a PTX-like register program: enough structure for (a) the
+location-annotation pass below, (b) the event-driven simulator
+(repro.core.simulator), and (c) the jaxpr frontend
+(repro.core.locator) — all three speak this IR, so Algorithm 1 is
+implemented exactly once, faithfully to §V-B of the paper.
+
+Location lattice (paper notation):
+    U  unknown
+    N  near-bank   (value registers / compute on loaded data)
+    F  far-bank    (addresses, control flow, far-only opcodes)
+    B  both        (conflicting N/F evidence -> lives in both RFs)
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+
+class Loc(enum.Enum):
+    U = "U"
+    N = "N"
+    F = "F"
+    B = "B"
+
+
+class OpKind(enum.Enum):
+    LD_GLOBAL = "ld.global"
+    ST_GLOBAL = "st.global"
+    LD_SHARED = "ld.shared"
+    ST_SHARED = "st.shared"
+    ALU = "alu"          # fp value computation (SIMT lanes)
+    ALU_INT = "alu.int"  # integer/address computation
+    JUMP = "jump"        # branch; sources are predicate registers
+    SFU = "sfu"          # transcendental (exp/sin/rsqrt) — still value class
+
+
+@dataclass(frozen=True)
+class Instr:
+    op: OpKind
+    dst: tuple[str, ...]        # destination registers (may be empty: st/jump)
+    src: tuple[str, ...]        # source registers
+    addr: tuple[str, ...] = ()  # address registers (ld/st) — LSU operands
+    # simulator annotations:
+    bytes_per_lane: int = 4     # memory footprint per SIMT lane (ld/st)
+    tag: str = ""               # free-form (workload bookkeeping)
+
+
+@dataclass
+class Program:
+    """A SIMT kernel body (one loop iteration per warp) + trip metadata."""
+
+    name: str
+    body: list[Instr]
+    # simulator metadata: how many warp-iterations one core executes,
+    # and the DRAM row locality of each ld/st stream (see simulator).
+    warp_iters: int = 1024
+    streams: dict[str, dict] = field(default_factory=dict)
+    # instructions executed once every ``epilogue_every`` iterations (the
+    # amortized tails: final stores, reduction flushes).  Part of the
+    # static analysis — Algorithm 1 sees the whole kernel.
+    epilogue: list[Instr] = field(default_factory=list)
+    epilogue_every: int = 64
+
+    def full_body(self) -> list[Instr]:
+        return [*self.body, *self.epilogue]
+
+    def registers(self) -> set[str]:
+        regs: set[str] = set()
+        for ins in self.full_body():
+            regs.update(ins.dst)
+            regs.update(ins.src)
+            regs.update(ins.addr)
+        return regs
+
+
+# far-bank-only opcode set (hardware policy, step 1 of Fig. 3): the LSU
+# handles global memory addressing, so ld/st.global are far-bank
+# *instructions* even though their value registers are near-bank.
+FAR_OPCODES = {OpKind.LD_GLOBAL, OpKind.ST_GLOBAL, OpKind.JUMP}
+
+
+def annotate_locations(program: Program, smem_near: bool = True
+                       ) -> tuple[dict[str, Loc], dict[int, Loc]]:
+    """Algorithm 1 (§V-B), faithfully.
+
+    ``smem_near=False`` evaluates the far-bank shared-memory design
+    (Fig. 11 baseline): ld/st.shared seeds flip to F.
+    Returns (register locations, instruction locations keyed by body idx).
+    """
+    body = program.full_body()
+    regs: dict[str, Loc] = {r: Loc.U for r in program.registers()}
+    instr_loc: dict[int, Loc] = {i: Loc.U for i in range(len(body))}
+
+    def join(a: Loc, b: Loc) -> Loc:
+        if a is Loc.U:
+            return b
+        if b is Loc.U or a is b:
+            return a
+        return Loc.B
+
+    def seed(r: str, loc: Loc):
+        # conflicting seeds (e.g. one register used as both address and
+        # loaded value) join to B — it needs a copy in both RFs
+        regs[r] = join(regs[r], loc)
+
+    # --- seed phase -------------------------------------------------------
+    for ins in body:
+        if ins.op is OpKind.JUMP:
+            for r in ins.src:
+                seed(r, Loc.F)
+        elif ins.op is OpKind.LD_GLOBAL:
+            for r in ins.addr:
+                seed(r, Loc.F)      # address registers: LSU needs them
+            for r in ins.dst:
+                seed(r, Loc.N)      # loaded value lands near-bank
+        elif ins.op is OpKind.ST_GLOBAL:
+            for r in ins.addr:
+                seed(r, Loc.F)
+            for r in ins.src:
+                seed(r, Loc.N)      # stored value read from near-bank RF
+        elif ins.op in (OpKind.LD_SHARED, OpKind.ST_SHARED):
+            # near-bank shared memory (§IV-C): both addr and value near;
+            # far-bank smem design flips these seeds to F
+            for r in (*ins.src, *ins.dst, *ins.addr):
+                seed(r, Loc.N if smem_near else Loc.F)
+
+    # --- fixpoint propagation --------------------------------------------
+
+    changed = True
+    while changed:
+        changed = False
+        for ins in body:
+            if ins.op in (OpKind.LD_GLOBAL, OpKind.ST_GLOBAL,
+                          OpKind.LD_SHARED, OpKind.ST_SHARED, OpKind.JUMP):
+                continue  # seeds fixed by hardware policy
+            dst_locs = [regs[r] for r in ins.dst if regs[r] is not Loc.U]
+            if not dst_locs:
+                continue
+            dloc = dst_locs[0]
+            for other in dst_locs[1:]:
+                dloc = join(dloc, other)
+            for r in ins.src:
+                new = join(regs[r], dloc)
+                if new is not regs[r]:
+                    regs[r] = new
+                    changed = True
+
+    # --- instruction locations follow their destination registers --------
+    for i, ins in enumerate(body):
+        if ins.op in FAR_OPCODES:
+            instr_loc[i] = Loc.F
+        elif ins.op in (OpKind.LD_SHARED, OpKind.ST_SHARED):
+            instr_loc[i] = Loc.N if smem_near else Loc.F
+        else:
+            locs = [regs[r] for r in ins.dst]
+            if not locs:
+                instr_loc[i] = Loc.F
+            else:
+                out = locs[0]
+                for other in locs[1:]:
+                    out = join(out, other)
+                # Unknown after fixpoint -> default far-bank (full-pipeline
+                # fallback, §IV-B1).  Both -> DUAL execution: B registers
+                # get a physical register in each RF ("could appear on both
+                # far-bank and near-bank pipeline stages", §VI-D), so their
+                # defining instruction runs on both sides, keeping both
+                # copies fresh with zero TSV register-move traffic.
+                instr_loc[i] = {Loc.U: Loc.F}.get(out, out)
+    return regs, instr_loc
+
+
+def location_stats(regs: dict[str, Loc]) -> dict[str, float]:
+    """Fig. 14 breakdown: fraction of registers N / F / B (U folded to F)."""
+    n = len(regs) or 1
+    cnt = {"N": 0, "F": 0, "B": 0}
+    for loc in regs.values():
+        cnt[{Loc.U: "F"}.get(loc, loc.value)] += 1
+    return {k: v / n for k, v in cnt.items()}
+
+
+def apply_policy(program: Program, policy: str,
+                 smem_near: bool = True) -> dict[int, Loc]:
+    """Instruction-location policies of Fig. 15.
+
+    annotated   Algorithm 1 (the paper's compiler optimization)
+    hw_default  no compiler hints: offload only when the register track
+                table would already have all sources near-bank — statically
+                approximated as: near iff *all* sources are value registers
+                produced by earlier near instructions or global loads
+    all_near    offload every offloadable instruction
+    all_far     never offload (PonB-like execution of compute)
+    """
+    if policy == "annotated":
+        return annotate_locations(program, smem_near=smem_near)[1]
+    out: dict[int, Loc] = {}
+    produced_near: set[str] = set()
+    for i, ins in enumerate(program.full_body()):
+        if ins.op in FAR_OPCODES:
+            out[i] = Loc.F
+            if ins.op is OpKind.LD_GLOBAL:
+                produced_near.update(ins.dst)  # values land near-bank
+            continue
+        if ins.op in (OpKind.LD_SHARED, OpKind.ST_SHARED):
+            near = smem_near and policy != "all_far"
+            out[i] = Loc.N if near else Loc.F
+            if near:
+                produced_near.update(ins.dst)
+            continue
+        if policy == "all_near":
+            out[i] = Loc.N
+            produced_near.update(ins.dst)
+        elif policy == "all_far":
+            out[i] = Loc.F
+        elif policy == "hw_default":
+            if ins.src and all(r in produced_near for r in ins.src):
+                out[i] = Loc.N
+                produced_near.update(ins.dst)
+            else:
+                out[i] = Loc.F
+        else:
+            raise ValueError(policy)
+    return out

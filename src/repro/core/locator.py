@@ -1,0 +1,185 @@
+"""Algorithm 1 over jaxprs — the MPU compiler's location annotation,
+re-fronted from PTX to JAX's IR (see DESIGN.md §2).
+
+Register ↔ jaxpr var.  Instruction ↔ eqn.  Seeds:
+
+    ld.global value   bulk invars (size >= bulk_threshold)      -> N
+    ld.global addr    gather/scatter/slice *index* operands      -> F
+    st.global value   vars returned as bulk outvars              -> N
+    jump predicates   cond/while predicate operands, int scalars -> F
+    far opcode set    dot_general, conv, gather, scatter, sort,
+                      top_k, control flow, reductions, rng       -> F (dst)
+
+Propagation is the paper's fixpoint: a known dst location flows to its
+sources; N/F conflict -> B.  Instruction location follows its dst.
+
+The annotation drives ``repro.core.offload`` (which fuses maximal near
+segments into single-pass Pallas kernels) and the Fig. 14-style register
+breakdown for arbitrary JAX programs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jcore
+
+from repro.core.isa import Loc
+
+# elementwise near-bank-capable primitives (value-chain ALU/SFU ops)
+ELEMENTWISE_PRIMS = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "sign",
+    "exp", "log", "log1p", "expm1", "tanh", "sqrt", "rsqrt", "cbrt",
+    "logistic", "sin", "cos", "tan", "erf", "erfc", "erf_inv",
+    "integer_pow", "pow", "floor", "ceil", "round", "square",
+    "select_n", "convert_element_type", "clamp", "nextafter",
+    "eq", "ne", "lt", "le", "gt", "ge", "and", "or", "xor", "not",
+    "is_finite", "exp2", "log2", "rem", "atan2", "real", "imag",
+    "copy", "sign", "population_count", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic",
+}
+
+# far-bank-only opcode set (hardware policy step 1): MXU / data-movement /
+# control primitives that need the full far pipeline (TPU: the MXU and
+# XLA's gather/scatter/sort machinery)
+FAR_PRIMS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter",
+    "scatter_add", "scatter-add", "dynamic_slice", "dynamic_update_slice",
+    "sort", "top_k", "while", "cond", "scan", "pjit", "custom_jvp_call",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "checkpoint",
+    "rng_uniform", "rng_bit_generator", "random_bits", "random_seed",
+    "random_wrap", "random_fold_in", "iota", "argmax", "argmin",
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "cumsum", "cumprod", "cummax", "all_gather", "all_reduce",
+    "psum", "all_to_all", "ppermute", "reduce_precision",
+}
+
+# index-like operands (position -> always-F "address registers")
+_INDEX_OPERANDS = {
+    "gather": (1,),                  # indices
+    "scatter": (1,),
+    "scatter_add": (1,),
+    "dynamic_slice": None,           # all but operand 0 are starts
+    "dynamic_update_slice": None,    # operands 2+ are starts
+}
+
+
+@dataclass
+class JaxprAnnotation:
+    var_loc: dict[Any, Loc]
+    eqn_loc: list[Loc]
+    jaxpr: Any
+
+    def stats(self) -> dict[str, float]:
+        n = len(self.var_loc) or 1
+        cnt = {"N": 0, "F": 0, "B": 0}
+        for loc in self.var_loc.values():
+            cnt[{Loc.U: "F"}.get(loc, loc.value)] += 1
+        return {k: v / n for k, v in cnt.items()}
+
+
+def _is_bulk(aval, threshold: int) -> bool:
+    return (hasattr(aval, "size") and aval.size >= threshold
+            and jnp.issubdtype(aval.dtype, jnp.floating))
+
+
+def _is_value(aval) -> bool:
+    """Any non-scalar float tensor in HBM is a value register (ld/st.global
+    semantics); the size threshold only gates offload *eligibility*."""
+    return (hasattr(aval, "ndim") and aval.ndim >= 1
+            and jnp.issubdtype(aval.dtype, jnp.floating))
+
+
+def annotate_jaxpr(closed: jcore.ClosedJaxpr, *,
+                   bulk_threshold: int = 1024) -> JaxprAnnotation:
+    jaxpr = closed.jaxpr
+    var_loc: dict[Any, Loc] = {}
+
+    def get(v) -> Loc:
+        if isinstance(v, jcore.Literal):
+            return Loc.F  # immediates live in the instruction stream
+        return var_loc.get(v, Loc.U)
+
+    def join(a: Loc, b: Loc) -> Loc:
+        if a is Loc.U:
+            return b
+        if b is Loc.U or a is b:
+            return a
+        return Loc.B
+
+    def seed(v, loc: Loc):
+        if isinstance(v, jcore.Literal):
+            return
+        var_loc[v] = join(var_loc.get(v, Loc.U), loc)
+
+    # --- seeds ------------------------------------------------------------
+    for v in jaxpr.invars:
+        if _is_value(v.aval):
+            seed(v, Loc.N)       # ld.global value register
+        else:
+            seed(v, Loc.F)       # scalars / int tables: far
+    for v in jaxpr.outvars:
+        if isinstance(v, jcore.Literal):
+            continue
+        if _is_value(v.aval):
+            seed(v, Loc.N)       # st.global value register
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in _INDEX_OPERANDS:
+            idx = _INDEX_OPERANDS[name]
+            operands = (range(1, len(eqn.invars)) if idx is None else idx)
+            for i in operands:
+                if i < len(eqn.invars):
+                    seed(eqn.invars[i], Loc.F)
+        if name in ("cond", "while"):
+            for v in eqn.invars[:1]:
+                seed(v, Loc.F)   # predicate / carry guard
+        # integer-typed intermediates behave like address registers
+        for v in eqn.outvars:
+            if not jnp.issubdtype(v.aval.dtype, jnp.floating):
+                seed(v, Loc.F)
+
+    # --- fixpoint: dst -> src propagation ----------------------------------
+    changed = True
+    iters = 0
+    while changed and iters < 100:
+        changed = False
+        iters += 1
+        for eqn in jaxpr.eqns:
+            dlocs = [get(v) for v in eqn.outvars if get(v) is not Loc.U]
+            if not dlocs:
+                continue
+            dloc = dlocs[0]
+            for other in dlocs[1:]:
+                dloc = join(dloc, other)
+            for v in eqn.invars:
+                if isinstance(v, jcore.Literal):
+                    continue
+                new = join(get(v), dloc)
+                if new is not get(v):
+                    var_loc[v] = new
+                    changed = True
+
+    # --- instruction locations ---------------------------------------------
+    eqn_loc: list[Loc] = []
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in FAR_PRIMS or name not in ELEMENTWISE_PRIMS:
+            # hardware policy: far opcode set (plus anything unknown —
+            # the far pipeline is the fallback, §IV-B1)
+            eqn_loc.append(Loc.F)
+            continue
+        locs = [get(v) for v in eqn.outvars]
+        out = locs[0]
+        for other in locs[1:]:
+            out = join(out, other)
+        eqn_loc.append({Loc.U: Loc.F}.get(out, out))
+    return JaxprAnnotation(var_loc, eqn_loc, closed)
+
+
+def annotate_fn(fn, *example_args, bulk_threshold: int = 1024
+                ) -> JaxprAnnotation:
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return annotate_jaxpr(closed, bulk_threshold=bulk_threshold)

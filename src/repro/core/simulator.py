@@ -1,0 +1,401 @@
+"""Event-driven simulator for MPU / GPU-like / PonB machines.
+
+Follows the paper's methodology (§VI-A: GPGPU-Sim-style core model +
+Ramulator-style DRAM banks + TSV/NoC resources) at first-order
+resource-conflict fidelity:
+
+* warps are sequential processes interleaved in *time order* (a heap of
+  per-warp clocks — event-driven, not round-robin), each with an in-order
+  scoreboard (RAW stalls);
+* DRAM banks keep row-buffer state with an LRU set of ``row_buffers``
+  simultaneously activated rows (the MASA enhancement, §IV-C); the four
+  banks of an NBU share the 256-bit bank IO bus (data bursts serialize
+  per NBU; activations proceed per bank in parallel);
+* the TSV is a shared bandwidth resource crossed by offload descriptors,
+  register moves, far-bank load returns and (when configured far)
+  shared-memory traffic — MPU's scarce vertical link;
+* energies follow Table II per access/bit.
+
+Machines:
+  mpu    hybrid pipeline (the paper) — per-instruction near/far locations
+  ponb   processing-on-base-logic-die: all compute far; every DRAM byte
+         crosses the TSV (Fig. 13 baseline)
+  gpu    V100-like compute-centric baseline (Figs. 8/9 baseline)
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+from dataclasses import dataclass, field
+
+from repro.core import machine as mach
+from repro.core.isa import Loc, OpKind, Program, annotate_locations, apply_policy
+
+K = OpKind
+
+
+@dataclass
+class SimConfig:
+    machine: str = "mpu"            # mpu | ponb | gpu
+    policy: str = "annotated"       # annotated | hw_default | all_near | all_far
+    row_buffers: int = 4            # 1 | 2 | 4 (MASA)
+    smem_near: bool = True          # near-bank vs far-bank shared memory
+    warps: int = 16
+    warp_iters: int | None = None   # override Program.warp_iters
+
+
+@dataclass
+class SimResult:
+    name: str
+    cycles: float
+    instructions: int
+    dram_bytes: float
+    tsv_bytes: float
+    row_hits: int
+    row_misses: int
+    energy: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def row_miss_rate(self) -> float:
+        total = self.row_hits + self.row_misses
+        return self.row_misses / total if total else 0.0
+
+    @property
+    def total_energy(self) -> float:
+        return sum(self.energy.values())
+
+    @property
+    def bytes_per_instr(self) -> float:
+        return self.dram_bytes / max(self.instructions, 1)
+
+
+class _Resource:
+    """Serially-occupied resource; acquisition order == time order because
+    the engine schedules warps by their clocks."""
+
+    __slots__ = ("free_at",)
+
+    def __init__(self):
+        self.free_at = 0.0
+
+    def acquire(self, now: float, service: float) -> float:
+        start = max(now, self.free_at)
+        self.free_at = start + service
+        return start
+
+
+class _RowState:
+    """Per-bank LRU set of simultaneously-activated rows."""
+
+    __slots__ = ("open_rows", "capacity", "hits", "misses")
+
+    def __init__(self, capacity: int):
+        self.open_rows: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, row: int) -> bool:
+        if row in self.open_rows:
+            self.hits += 1
+            self.open_rows.move_to_end(row)
+            return True
+        self.misses += 1
+        if len(self.open_rows) >= self.capacity:
+            self.open_rows.popitem(last=False)
+        self.open_rows[row] = None
+        return False
+
+
+class _WarpEngine:
+    """Interleaves per-warp sequential execution in time order."""
+
+    def __init__(self, program: Program, cfg: SimConfig, step_fn):
+        self.program = program
+        self.cfg = cfg
+        self.step_fn = step_fn  # (warp, iter, instr_idx, now, state) -> now'
+
+    def run(self) -> float:
+        iters = self.cfg.warp_iters or self.program.warp_iters
+        iters_per_warp = max(1, iters // self.cfg.warps)
+        body_len = len(self.program.body)
+        epi = self.program.epilogue
+        every = max(1, self.program.epilogue_every)
+        # schedule: per iteration, body indices; plus epilogue indices
+        # (offset body_len) every ``epilogue_every`` iterations
+        schedule: list[tuple[int, int]] = []  # (iter, instr_idx in full_body)
+        for it in range(iters_per_warp):
+            schedule.extend((it, i) for i in range(body_len))
+            if epi and (it + 1) % every == 0:
+                schedule.extend((it, body_len + i) for i in range(len(epi)))
+        heap = [(0.0, w, 0) for w in range(self.cfg.warps)]
+        heapq.heapify(heap)
+        end = 0.0
+        while heap:
+            now, w, step = heapq.heappop(heap)
+            it, idx = schedule[step]
+            now = self.step_fn(w, it, idx, now)
+            end = max(end, now)
+            if step + 1 < len(schedule):
+                heapq.heappush(heap, (now, w, step + 1))
+        return end
+
+
+def _simulate_mpu(program: Program, cfg: SimConfig) -> SimResult:
+    m = mach.MPU
+    is_ponb = cfg.machine == "ponb"
+    if is_ponb:
+        locs = {i: Loc.F for i in range(len(program.full_body()))}
+        reg_loc: dict[str, Loc] = {}
+    else:
+        locs = apply_policy(program, cfg.policy, smem_near=cfg.smem_near)
+        reg_loc, _ = annotate_locations(program, smem_near=cfg.smem_near)
+
+    n_banks = m.nbus * m.banks_per_nbu
+    rows = [_RowState(cfg.row_buffers) for _ in range(n_banks)]
+    bank_act = [_Resource() for _ in range(n_banks)]   # ACT/PRE occupancy
+    nbu_io = [_Resource() for _ in range(m.nbus)]      # shared 256b data bus
+    tsv = _Resource()
+    far_alu = [_Resource() for _ in range(m.subcores)]
+    nbu_alu = [_Resource() for _ in range(m.nbus)]
+    # near smem: one port per NBU (horizontal core, §IV-C);
+    # far smem: banked per subcore on the base die
+    smem_ports = [_Resource() for _ in range(
+        m.nbus if (cfg.smem_near or is_ponb) else m.subcores)]
+    issue = _Resource()
+    dram_mult = 2  # DRAM core arrays at 0.5 GHz vs 1 GHz logic (calibrates
+    #                aggregate bank BW to the paper's measured 4.13x GPU)
+
+    warp_bytes = m.simt_width * 4          # 128B coalesced access
+    bursts = warp_bytes // 32              # 32B per 256b burst
+    tsv_cyc_per_byte = 1.0 / (m.tsv_bits_per_core / 8 * m.f_tsv_ghz
+                              / m.f_core_ghz)
+    desc_bytes = 8                         # offload descriptor / DRAM cmd
+    alu_lat, ld_lat, mv_lat = 4.0, 10.0, 6.0
+
+    energy = collections.Counter()
+    counters = {"tsv_bytes": 0.0, "dram_bytes": 0.0, "instr": 0}
+
+    reg_ready: list[dict[str, float]] = [collections.defaultdict(float)
+                                         for _ in range(cfg.warps)]
+    reg_site: list[dict[str, Loc]] = [collections.defaultdict(lambda: Loc.F)
+                                      for _ in range(cfg.warps)]
+    smem_rmw_tags = {i.tag for i in program.body if i.op is K.ST_SHARED} & \
+        {i.tag for i in program.body if i.op is K.LD_SHARED}
+    last_rmw_done: dict = collections.defaultdict(float)
+    last_loc: list[Loc] = [Loc.F] * cfg.warps
+
+    def xfer_tsv(now: float, nbytes: float) -> float:
+        counters["tsv_bytes"] += nbytes
+        service = nbytes * tsv_cyc_per_byte
+        start = tsv.acquire(now, service)
+        energy["tsv"] += nbytes * 8 * m.e_tsv_bit
+        return start + service
+
+    full_body = program.full_body()
+
+    def step(w: int, it: int, idx: int, now: float) -> float:
+        ins = full_body[idx]
+        counters["instr"] += 1
+        loc = locs[idx]
+        rr, rs = reg_ready[w], reg_site[w]
+        dep = max((rr[r] for r in (*ins.src, *ins.addr)), default=0.0)
+        t = max(now, dep)
+        t = issue.acquire(t, 1.0 / m.subcores) + 1.0  # frontend issue
+        if not is_ponb and loc is not Loc.B and \
+                ins.op in (K.ALU, K.ALU_INT, K.SFU):
+            for r in ins.src:
+                site = rs[r]
+                if site is not loc and site is not Loc.B:
+                    # register move engine: one warp register over the TSV
+                    t = max(t, xfer_tsv(t, warp_bytes)) + mv_lat
+                    energy["rf"] += 2 * m.e_rf * m.simt_width
+                    rs[r] = Loc.B
+        if ins.op in (K.ALU, K.ALU_INT, K.SFU):
+            if loc is Loc.B and not is_ponb:
+                # dual execution: B-located values are redundantly computed
+                # on both pipelines (one physical register per RF, §VI-D) —
+                # zero register-move traffic, two ALU slots.
+                if last_loc[w] not in (Loc.N, Loc.B):
+                    t = max(t, xfer_tsv(t, desc_bytes))
+                s1 = far_alu[w % m.subcores].acquire(t, 1.0)
+                s2 = nbu_alu[w % m.nbus].acquire(t, 1.0)
+                start = max(s1, s2)
+                energy["alu"] += 2 * m.e_alu_op * m.simt_width
+                energy["opc"] += 2 * m.e_opc
+            elif loc is Loc.N and not is_ponb:
+                if last_loc[w] not in (Loc.N, Loc.B):
+                    # offload engine streams contiguous near segments; the
+                    # descriptor is charged per segment entry (batched)
+                    t = max(t, xfer_tsv(t, desc_bytes))
+                start = nbu_alu[w % m.nbus].acquire(t, 1.0)
+                energy["alu"] += m.e_alu_op * m.simt_width
+                energy["opc"] += m.e_opc
+            else:
+                start = far_alu[w % m.subcores].acquire(t, 1.0)
+                energy["alu"] += m.e_alu_op * m.simt_width
+                energy["opc"] += m.e_opc
+            last_loc[w] = loc
+            done = start + alu_lat
+            energy["rf"] += m.e_rf * (len(ins.src) + len(ins.dst))
+            for r in ins.dst:
+                rs[r] = loc
+        elif ins.op in (K.LD_GLOBAL, K.ST_GLOBAL):
+            if not is_ponb:
+                # the LSU performs addressing far-bank (§IV-B2): address
+                # registers resident only near-bank cross the TSV first
+                for r in ins.addr:
+                    if rs[r] is Loc.N:
+                        t = max(t, xfer_tsv(t, warp_bytes)) + mv_lat
+                        energy["rf"] += 2 * m.e_rf * m.simt_width
+                        rs[r] = Loc.B
+            stream = program.streams.get(ins.tag, {"stride": 128})
+            coalesced = stream.get("coalesced", True)
+            base = (hash((ins.tag, w)) % (1 << 20)) * m.row_bytes
+            # uncoalesced warp access: lanes hit strided addresses; model
+            # as 8 sector-merged sub-accesses (32 lanes -> 8 x 128B)
+            n_sub = 1 if coalesced else 8
+            sub_stride = stream["stride"] if not coalesced else 0
+            fin = t
+            for sub in range(n_sub):
+                addr = base + it * stream["stride"] * n_sub + sub * sub_stride
+                # address-interleaved mapping: consecutive rows rotate banks
+                bank_idx = (addr // m.row_bytes) % n_banks
+                row = addr // (m.row_bytes * n_banks)
+                hit = rows[bank_idx].access(row)
+                t_bank = t
+                if not hit:
+                    start = bank_act[bank_idx].acquire(
+                        t_bank, m.t_rp + m.t_rcd)
+                    t_bank = start + m.t_rp + m.t_rcd
+                    energy["dram_act"] += m.e_pre_act
+                io = nbu_io[bank_idx // m.banks_per_nbu]
+                start = io.acquire(t_bank, m.t_ccd * bursts * dram_mult)
+                fin = max(fin, start + m.t_ccd * bursts * dram_mult)
+                counters["dram_bytes"] += warp_bytes
+                energy["dram"] += m.e_rd_wr * bursts
+            energy["lsu"] += m.e_lsu_ext
+            if is_ponb:
+                fin = max(fin, xfer_tsv(fin, warp_bytes))
+                done = fin + ld_lat
+            else:
+                # near-bank landing; far-located values cross the TSV
+                # (ld: data down to the far RF; st: data up to the banks)
+                regs = ins.dst or ins.src
+                val_near = all(reg_loc.get(r, Loc.F) in (Loc.N, Loc.B)
+                               for r in regs)
+                fin = max(fin, xfer_tsv(fin, desc_bytes))
+                if not val_near:
+                    fin = max(fin, xfer_tsv(fin, warp_bytes))
+                done = fin + ld_lat
+            energy["rf"] += m.e_rf * m.simt_width
+            for r in ins.dst:
+                rs[r] = Loc.N if not is_ponb else Loc.F
+        elif ins.op in (K.LD_SHARED, K.ST_SHARED):
+            if ins.tag in smem_rmw_tags:
+                t = max(t, last_rmw_done[(w, ins.tag)])
+            start = smem_ports[w % len(smem_ports)].acquire(t, 1.0)
+            done = start + 2.0
+            energy["smem"] += m.e_smem * m.simt_width
+            if ins.op is K.ST_SHARED:
+                last_rmw_done[(w, ins.tag)] = done
+            for r in ins.dst:
+                rs[r] = Loc.F if (is_ponb or not cfg.smem_near) else Loc.N
+        elif ins.op is K.JUMP:
+            start = far_alu[w % m.subcores].acquire(t, 1.0)
+            done = start + 1.0
+        else:
+            raise ValueError(ins.op)
+        for r in ins.dst:
+            rr[r] = done
+        return t
+
+    engine = _WarpEngine(program, cfg, step)
+    cycles = engine.run()
+    cycles = max(cycles, tsv.free_at, *(r.free_at for r in nbu_io))
+    hits = sum(r.hits for r in rows)
+    misses = sum(r.misses for r in rows)
+    return SimResult(program.name, cycles, counters["instr"],
+                     counters["dram_bytes"], counters["tsv_bytes"],
+                     hits, misses, dict(energy))
+
+
+def _simulate_gpu(program: Program, cfg: SimConfig) -> SimResult:
+    g = mach.GPU
+    cfg = SimConfig(**{**cfg.__dict__, "warps": max(cfg.warps, 32)})
+    hbm = _Resource()          # per-SM share of HBM bandwidth
+    alu = _Resource()
+    smem = _Resource()
+    per_sm_gbps = g.hbm_gbps * g.l2_amplification / g.sms
+    cyc_per_byte = g.f_ghz / per_sm_gbps
+    warp_bytes = 32 * 4
+    energy = collections.Counter()
+    counters = {"dram_bytes": 0.0, "instr": 0}
+
+    reg_ready = [collections.defaultdict(float) for _ in range(cfg.warps)]
+    smem_rmw_tags = {i.tag for i in program.body if i.op is K.ST_SHARED} & \
+        {i.tag for i in program.body if i.op is K.LD_SHARED}
+    last_rmw_done: dict = collections.defaultdict(float)
+
+    full_body = program.full_body()
+
+    def step(w: int, it: int, idx: int, now: float) -> float:
+        ins = full_body[idx]
+        counters["instr"] += 1
+        rr = reg_ready[w]
+        dep = max((rr[r] for r in (*ins.src, *ins.addr)), default=0.0)
+        t = max(now, dep)
+        if ins.op in (K.ALU, K.ALU_INT, K.SFU, K.JUMP):
+            start = alu.acquire(t, 0.5)   # 64 lanes: warp at half-rate
+            done = start + 4.0
+            energy["alu"] += g.e_alu_op * 32
+            energy["rf"] += g.e_rf * (len(ins.src) + len(ins.dst))
+        elif ins.op in (K.LD_GLOBAL, K.ST_GLOBAL):
+            stream = program.streams.get(ins.tag, {"stride": 128})
+            nbytes = warp_bytes if stream.get("coalesced", True) \
+                else 32 * 32  # each lane pulls its own 32B sector
+            start = hbm.acquire(t, nbytes * cyc_per_byte)
+            done = start + g.dram_latency_cycles
+            counters["dram_bytes"] += nbytes
+            energy["dram"] += g.e_dram_32b * (nbytes / 32)
+            energy["move"] += g.e_onchip_move_32b * (nbytes / 32)
+            energy["rf"] += g.e_rf * 32
+        elif ins.op in (K.LD_SHARED, K.ST_SHARED):
+            if ins.tag in smem_rmw_tags:
+                t = max(t, last_rmw_done[(w, ins.tag)])
+            start = smem.acquire(t, 1.0)
+            done = start + 2.0
+            energy["smem"] += g.e_smem * 32
+            if ins.op is K.ST_SHARED:
+                last_rmw_done[(w, ins.tag)] = done
+        else:
+            raise ValueError(ins.op)
+        for r in ins.dst:
+            rr[r] = done
+        return t
+
+    engine = _WarpEngine(program, cfg, step)
+    cycles = max(engine.run(), hbm.free_at)
+    return SimResult(program.name, cycles, counters["instr"],
+                     counters["dram_bytes"], 0.0, 0, 0, dict(energy))
+
+
+def simulate(program: Program, cfg: SimConfig) -> SimResult:
+    if cfg.machine == "gpu":
+        return _simulate_gpu(program, cfg)
+    return _simulate_mpu(program, cfg)
+
+
+def end_to_end_time(result: SimResult, cfg: SimConfig,
+                    total_work_iters: int = 1 << 22) -> float:
+    """Scale one simulated core/SM to the full machine (seconds).
+
+    Workloads are data-parallel: t = sim_cycles / f * (total / simulated)
+    / units, with simulated work = cfg warp iterations."""
+    units = {"mpu": mach.MPU.processors * mach.MPU.cores,
+             "ponb": mach.MPU.processors * mach.MPU.cores,
+             "gpu": mach.GPU.sms}[cfg.machine]
+    f_hz = {"mpu": mach.MPU.f_core_ghz, "ponb": mach.MPU.f_core_ghz,
+            "gpu": mach.GPU.f_ghz}[cfg.machine] * 1e9
+    return result.cycles / f_hz * (total_work_iters / units)

@@ -1,0 +1,351 @@
+"""The paper's Table-I benchmark suite as SIMT register programs + JAX fns.
+
+Each workload provides:
+  * ``program()``  — a PTX-like ``Program`` (one warp-iteration of the hot
+    loop) with realistic address/value register chains.  Consumed by
+    Algorithm 1 (Fig. 14/15) and the event-driven simulator (Figs. 8-13).
+  * ``jax_fn()``   — a JAX implementation of the same computation, used by
+    the offload engine demo/benchmarks (the deployable analogue).
+
+Register naming: %rN integer/address, %fN fp values, %pN predicates.
+Loop bookkeeping (counter increment + bound compare + branch) is included
+in every program — these are the far-bank control chains of §V-B.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mpu_suite import TABLE_I, WorkloadConfig
+from repro.core.isa import Instr, OpKind, Program
+
+I = Instr
+K = OpKind
+
+
+def _loop(ctr: str = "%r_i", bound: str = "%r_n", pred: str = "%p0"):
+    """Loop bookkeeping: i += step; p = i < n; branch p."""
+    return [
+        I(K.ALU_INT, (ctr,), (ctr,)),              # i += num_threads
+        I(K.ALU_INT, (pred,), (ctr, bound)),       # setp.lt
+        I(K.JUMP, (), (pred,)),
+    ]
+
+
+def _addr(dst: str, srcs=("%r_i",), n_ops: int = 1):
+    """Address chain: dst = base + f(srcs) — n_ops int instructions."""
+    out = []
+    prev = srcs
+    for j in range(n_ops):
+        name = dst if j == n_ops - 1 else f"{dst}_t{j}"
+        out.append(I(K.ALU_INT, (name,), tuple(prev)))
+        prev = (name,)
+    return out
+
+
+def axpy_program() -> Program:
+    body = [
+        *_addr("%r_ax", n_ops=2),
+        *_addr("%r_ay", n_ops=1),
+        I(K.LD_GLOBAL, ("%f_x",), (), addr=("%r_ax",), tag="x"),
+        I(K.LD_GLOBAL, ("%f_y",), (), addr=("%r_ay",), tag="y"),
+        I(K.ALU, ("%f_o",), ("%f_x", "%f_y")),       # fma with scalar a
+        I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_ay",), tag="y"),
+        *_loop(),
+    ]
+    return Program("AXPY", body, warp_iters=2048,
+                   streams={"x": {"stride": 128}, "y": {"stride": 128}})
+
+
+def gemv_program() -> Program:
+    body = [
+        *_addr("%r_aa", n_ops=2),
+        *_addr("%r_sx", n_ops=1),
+        I(K.LD_GLOBAL, ("%f_a",), (), addr=("%r_aa",), tag="A"),
+        I(K.LD_SHARED, ("%f_x",), (), addr=("%r_sx",), tag="xs"),
+        I(K.ALU, ("%f_acc",), ("%f_a", "%f_x", "%f_acc")),
+        *_loop(),
+    ]
+    return Program(
+        "GEMV", body, warp_iters=2048,
+        streams={"A": {"stride": 128}, "y": {"stride": 128}},
+        epilogue=[
+            *_addr("%r_ay", n_ops=1),
+            I(K.ST_GLOBAL, (), ("%f_acc",), addr=("%r_ay",), tag="y"),
+        ],
+        epilogue_every=64,
+    )
+
+
+def blur_program() -> Program:
+    taps = []
+    for t in range(9):
+        taps += [
+            I(K.LD_SHARED, (f"%f_in{t}",), (), addr=("%r_sa",), tag="tile"),
+            I(K.ALU, ("%f_acc",), (f"%f_in{t}", "%f_acc")),
+        ]
+    body = [
+        *_addr("%r_ai", n_ops=2),
+        *_addr("%r_sa", n_ops=1),
+        I(K.LD_GLOBAL, ("%f_px",), (), addr=("%r_ai",), tag="in"),
+        I(K.ST_SHARED, (), ("%f_px",), addr=("%r_sa",), tag="tile"),
+        *taps,
+        I(K.ALU, ("%f_out",), ("%f_acc",)),          # normalize 1/9
+        *_addr("%r_ao", n_ops=1),
+        I(K.ST_GLOBAL, (), ("%f_out",), addr=("%r_ao",), tag="out"),
+        *_loop(),
+    ]
+    return Program("BLUR", body, warp_iters=1024,
+                   streams={"in": {"stride": 128}, "out": {"stride": 128}})
+
+
+def conv_program() -> Program:
+    taps = []
+    for t in range(9):
+        taps += [
+            I(K.LD_SHARED, (f"%f_i{t}",), (), addr=("%r_sa",), tag="tile"),
+            I(K.LD_SHARED, (f"%f_w{t}",), (), addr=("%r_sw",), tag="wts"),
+            I(K.ALU, ("%f_acc",), (f"%f_i{t}", f"%f_w{t}", "%f_acc")),
+        ]
+    body = [
+        *_addr("%r_ai", n_ops=2),
+        *_addr("%r_sa", n_ops=1),
+        *_addr("%r_sw", n_ops=1),
+        I(K.LD_GLOBAL, ("%f_px",), (), addr=("%r_ai",), tag="in"),
+        I(K.ST_SHARED, (), ("%f_px",), addr=("%r_sa",), tag="tile"),
+        *taps,
+        *_addr("%r_ao", n_ops=1),
+        I(K.ST_GLOBAL, (), ("%f_acc",), addr=("%r_ao",), tag="out"),
+        *_loop(),
+    ]
+    return Program("CONV", body, warp_iters=1024,
+                   streams={"in": {"stride": 128}, "out": {"stride": 128}})
+
+
+def hist_program() -> Program:
+    body = [
+        *_addr("%r_ai", n_ops=2),
+        I(K.LD_GLOBAL, ("%f_v",), (), addr=("%r_ai",), tag="data"),
+        I(K.ALU_INT, ("%r_bin",), ("%f_v",)),        # cvt+scale: value->bin
+        I(K.ALU_INT, ("%r_sb",), ("%r_bin",)),       # smem address of bin
+        I(K.LD_SHARED, ("%f_c",), (), addr=("%r_sb",), tag="bins"),
+        I(K.ALU, ("%f_c1",), ("%f_c",)),             # +1
+        I(K.ST_SHARED, (), ("%f_c1",), addr=("%r_sb",), tag="bins"),
+        *_loop(),
+    ]
+    return Program("HIST", body, warp_iters=2048,
+                   streams={"data": {"stride": 128}})
+
+
+def kmeans_program() -> Program:
+    dims, ks = 4, 4
+    body = [*_addr("%r_ap", n_ops=2)]
+    for d in range(dims):
+        body.append(I(K.LD_GLOBAL, (f"%f_p{d}",), (), addr=("%r_ap",),
+                      tag="pts"))
+    for c in range(ks):
+        body.append(I(K.ALU_INT, (f"%r_sc{c}",), ("%r_i",)))
+        for d in range(dims):
+            body += [
+                I(K.LD_SHARED, (f"%f_c{c}_{d}",), (), addr=(f"%r_sc{c}",),
+                  tag="cent"),
+                I(K.ALU, (f"%f_d{c}",), (f"%f_p{d}", f"%f_c{c}_{d}",
+                                         f"%f_d{c}")),
+            ]
+        body.append(I(K.ALU_INT, ("%r_best",), (f"%f_d{c}", "%r_best")))
+    body += [
+        *_addr("%r_al", n_ops=1),
+        I(K.ST_GLOBAL, (), ("%r_best",), addr=("%r_al",), tag="labels"),
+        *_loop(),
+    ]
+    return Program("KMEANS", body, warp_iters=512,
+                   streams={"pts": {"stride": 128 * dims},
+                            "labels": {"stride": 128}})
+
+
+def knn_program() -> Program:
+    body = [
+        *_addr("%r_ar", n_ops=2),
+        I(K.LD_GLOBAL, ("%f_rx",), (), addr=("%r_ar",), tag="refs"),
+        I(K.LD_GLOBAL, ("%f_ry",), (), addr=("%r_ar",), tag="refs"),
+        I(K.ALU, ("%f_dx",), ("%f_rx",)),
+        I(K.ALU, ("%f_dy",), ("%f_ry",)),
+        I(K.ALU, ("%f_d",), ("%f_dx", "%f_dy")),
+        I(K.ST_GLOBAL, (), ("%f_d",), addr=("%r_ar",), tag="dist"),
+        *_loop(),
+    ]
+    return Program("KNN", body, warp_iters=2048,
+                   streams={"refs": {"stride": 256}, "dist": {"stride": 128}})
+
+
+def ttrans_program() -> Program:
+    # cuBLAS-style tiled transpose: coalesced loads into an smem tile,
+    # transposed smem reads, coalesced stores.  Complex index arithmetic
+    # (the paper: "complicated control flow and data-dependency hinder
+    # memory parallelism") shows up as long address chains.
+    body = [
+        *_addr("%r_ai", n_ops=3),                    # tile row/col indexing
+        I(K.LD_GLOBAL, ("%f_v",), (), addr=("%r_ai",), tag="in"),
+        *_addr("%r_st", n_ops=2),
+        I(K.ST_SHARED, (), ("%f_v",), addr=("%r_st",), tag="tile"),
+        *_addr("%r_sl", n_ops=2),
+        I(K.LD_SHARED, ("%f_t",), (), addr=("%r_sl",), tag="tile"),
+        *_addr("%r_ao", n_ops=3),
+        I(K.ST_GLOBAL, (), ("%f_t",), addr=("%r_ao",), tag="out"),
+        *_loop(),
+    ]
+    return Program("TTRANS", body, warp_iters=2048,
+                   streams={"in": {"stride": 512},    # tile-row jumps
+                            "out": {"stride": 512}})
+
+
+def maxp_program() -> Program:
+    body = [
+        *_addr("%r_a0", n_ops=2),
+        *_addr("%r_a1", n_ops=1),
+        I(K.LD_GLOBAL, ("%f_0",), (), addr=("%r_a0",), tag="r0"),
+        I(K.LD_GLOBAL, ("%f_1",), (), addr=("%r_a0",), tag="r0"),
+        I(K.LD_GLOBAL, ("%f_2",), (), addr=("%r_a1",), tag="r1"),
+        I(K.LD_GLOBAL, ("%f_3",), (), addr=("%r_a1",), tag="r1"),
+        I(K.ALU, ("%f_m0",), ("%f_0", "%f_1")),
+        I(K.ALU, ("%f_m1",), ("%f_2", "%f_3")),
+        I(K.ALU, ("%f_m",), ("%f_m0", "%f_m1")),
+        *_addr("%r_ao", n_ops=1),
+        I(K.ST_GLOBAL, (), ("%f_m",), addr=("%r_ao",), tag="out"),
+        *_loop(),
+    ]
+    return Program("MAXP", body, warp_iters=1024,
+                   streams={"r0": {"stride": 256}, "r1": {"stride": 256},
+                            "out": {"stride": 128}})
+
+
+def nw_program() -> Program:
+    body = [
+        *_addr("%r_sq", n_ops=2),
+        I(K.LD_GLOBAL, ("%r_ch",), (), addr=("%r_sq",), tag="seq"),
+        I(K.LD_SHARED, ("%f_up",), (), addr=("%r_sq",), tag="cells"),
+        I(K.LD_SHARED, ("%f_lf",), (), addr=("%r_sq",), tag="cells"),
+        I(K.LD_SHARED, ("%f_dg",), (), addr=("%r_sq",), tag="cells"),
+        I(K.ALU, ("%f_s1",), ("%f_up", "%f_cell")),  # wavefront loop-carry
+        I(K.ALU, ("%f_s2",), ("%f_lf",)),
+        I(K.ALU, ("%f_s3",), ("%f_dg", "%r_ch")),
+        I(K.ALU, ("%f_cell",), ("%f_s1", "%f_s2", "%f_s3")),
+        I(K.ST_SHARED, (), ("%f_cell",), addr=("%r_sq",), tag="cells"),
+        I(K.ST_GLOBAL, (), ("%f_cell",), addr=("%r_sq",), tag="score"),
+        *_loop(),
+    ]
+    # wavefront: the cell value is loop-carried (dependency-limited)
+    return Program("NW", body, warp_iters=1024,
+                   streams={"seq": {"stride": 32}, "score": {"stride": 128}},
+                   )
+
+
+def upsamp_program() -> Program:
+    body = [
+        *_addr("%r_ai", n_ops=2),
+        I(K.LD_GLOBAL, ("%f_v",), (), addr=("%r_ai",), tag="in"),
+        I(K.ALU, ("%f_o",), ("%f_v",)),
+        *_addr("%r_ao", n_ops=1),
+        I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_ao",), tag="out"),
+        I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_ao",), tag="out"),
+        I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_ao",), tag="out"),
+        I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_ao",), tag="out"),
+        *_loop(),
+    ]
+    return Program("UPSAMP", body, warp_iters=1024,
+                   streams={"in": {"stride": 128}, "out": {"stride": 512}})
+
+
+def pr_program() -> Program:
+    body = [
+        *_addr("%r_ai", n_ops=2),
+        I(K.LD_GLOBAL, ("%f_v",), (), addr=("%r_ai",), tag="data"),
+        I(K.ALU, ("%f_acc",), ("%f_v", "%f_acc")),
+        *_loop(),
+    ]
+    return Program(
+        "PR", body, warp_iters=2048,
+        streams={"data": {"stride": 128}},
+        epilogue=[
+            # block-level tree reduction through near-bank shared memory
+            I(K.ST_SHARED, (), ("%f_acc",), addr=("%r_i",), tag="tree"),
+            I(K.LD_SHARED, ("%f_o",), (), addr=("%r_i",), tag="tree"),
+            I(K.ALU, ("%f_o",), ("%f_o", "%f_acc")),
+            I(K.ST_GLOBAL, (), ("%f_o",), addr=("%r_i",), tag="out"),
+        ],
+        epilogue_every=64,
+    )
+
+
+PROGRAMS: dict[str, Callable[[], Program]] = {
+    "AXPY": axpy_program, "GEMV": gemv_program, "BLUR": blur_program,
+    "CONV": conv_program, "HIST": hist_program, "KMEANS": kmeans_program,
+    "KNN": knn_program, "TTRANS": ttrans_program, "MAXP": maxp_program,
+    "NW": nw_program, "UPSAMP": upsamp_program, "PR": pr_program,
+}
+
+
+# ---------------------------------------------------------------------------
+# JAX implementations (the deployable analogues; used by the offload demo)
+# ---------------------------------------------------------------------------
+
+def jax_axpy(a, x, y):
+    return a * x + y
+
+
+def jax_gemv(a_mat, x):
+    return a_mat @ x
+
+
+def jax_blur(img):
+    """3x3 box blur, [H, W]."""
+    k = jnp.ones((3, 3), img.dtype) / 9.0
+    return jax.scipy.signal.convolve2d(img, k, mode="same")
+
+
+def jax_conv(img, w):
+    """3x3 conv, NHWC single-channel-group."""
+    return jax.lax.conv_general_dilated(
+        img, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def jax_hist(data, bins: int = 256):
+    idx = jnp.clip((data * bins).astype(jnp.int32), 0, bins - 1)
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+
+
+def jax_kmeans_assign(pts, cents):
+    d = jnp.sum((pts[:, None] - cents[None]) ** 2, axis=-1)
+    return jnp.argmin(d, axis=-1)
+
+
+def jax_knn_dists(query, refs):
+    return jnp.sum((refs - query[None]) ** 2, axis=-1)
+
+
+def jax_ttrans(x):
+    return x.T
+
+
+def jax_maxp(x):
+    h, w = x.shape
+    return jnp.max(x.reshape(h // 2, 2, w // 2, 2), axis=(1, 3))
+
+
+def jax_nw_band(prev, scores):
+    return jnp.maximum(prev + scores, 0.0)
+
+
+def jax_upsamp(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)
+
+
+def jax_pr(x):
+    return jnp.sum(x)
+
+
+def workload_configs() -> tuple[WorkloadConfig, ...]:
+    return TABLE_I

@@ -1,0 +1,30 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention_bwd import (
+    flash_attention_bwd,
+    flash_attention_diff,
+)
+from repro.kernels.ops import (
+    adamw_update,
+    decode_attention,
+    flash_attention,
+    fused_elementwise,
+    rmsnorm,
+    rotary,
+    ssd_scan,
+    wkv6,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention_bwd",
+    "flash_attention_diff",
+    "adamw_update",
+    "decode_attention",
+    "flash_attention",
+    "fused_elementwise",
+    "rmsnorm",
+    "rotary",
+    "ssd_scan",
+    "wkv6",
+]

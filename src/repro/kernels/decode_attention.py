@@ -1,0 +1,113 @@
+"""Split-KV decode attention (flash-decoding) as a Pallas TPU kernel.
+
+The canonical near-bank op: one query token streams the whole KV cache
+(arithmetic intensity ~1 FLOP/byte), so performance == HBM bandwidth.
+The kernel tiles the cache over the grid's sequential axis; the partial
+(acc, m, l) triple lives in VMEM scratch — exactly MPU's near-bank
+register file holding partial results while the "bank" (cache block)
+streams past.  ``lengths`` rides in SMEM via scalar prefetch, mirroring
+MPU's far-bank address path (LSU) vs near-bank value path split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, kv_block: int, scale: float):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk_blocks = pl.num_programs(2)
+    length = lengths_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_start = ki * kv_block
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # [G, H]
+        k = k_ref[0, 0].astype(jnp.float32)      # [Kb, H]
+        v = v_ref[0, 0].astype(jnp.float32)      # [Kb, H]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, Kb]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,        # [B, NQ, H]
+    k_cache: jnp.ndarray,  # [B, T, NK, H]
+    v_cache: jnp.ndarray,  # [B, T, NK, H]
+    lengths: jnp.ndarray,  # [B] int32
+    *,
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, nq, h = q.shape
+    t, nk = k_cache.shape[1], k_cache.shape[2]
+    g = nq // nk
+    kv_block = min(kv_block, t)
+    t_pad = (-t) % kv_block
+    kp = jnp.pad(k_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    st = t + t_pad
+    qr = q.reshape(b, nk, g, h)
+    kr = kp.transpose(0, 2, 1, 3)  # [B, NK, T, H]
+    vr = vp.transpose(0, 2, 1, 3)
+    grid = (b, nk, st // kv_block)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, kv_block=kv_block,
+                          scale=1.0 / (h ** 0.5)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, h), lambda bb, kh, ki, L: (bb, kh, 0, 0)),
+                pl.BlockSpec((1, 1, kv_block, h),
+                             lambda bb, kh, ki, L: (bb, kh, ki, 0)),
+                pl.BlockSpec((1, 1, kv_block, h),
+                             lambda bb, kh, ki, L: (bb, kh, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, h),
+                                   lambda bb, kh, ki, L: (bb, kh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, h), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nk, g, h), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(b, nq, h)

@@ -1,0 +1,91 @@
+"""Generic fused-elementwise Pallas kernel — the offload engine's target.
+
+This is the paper's instruction-offloading mechanism made concrete on
+TPU: ``repro.core.offload`` extracts a maximal near-bank subgraph (a
+chain/DAG of elementwise "value" instructions, per the Algorithm-1
+locator) and executes it here as ONE pass over HBM.  Far-bank execution
+(plain XLA, un-fused) would round-trip HBM once per instruction; the
+near-bank version reads each operand once, keeps every intermediate in
+VMEM (the near-bank register file), and writes each output once.
+
+Operands come in two flavors, mirroring MPU's register classes:
+  * bulk   — full [R, C] tensors, tiled over the grid (near-bank values)
+  * param  — [C] vectors or scalars, broadcast to every block (the
+             equivalent of far-bank registers moved once over the TSVs)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ew_kernel(*refs, fn: Callable, n_bulk: int, n_param: int, n_out: int):
+    ins = refs[: n_bulk + n_param]
+    outs = refs[n_bulk + n_param:]
+    vals = [r[...] for r in ins]
+    res = fn(*vals)
+    if not isinstance(res, (tuple, list)):
+        res = (res,)
+    for o_ref, r in zip(outs, res):
+        o_ref[...] = r.astype(o_ref.dtype)
+
+
+def fused_elementwise(
+    fn: Callable,
+    bulk: Sequence[jnp.ndarray],
+    params: Sequence[jnp.ndarray] = (),
+    *,
+    out_dtypes: Sequence | None = None,
+    n_outputs: int = 1,
+    rows_block: int = 512,
+    interpret: bool = False,
+):
+    """Apply ``fn(*bulk_blocks, *param_blocks) -> array | tuple`` in one
+    HBM pass.  All ``bulk`` arrays must share one shape [..., C]; ``params``
+    are rank-1 [C] or scalars (reshaped to [1] for SMEM-friendliness)."""
+    assert bulk, "need at least one bulk operand"
+    shape = bulk[0].shape
+    c = shape[-1] if len(shape) > 1 else 1
+    rows = bulk[0].size // c
+    for a in bulk:
+        assert a.shape == shape, "bulk operands must share a shape"
+    b2 = [a.reshape(rows, c) for a in bulk]
+    p2 = [jnp.asarray(p).reshape(-1) for p in params]
+
+    rows_block = min(rows_block, rows)
+    pad = (-rows) % rows_block
+    if pad:
+        b2 = [jnp.pad(a, ((0, pad), (0, 0))) for a in b2]
+    grid = ((rows + pad) // rows_block,)
+
+    if out_dtypes is None:
+        out_dtypes = [bulk[0].dtype] * n_outputs
+    out_shape = [jax.ShapeDtypeStruct((rows + pad, c), dt) for dt in out_dtypes]
+
+    def wrapped(*blocks):
+        bulk_blocks = blocks[: len(b2)]
+        param_blocks = [
+            p if p.shape[0] == c else p[0] for p in blocks[len(b2):]
+        ]
+        return fn(*bulk_blocks, *param_blocks)
+
+    outs = pl.pallas_call(
+        functools.partial(_ew_kernel, fn=wrapped, n_bulk=len(b2),
+                          n_param=len(p2), n_out=n_outputs),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_block, c), lambda r: (r, 0))
+                  for _ in b2]
+                 + [pl.BlockSpec((p.shape[0],), lambda r: (0,)) for p in p2],
+        out_specs=[pl.BlockSpec((rows_block, c), lambda r: (r, 0))
+                   for _ in out_shape],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*b2, *p2)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    result = tuple(o[:rows].reshape(shape) for o in outs)
+    return result[0] if n_outputs == 1 else result

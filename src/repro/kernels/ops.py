@@ -1,0 +1,109 @@
+"""Jit'd dispatch wrappers for every kernel.
+
+``impl`` resolution: "pallas" (TPU target), "interpret" (Pallas kernel
+body executed on CPU — used by tests to validate kernels against the
+ref.py oracles), "ref" (pure-jnp fallback; what the dry-run lowers, so
+compiled HLO never contains Mosaic custom-calls the CPU backend cannot
+build).  "auto" picks pallas on TPU and ref elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.adamw_update import adamw_update as _adamw_pallas
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.fused_elementwise import fused_elementwise as _fused_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
+from repro.kernels.rotary import rotary as _rotary_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
+
+Impl = Literal["auto", "pallas", "interpret", "ref"]
+
+
+@functools.cache
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: Impl) -> str:
+    return _default_impl() if impl == "auto" else impl
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, impl: Impl = "auto",
+                    **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=(impl == "interpret"), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, impl: Impl = "auto",
+                     **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_decode_attention(q, k_cache, v_cache, lengths)
+    return _decode_pallas(q, k_cache, v_cache, lengths,
+                          interpret=(impl == "interpret"), **kw)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_rmsnorm(x, scale, eps)
+    return _rmsnorm_pallas(x, scale, eps=eps,
+                           interpret=(impl == "interpret"), **kw)
+
+
+def rotary(x, positions, *, theta: float = 10000.0, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_rotary(x, positions, theta)
+    return _rotary_pallas(x, positions, theta=theta,
+                          interpret=(impl == "interpret"), **kw)
+
+
+def ssd_scan(x, logd, dt, bmat, cmat, *, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        y, _ = _ref.ref_ssd_scan(x, logd, dt, bmat, cmat)
+        return y
+    return _ssd_pallas(x, logd, dt, bmat, cmat,
+                       interpret=(impl == "interpret"), **kw)
+
+
+def wkv6(r, k, v, w, u, *, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        y, _ = _ref.ref_wkv6(r, k, v, w, u)
+        return y
+    return _wkv6_pallas(r, k, v, w, u, interpret=(impl == "interpret"), **kw)
+
+
+def adamw_update(p, g, m, v, hyper, *, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        lr, b1, b2, eps, wd, bc1, bc2 = (hyper[i] for i in range(7))
+        pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) + wd * pf
+        return (pf - lr * upd).astype(p.dtype), m_new, v_new
+    return _adamw_pallas(p, g, m, v, hyper,
+                         interpret=(impl == "interpret"), **kw)
+
+
+def fused_elementwise(fn, bulk, params=(), *, impl: Impl = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        full_params = [jnp.asarray(p) for p in params]
+        return fn(*bulk, *full_params)
+    return _fused_pallas(fn, bulk, params,
+                         interpret=(impl == "interpret"), **kw)

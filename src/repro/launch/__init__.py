@@ -1,0 +1,13 @@
+# NOTE: repro.launch.dryrun intentionally NOT imported here — importing it
+# sets XLA_FLAGS (512 host devices) which must not leak into tests/benches.
+from repro.launch.mesh import (
+    make_local_mesh,
+    make_mesh_from_config,
+    make_production_mesh,
+    mesh_config,
+)
+
+__all__ = [
+    "make_local_mesh", "make_mesh_from_config", "make_production_mesh",
+    "mesh_config",
+]

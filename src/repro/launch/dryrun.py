@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. builds the step function the shape cell exercises
+     (train_4k -> train_step; prefill_32k -> prefill; decode_* -> decode
+     serve_step) with in/out shardings from repro.sharding.specs;
+  3. ``.lower()`` with ShapeDtypeStruct inputs (zero allocation),
+     ``.compile()`` — success proves the distribution config is coherent;
+  4. records memory_analysis / cost_analysis / jaxpr cost-model terms /
+     HLO collective bytes into experiments/dryrun/<cell>.json for
+     EXPERIMENTS.md (§Dry-run, §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--all]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_IDS,
+    TrainConfig,
+    get_config,
+    shapes_for,
+)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.models import build_model
+from repro.roofline.analysis import (
+    Roofline,
+    analytic_bytes,
+    collective_bytes,
+    jaxpr_cost,
+    model_flops,
+)
+from repro.sharding import specs as sh
+from repro.sharding.constraints import activation_sharding
+from repro.train.step import TrainState, make_train_step
+from repro.optim import init_state
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _state_shapes(model, rng):
+    params = jax.eval_shape(model.init, rng)
+    opt = jax.eval_shape(init_state, params)
+    return TrainState(params, opt)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_axes,
+               tcfg: TrainConfig):
+    """Returns (jitted_fn, example_args (abstract))."""
+    model = build_model(cfg)
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    mesh_shape = tuple(mesh.devices.shape)
+    sizes = sh.mesh_sizes(mesh_axes, mesh_shape)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    b = shape.global_batch
+    bvec = sh.sanitize_spec(P(fsdp), (b,), sizes)
+    bmat = sh.sanitize_spec(P(fsdp, None), (b, 1), sizes)
+
+    if shape.kind == "train":
+        state_shape = _state_shapes(model, rng)
+        pspec = sh.param_spec_tree(cfg, state_shape.params, mesh_axes, mesh_shape)
+        # optimizer moments mirror the (fully sharded) parameter specs
+        state_spec = TrainState(
+            pspec, type(state_shape.opt)(P(), pspec, pspec))
+        batch = inp.batch_specs(cfg, shape)
+        bspec = sh.batch_spec(cfg, mesh_axes, "train")
+        bspec = {k: bspec.get(k, P()) for k in batch}
+        train_step = make_train_step(model, tcfg)
+        fn = jax.jit(
+            train_step,
+            in_shardings=(sh.to_shardings(mesh, state_spec),
+                          sh.to_shardings(mesh, bspec)),
+            out_shardings=(sh.to_shardings(mesh, state_spec),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0,),
+        )
+        args = (state_shape, batch)
+        return fn, args
+
+    params_shape = jax.eval_shape(model.init, rng)
+    # serving runs bf16 weights, replicated over data, TP over model
+    # (no per-step ZeRO gathers — SPerf iteration 3)
+    params_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+        params_shape)
+    pspec = sh.param_spec_tree(cfg, params_shape, mesh_axes, mesh_shape,
+                               serve=True)
+
+    if shape.kind == "prefill":
+        batch = inp.prefill_specs(cfg, shape)
+        bspec = sh.batch_spec(cfg, mesh_axes, "train")
+        bspec = {k: bspec.get(k, P()) for k in batch}
+        max_len = shape.seq_len + (cfg.frontend_len
+                                   if cfg.frontend != "none"
+                                   and cfg.kind != "encoder_decoder" else 0)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        cache_shape = jax.eval_shape(prefill_fn, params_shape, batch)[1]
+        cspec = sh.cache_spec_tree(cfg, cache_shape, mesh_axes, mesh_shape)
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(sh.to_shardings(mesh, pspec),
+                          sh.to_shardings(mesh, bspec)),
+            out_shardings=(NamedSharding(mesh, bmat),
+                           sh.to_shardings(mesh, cspec)),
+        )
+        return fn, (params_shape, batch)
+
+    # decode: serve_step(params, cache, token, pos)
+    cache_len = shape.seq_len
+    if cfg.frontend != "none" and cfg.kind != "encoder_decoder":
+        cache_len += cfg.frontend_len
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, cache_len))
+    cspec = sh.cache_spec_tree(cfg, cache_shape, mesh_axes, mesh_shape)
+    dspecs = inp.decode_specs(cfg, shape)
+
+    enc_shape = None
+    if cfg.kind == "encoder_decoder":
+        enc_shape = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+
+        def serve_step(params, cache, token, pos, enc_memory):
+            return model.decode_step(params, cache, token, pos, enc_memory)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(sh.to_shardings(mesh, pspec),
+                          sh.to_shardings(mesh, cspec),
+                          NamedSharding(mesh, bvec),
+                          NamedSharding(mesh, bvec),
+                          NamedSharding(
+                              mesh, sh.sanitize_spec(
+                                  P(fsdp, None, None), (b, 1, 1), sizes))),
+            out_shardings=(NamedSharding(mesh, bmat),
+                           sh.to_shardings(mesh, cspec)),
+            donate_argnums=(1,),
+        )
+        return fn, (params_shape, cache_shape, dspecs["token"],
+                    dspecs["pos"], enc_shape)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(sh.to_shardings(mesh, pspec),
+                      sh.to_shardings(mesh, cspec),
+                      NamedSharding(mesh, bvec),
+                      NamedSharding(mesh, bvec)),
+        out_shardings=(NamedSharding(mesh, bmat),
+                       sh.to_shardings(mesh, cspec)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_shape, cache_shape, dspecs["token"], dspecs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = next(s for s in shapes_for(cfg) if s.name == shape_name)
+    mcfg = mesh_config(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tcfg = TrainConfig()
+    t0 = time.time()
+    result: dict = {"arch": arch, "shape": shape_name,
+                    "mesh": list(mcfg.shape), "multi_pod": multi_pod}
+    try:
+        fn, args = build_cell(cfg, shape, mesh, mcfg.axes, tcfg)
+        with mesh, activation_sharding(mesh, mcfg.axes, mcfg.shape):
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        colls = collective_bytes(hlo)
+        result.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "xla_flops_per_module": cost.get("flops", 0.0),
+            "xla_bytes_per_module": cost.get("bytes accessed", 0.0),
+            "collectives": colls,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+        })
+        n_dev = mcfg.num_devices
+        per_dev = (result["memory"]["argument_bytes"]
+                   + result["memory"]["temp_bytes"]) / n_dev
+        result["per_device_bytes"] = per_dev
+        if verbose:
+            print(f"[{arch} | {shape_name} | mesh={mcfg.shape}] COMPILED "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+                  f"args={result['memory']['argument_bytes']/1e9:.1f}GB "
+                  f"temp={result['memory']['temp_bytes']/1e9:.1f}GB "
+                  f"per_dev={per_dev/1e9:.2f}GB")
+            print(f"  collectives: "
+                  f"{ {k: f'{v/1e9:.2f}GB' for k, v in colls.items()} }")
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        result.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[{arch} | {shape_name} | mesh={mcfg.shape}] FAILED: "
+                  f"{result['error']}")
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        tag = "multi" if multi_pod else "single"
+        path = OUT_DIR / f"{arch}__{shape_name}__{tag}.json"
+        path.write_text(json.dumps(result, indent=1, default=str))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in shapes_for(get_config(arch)):
+                cells.append((arch, s.name, False))
+                cells.append((arch, s.name, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape_name, multi in cells:
+        res = run_cell(arch, shape_name, multi_pod=multi)
+        failures += 0 if res.get("ok") else 1
+    print(f"dry-run: {len(cells) - failures}/{len(cells)} cells compiled")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

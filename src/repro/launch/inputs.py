@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step
+function that the shape cell lowers:
+
+    train_*    -> train_step(state, batch)          batch specs here
+    prefill_*  -> prefill(params, batch, max_len)
+    decode_*   -> decode_step(params, cache, token, pos)
+
+[audio]/[vlm] archs get precomputed frontend embeddings per assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        specs["frontend"] = SDS((b, cfg.frontend_len, cfg.d_model),
+                                jnp.bfloat16)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.frontend != "none":
+        specs["frontend"] = SDS((b, cfg.frontend_len, cfg.d_model),
+                                jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "token": SDS((b,), jnp.int32),
+        "pos": SDS((b,), jnp.int32),
+    }
+
+
+def abstract_tree(fn, *args):
+    """jax.eval_shape wrapper returning a ShapeDtypeStruct pytree."""
+    return jax.eval_shape(fn, *args)

@@ -1,0 +1,47 @@
+"""Production serving launcher (decode_32k-style configuration).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --local
+
+``--local`` serves a reduced config on the host device using the same
+Engine/pjit paths; the production path builds the 16x16 mesh with
+serve-mode weights (bf16, replicated over data, TP over model) and the
+sequence-sharded split-KV decode cache (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--local", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch)) if args.local else get_config(
+        args.arch)
+    mesh = make_local_mesh(("data", "model"))
+    with mesh:
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = Engine(cfg, params, slots=4, max_len=128)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rng.integers(0, cfg.vocab_size, size=8),
+                        max_new_tokens=8, rid=i)
+                for i in range(args.requests)]
+        done = engine.generate(reqs)
+        total = sum(len(c.tokens) for c in done.values())
+        print(f"served {len(reqs)} requests / {total} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --shape train_4k [--local] [--steps N]
+
+``--local`` runs on the host's real devices with a 1x1 mesh (the same
+pjit path, CPU-testable).  Without it, the launcher builds the
+production mesh (requires a real multi-chip runtime; on this container
+use repro.launch.dryrun for the 512-device compile-only path).
+
+The loop: sharded state -> jit(train_step) with in/out shardings ->
+data pipeline (host-sharded rows) -> checkpoint manager (atomic,
+elastic restore) -> straggler monitor.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_IDS,
+    TrainConfig,
+    get_config,
+    reduced,
+    shapes_for,
+)
+from repro.configs.base import ShapeConfig
+from repro.ckpt import CheckpointManager, StragglerMonitor
+from repro.data import SyntheticLM, make_data_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamWState, init_state
+from repro.sharding import param_spec_tree, to_shardings
+from repro.sharding.constraints import activation_sharding
+from repro.train.step import TrainState, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--local", action="store_true",
+                    help="1-device mesh with a reduced config (CPU smoke)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = reduced(cfg)
+        mesh = make_local_mesh(("data", "model"))
+        axes, shape_tuple = ("data", "model"), (1, 1)
+        shape = ShapeConfig("local", 128, 4, "train")
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        axes = ("pod", "data", "model") if args.multi_pod else \
+            ("data", "model")
+        shape_tuple = (2, 16, 16) if args.multi_pod else (16, 16)
+        shape = next(s for s in shapes_for(cfg) if s.name == args.shape)
+
+    tcfg = TrainConfig(total_steps=args.steps, checkpoint_every=50,
+                       checkpoint_dir=args.ckpt_dir)
+    model = build_model(cfg)
+    train_step = make_train_step(model, tcfg)
+
+    with mesh, activation_sharding(mesh, axes, shape_tuple):
+        rng = jax.random.PRNGKey(tcfg.seed)
+        params_shape = jax.eval_shape(model.init, rng)
+        pspec = param_spec_tree(cfg, params_shape, axes, shape_tuple)
+        state_sharding = TrainState(
+            to_shardings(mesh, pspec),
+            AdamWState(NamedSharding(mesh, P()),
+                       to_shardings(mesh, pspec),
+                       to_shardings(mesh, pspec)))
+
+        def init_all():
+            params = model.init(rng)
+            return TrainState(params, init_state(params))
+
+        mgr = CheckpointManager(tcfg)
+        state, start = mgr.restore_or_init(init_all)
+        state = jax.device_put(state, state_sharding)
+
+        step_fn = jax.jit(train_step, donate_argnums=(0,))
+        data = SyntheticLM(make_data_config(cfg, shape, tcfg.seed))
+        mon = StragglerMonitor()
+        for step in range(start, tcfg.total_steps):
+            batch = data.batch(step)
+            if cfg.frontend != "none":
+                from repro.models.frontends import synth_frontend_embeddings
+                batch["frontend"] = synth_frontend_embeddings(
+                    jax.random.fold_in(rng, step), cfg,
+                    batch["tokens"].shape[0])
+            mon.start()
+            state, metrics = step_fn(state, batch)
+            slow = mon.stop(step)
+            if step % 10 == 0:
+                print(f"step {step}: loss={float(metrics['loss']):.4f}"
+                      f"{' [straggler]' if slow else ''}")
+            mgr.maybe_save(step, state)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Modality frontend STUBS for [audio]/[vlm] architectures.
+
+Per the assignment, the transformer BACKBONE is what is specified; the
+modality frontend supplies *precomputed* frame/patch embeddings.  These
+stubs (a) define the embedding shapes ``input_specs`` advertises and
+(b) provide a deterministic synthetic embedding generator so the examples
+and smoke tests run end-to-end without audio/image decoders.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int) -> tuple[int, int, int]:
+    """[B, frontend_len, d_model] — what the stub hands the backbone."""
+    assert cfg.frontend != "none"
+    return (batch, cfg.frontend_len, cfg.d_model)
+
+
+def synth_frontend_embeddings(key, cfg: ModelConfig, batch: int,
+                              dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Deterministic stand-in for the audio encoder / InternViT output."""
+    shape = frontend_embed_shape(cfg, batch)
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)

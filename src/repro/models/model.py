@@ -1,0 +1,165 @@
+"""Public model API: build any assigned architecture from its config.
+
+``build_model(cfg)`` returns a ``Model`` with four pure functions:
+
+    init(rng)                                   -> params
+    loss_fn(params, batch)                      -> (loss, metrics)
+    prefill(params, batch, max_len)             -> (last_logits, cache)
+    decode_step(params, cache, token, pos, ...) -> (logits, cache)
+
+Batch layout (all arrays are *global*; sharding is applied by the caller):
+
+    decoder-only:      {tokens [B,S], labels [B,S], mask [B,S]}
+    + frontend (vlm):  {"frontend": [B,F,D]} prefix embeddings
+    enc-dec (audio):   {"frontend": [B,F,D]} encoder input; tokens decode side
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    embed_apply,
+    init_embedding,
+    init_rmsnorm,
+    lm_head_apply,
+    rmsnorm_apply,
+)
+from repro.models.transformer import (
+    Cache,
+    init_stack,
+    init_stack_cache,
+    stack_apply,
+    stack_decode,
+    stack_prefill,
+)
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Params]
+    loss_fn: Callable[..., tuple[jnp.ndarray, dict]]
+    forward: Callable[..., jnp.ndarray]
+    prefill: Callable[..., tuple[jnp.ndarray, Cache]]
+    decode_step: Callable[..., tuple[jnp.ndarray, Cache]]
+    init_cache: Callable[..., Cache]
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = _compute_dtype(cfg)
+    is_encdec = cfg.kind == "encoder_decoder"
+    has_frontend = cfg.frontend != "none"
+
+    # ---------------- init ----------------
+    def init(rng) -> Params:
+        k_emb, k_enc, k_dec = jax.random.split(rng, 3)
+        params: Params = {
+            "embed": init_embedding(
+                k_emb, cfg.vocab_size, cfg.d_model, tie=cfg.tie_embeddings),
+            "final_ln": init_rmsnorm(cfg.d_model),
+            "decoder": init_stack(k_dec, cfg, cross=is_encdec),
+        }
+        if is_encdec:
+            params["encoder"] = init_stack(
+                k_enc, cfg, num_layers=cfg.enc_num_layers,
+                pattern_override=("attention",))
+            params["enc_ln"] = init_rmsnorm(cfg.d_model)
+        return params
+
+    # ---------------- encoder ----------------
+    def encode(params: Params, enc_input: jnp.ndarray) -> jnp.ndarray:
+        """enc_input [B,F,D] (frontend stub embeddings)."""
+        b, f, _ = enc_input.shape
+        positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+        h, _ = stack_apply(
+            params["encoder"], cfg, enc_input.astype(dtype), positions,
+            num_layers=cfg.enc_num_layers, pattern_override=("attention",),
+            causal=False)
+        return rmsnorm_apply(params["enc_ln"], h, cfg.norm_eps)
+
+    # ---------------- full forward (train / prefill body) ----------------
+    def forward(params: Params, batch: dict, *, remat: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Returns (hidden [B,S',D], aux, text_offset).
+
+        S' = S (+ frontend prefix for decoder-prefix frontends)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_apply(params["embed"], tokens, dtype)
+        enc_memory = None
+        offset = 0
+        if is_encdec:
+            enc_memory = encode(params, batch["frontend"].astype(dtype))
+        elif has_frontend:
+            prefix = batch["frontend"].astype(dtype)
+            x = jnp.concatenate([prefix, x], axis=1)
+            offset = prefix.shape[1]
+        s_total = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+        h, aux = stack_apply(params["decoder"], cfg, x, positions,
+                             enc_memory=enc_memory, remat=remat)
+        h = rmsnorm_apply(params["final_ln"], h, cfg.norm_eps)
+        return h, aux, offset
+
+    # ---------------- loss ----------------
+    def loss_fn(params: Params, batch: dict, *, remat: bool = True
+                ) -> tuple[jnp.ndarray, dict]:
+        h, aux, offset = forward(params, batch, remat=remat)
+        h = h[:, offset:]
+        logits = lm_head_apply(params["embed"], h, cfg.vocab_size)
+        loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+        total = loss + aux
+        return total, {"loss": loss, "moe_aux": aux,
+                       "tokens": jnp.asarray(batch["tokens"].size, jnp.float32)}
+
+    # ---------------- serving ----------------
+    def init_cache(batch: int, max_len: int) -> Cache:
+        return init_stack_cache(cfg, batch, max_len, dtype=dtype)
+
+    def prefill(params: Params, batch: dict, max_len: int
+                ) -> tuple[jnp.ndarray, Cache]:
+        """Parallel prefill: one full-sequence pass that computes the last
+        token's logits AND captures the decode cache (KV / SSM / WKV
+        states) — the production prefill dataflow."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_apply(params["embed"], tokens, dtype)
+        enc_memory = None
+        offset = 0
+        if is_encdec:
+            enc_memory = encode(params, batch["frontend"].astype(dtype))
+        elif has_frontend:
+            prefix = batch["frontend"].astype(dtype)
+            x = jnp.concatenate([prefix, x], axis=1)
+            offset = prefix.shape[1]
+        s_total = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+        h, cache = stack_prefill(params["decoder"], cfg, x, positions,
+                                 max_len, enc_memory=enc_memory,
+                                 cache_dtype=dtype)
+        h_last = rmsnorm_apply(params["final_ln"], h[:, -1:], cfg.norm_eps)
+        logits = lm_head_apply(params["embed"], h_last[:, 0], cfg.vocab_size)
+        return logits, cache
+
+    def decode_step(params: Params, cache: Cache, token: jnp.ndarray,
+                    pos: jnp.ndarray, enc_memory: jnp.ndarray | None = None
+                    ) -> tuple[jnp.ndarray, Cache]:
+        """token [B] int32; pos [B] absolute positions."""
+        x = embed_apply(params["embed"], token[:, None], dtype)
+        h, cache = stack_decode(params["decoder"], cfg, x, cache, pos,
+                                enc_memory=enc_memory)
+        h = rmsnorm_apply(params["final_ln"], h, cfg.norm_eps)
+        logits = lm_head_apply(params["embed"], h[:, 0], cfg.vocab_size)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, init_cache)

@@ -1,0 +1,160 @@
+"""Mixture-of-experts FFN with sort-based (dropless-style) dispatch.
+
+Routing works on *grouped tokens* ``[G, N, d]`` (train/prefill: G = batch
+rows, N = seq; decode: G = 1, N = batch).  Dispatch builds per-expert
+buffers ``[G, E, C, d]`` via argsort + gather — no [tokens, E, C] one-hot
+tensor is ever materialized, so the dispatch scales to 64-expert configs.
+
+Sharding (see repro.sharding.specs): expert weights are sharded over the
+``model`` axis on the expert dim when E % model == 0 (expert parallelism;
+the dispatch reshard lowers to an all-to-all), otherwise on d_ff
+(tensor parallelism within every expert).
+
+The router epilogue (softmax → top-k → normalize → scatter of combine
+weights) is a memory-bound value chain — a near-bank offload target
+(see repro.core.offload).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import Params, activation, dense_init
+from repro.sharding.constraints import shard_act
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, dtype),
+        "gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, f, d)) / jnp.sqrt(f)).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(n_tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(moe.top_k, min(n_tokens, max(1, c)))
+
+
+def route(logits: jnp.ndarray, moe: MoEConfig):
+    """logits [..., E] -> (weights [..., k], experts [..., k], aux_loss)."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(gates, moe.top_k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * mean(fraction routed) . mean(gate)
+    e = moe.num_experts
+    onehot = jax.nn.one_hot(topi[..., 0], e)  # primary assignment
+    density = jnp.mean(onehot.reshape(-1, e), axis=0)
+    mean_gate = jnp.mean(gates.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(density * mean_gate)
+    return topw, topi, aux
+
+
+def _dispatch_indices(topi: jnp.ndarray, e: int, cap: int):
+    """topi [N, k] -> (src_token [E*C] (=N for empty), slot_of [N, k], valid [N, k]).
+
+    Pure index computation (the MPU 'address chain' — annotated far-bank
+    by the locator; see DESIGN.md §2).
+    """
+    n, k = topi.shape
+    flat_e = topi.reshape(-1)  # [N*k]
+    order = jnp.argsort(flat_e, stable=True)  # token-slots grouped by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n * k) - starts[sorted_e]
+    # invert the permutation: rank of each original (token, slot)
+    rank = jnp.zeros((n * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    valid = rank < cap
+    # scatter source token ids into [E*C]; dropped slots write nowhere
+    dst = jnp.where(valid, flat_e * cap + rank, e * cap)  # overflow -> dropped
+    src_token = jnp.full((e * cap + 1,), n, jnp.int32)  # default: pad token
+    token_ids = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    src_token = src_token.at[dst].set(token_ids)[: e * cap]
+    slot_of = jnp.where(valid, flat_e * cap + rank, e * cap).reshape(n, k)
+    return src_token, slot_of, valid.reshape(n, k)
+
+
+def _model_n() -> int:
+    from repro.sharding.constraints import model_axis_size
+    return model_axis_size()
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [G, N, d] -> (y [G, N, d], aux_loss scalar)."""
+    moe = cfg.moe
+    assert moe is not None
+    g, n, d = x.shape
+    e = moe.num_experts
+    cap = capacity(n, moe)
+
+    logits = x @ params["router"].astype(x.dtype)  # [G, N, E]
+    topw, topi, aux = route(logits, moe)  # [G,N,k] fp32, int, scalar
+
+    src_token, slot_of, valid = jax.vmap(
+        lambda t: _dispatch_indices(t, e, cap)
+    )(topi)  # [G, E*C], [G, N, k], [G, N, k]
+
+    xpad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    xd = jnp.take_along_axis(
+        xpad, src_token[..., None], axis=1
+    ).reshape(g, e, cap, d)  # [G, E, C, d]
+    ep = moe.num_experts % max(_model_n(), 1) == 0
+    # EP: experts over model; TP fallback: d_ff over model (SPerf iter 3:
+    # pin the dispatch buffers so the expert matmuls never replicate)
+    xd = shard_act(xd, "batch", "experts" if ep else None, None, None)
+
+    act = activation(cfg.act)
+    wg = params["gate"].astype(x.dtype)
+    wu = params["up"].astype(x.dtype)
+    wd = params["down"].astype(x.dtype)
+    h = act(jnp.einsum("gecd,edf->gecf", xd, wg)) * jnp.einsum(
+        "gecd,edf->gecf", xd, wu)
+    h = shard_act(h, "batch", "experts" if ep else None, None,
+                  None if ep else "dff")
+    yd = jnp.einsum("gecf,efd->gecd", h, wd)  # [G, E, C, d]
+    yd = shard_act(yd, "batch", "experts" if ep else None, None, None)
+
+    # combine: gather each token-slot's expert output, weight, and sum over k
+    yflat = jnp.concatenate(
+        [yd.reshape(g, e * cap, d), jnp.zeros((g, 1, d), yd.dtype)], axis=1)
+    taken = jnp.take_along_axis(
+        yflat, slot_of.reshape(g, n * moe.top_k)[..., None], axis=1
+    ).reshape(g, n, moe.top_k, d)
+    w = (topw * valid).astype(x.dtype)
+    y = jnp.einsum("gnkd,gnk->gnd", taken, w)
+    return y, aux.astype(jnp.float32) * moe.aux_loss_weight
+
+
+def moe_apply_tokens(params: Params, cfg: ModelConfig, x: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Adapter for [B, S, d] (train/prefill; groups = batch rows) and
+    [B, 1, d] (decode; a single group of B tokens)."""
+    b, s, d = x.shape
+    if s == 1:
+        y, aux = moe_apply(params, cfg, x.reshape(1, b, d))
+        return y.reshape(b, 1, d), aux
+    y, aux = moe_apply(params, cfg, x)
+    return y, aux
+
+
+def reference_moe(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle: every token through every expert, weighted by the
+    (capacity-unlimited) router — used by tests with cap >= N."""
+    moe = cfg.moe
+    logits = x @ params["router"].astype(x.dtype)
+    topw, topi, _ = route(logits, moe)
+    act = activation(cfg.act)
+    h = act(jnp.einsum("gnd,edf->gnef", x, params["gate"].astype(x.dtype))) * \
+        jnp.einsum("gnd,edf->gnef", x, params["up"].astype(x.dtype))
+    y_all = jnp.einsum("gnef,efd->gned", h, params["down"].astype(x.dtype))
+    k_onehot = jax.nn.one_hot(topi, moe.num_experts, dtype=jnp.float32)  # [G,N,k,E]
+    w_e = jnp.einsum("gnk,gnke->gne", topw, k_onehot).astype(x.dtype)
+    return jnp.einsum("gned,gne->gnd", y_all, w_e)

@@ -1,0 +1,237 @@
+"""RWKV6 (Finch) block: data-dependent-decay linear attention + channel mix.
+
+Time-mix (WKV6) per head with state S in R^{K x V}:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+``w_t`` is the data-dependent decay (LoRA-projected, exp(-exp(.))),
+``u`` the bonus for the current token.  Training/prefill uses a chunked
+matmul form (scan over chunks carrying S — same near-bank-state pattern as
+SSD); decode is the O(1) recurrence.  Channel-mix is the squared-relu MLP
+with token shift.  Heads are normalized with per-head LayerNorm (ln_x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.models.layers import Params, dense_init
+from repro.sharding.constraints import shard_act
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    r = cfg.rwkv or RWKVConfig()
+    nheads = cfg.d_model // r.head_dim
+    return nheads, r.head_dim
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    r = cfg.rwkv or RWKVConfig()
+    d = cfg.d_model
+    nheads, hd = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    u = (jax.random.uniform(ks[0], (nheads, hd)) - 0.5).astype(dtype)
+    return {
+        # token-shift mix coefficients (static; one per interpolant)
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, dtype),
+        "wa": dense_init(ks[6], d, r.decay_lora, dtype),
+        "wb": dense_init(ks[7], r.decay_lora, d, dtype),
+        "u": u,  # bonus (time_first)
+        "ln_x_scale": jnp.ones((d,), dtype),
+        "ln_x_bias": jnp.zeros((d,), dtype),
+        # channel mix
+        "cmix_r": jnp.full((d,), 0.5, dtype),
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cwr": dense_init(ks[8], d, d, dtype),
+        "cwk": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "cwv": dense_init(ks[10], cfg.d_ff, d, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Previous token's features (zeros / ``last`` for t=0). x [B,S,d]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, prev, coeff):
+    return x + (prev - x) * coeff.astype(x.dtype)
+
+
+def wkv6_chunked(
+    r: jnp.ndarray,  # [B, S, H, K]
+    k: jnp.ndarray,  # [B, S, H, K]
+    v: jnp.ndarray,  # [B, S, H, V]
+    w: jnp.ndarray,  # [B, S, H, K]  decay in (0,1), fp32
+    u: jnp.ndarray,  # [H, K]        bonus
+    chunk: int = 32,
+    state0: jnp.ndarray | None = None,  # [B, H, K, V]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6.  Within a chunk:
+
+        y_t = (r_t * E_{t-1}) @ S0 + sum_{j<t} [(r_t*E_{t-1}/E_j) . k_j] v_j
+              + [(r_t*u) . k_t] v_t
+        E_t = prod_{j<=t} w_j   (E_{-1} = 1)
+
+    computed with [Q,Q] matmuls in fp32 (log-space decay ratios)."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (s + pad) // chunk
+    resh = lambda a: a.reshape(b, nc, chunk, h, a.shape[-1]).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+
+    def chunk_step(state, inp):
+        rq, kq, vq, wq = (a.astype(jnp.float32) for a in inp)  # [B,Q,H,*]
+        logw = jnp.log(jnp.maximum(wq, 1e-20))  # [B,Q,H,K]
+        cum = jnp.cumsum(logw, axis=1)  # E_t (log), inclusive
+        cum_prev = cum - logw  # E_{t-1} (log)
+        r_dec = rq * jnp.exp(cum_prev)  # r_t * E_{t-1}
+        k_inc = kq * jnp.exp(-cum)  # k_j / E_j
+        # strict lower-triangular attention-like scores [B,H,Q,Q]
+        scores = jnp.einsum("bihk,bjhk->bhij", r_dec, k_inc)
+        q = rq.shape[1]
+        mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        diag = jnp.einsum("bihk,hk,bihk->bih", rq, u.astype(jnp.float32), kq)
+        y = jnp.einsum("bhij,bjhv->bihv", scores, vq)
+        y += diag[..., None] * vq
+        y += jnp.einsum("bihk,bhkv->bihv", r_dec, state)
+        # state' = diag(E_{Q-1}) S + sum_j (E_{Q-1}/E_j) k_j^T v_j
+        e_end = jnp.exp(cum[:, -1])  # [B,H,K]
+        kscale = kq * jnp.exp(cum[:, -1][:, None] - cum)
+        state_new = state * e_end[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", kscale, vq)
+        return state_new, y.astype(r.dtype)
+
+    state, yc = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, vv)
+    return y[:, :s], state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Recurrent single step: r,k,w [B,H,K]; v [B,H,V]; state [B,H,K,V]."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state + u.astype(jnp.float32)[..., None] * kv)
+    state_new = state * wf[..., None] + kv
+    return y.astype(r.dtype), state_new
+
+
+def _ln_heads(x: jnp.ndarray, scale, bias, eps: float) -> jnp.ndarray:
+    """GroupNorm with groups = heads: LN over each head's V dim.
+    x [B,S,H,V] -> [B,S,H*V]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*x.shape[:-2], -1)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _time_mix_inner(params, cfg, x, prev_token, state, *, decode: bool):
+    nheads, hd = _dims(cfg)
+    b = x.shape[0]
+    xr = _mix(x, prev_token, params["mix_r"])
+    xk = _mix(x, prev_token, params["mix_k"])
+    xv = _mix(x, prev_token, params["mix_v"])
+    xw = _mix(x, prev_token, params["mix_w"])
+    xg = _mix(x, prev_token, params["mix_g"])
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(*x.shape[:-1], nheads, hd)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(*x.shape[:-1], nheads, hd)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(*x.shape[:-1], nheads, hd)
+    if not decode:
+        # pin the wkv streams head-sharded over model (SPerf extension:
+        # the chunk scan then runs collective-free per head group)
+        r = shard_act(r, "batch", None, "heads", None)
+        k = shard_act(k, "batch", None, "heads", None)
+        v = shard_act(v, "batch", None, "heads", None)
+    g = jax.nn.silu(xg @ params["wg"].astype(x.dtype))
+    wexp = params["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ params["wa"].astype(x.dtype)) @ params["wb"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wexp)).reshape(*x.shape[:-1], nheads, hd)
+    if not decode:
+        w = shard_act(w, "batch", None, "heads", None)
+    if decode:
+        y, state = wkv6_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], params["u"], state)
+        y = y[:, None]
+    else:
+        y, state = wkv6_chunked(r, k, v, w, params["u"], state0=state)
+    y = _ln_heads(y, params["ln_x_scale"], params["ln_x_bias"], cfg.norm_eps)
+    return (y * g) @ params["wo"].astype(x.dtype), state
+
+
+def _channel_mix(params, cfg, x, prev_token):
+    xr = _mix(x, prev_token, params["cmix_r"])
+    xk = _mix(x, prev_token, params["cmix_k"])
+    rgate = jax.nn.sigmoid(xr @ params["cwr"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(xk @ params["cwk"].astype(x.dtype)))
+    h = shard_act(h, "batch", None, "dff")
+    out = rgate * (h @ params["cwv"].astype(x.dtype))
+    return shard_act(out, "batch", None, None)
+
+
+def rwkv6_time_mix_apply(params, cfg, x, *, return_state: bool = False):
+    """Prefill/train path for the time-mix half. x [B,S,d]."""
+    y, state = _time_mix_inner(params, cfg, x, _token_shift(x), None,
+                               decode=False)
+    if return_state:
+        return y, state
+    return y
+
+
+def rwkv6_channel_mix_apply(params, cfg, x):
+    return _channel_mix(params, cfg, x, _token_shift(x))
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    nheads, hd = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, nheads, hd, hd), jnp.float32),
+        "tshift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "cshift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_decode_apply(params, cfg, x, cache):
+    """x [B,1,d] -> (y_time, updated cache) for the time-mix half;
+    channel-mix handled by the block wrapper via cache['cshift']."""
+    y, state = _time_mix_inner(
+        params, cfg, x, cache["tshift"], cache["wkv"], decode=True)
+    return y, {**cache, "wkv": state, "tshift": x}
+
+
+def reference_wkv6(r, k, v, w, u, state0=None):
+    """Step-by-step oracle for wkv6_chunked (tests only)."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    state = state0 if state0 is not None else jnp.zeros((b, h, kk, vv), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = wkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u, state)
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(r.dtype), state

@@ -1,0 +1,209 @@
+"""Mamba2 block (SSD — state-space duality, chunked matmul form).
+
+Follows the Mamba2 paper's SSD algorithm: scan over chunks carrying the
+[heads, head_dim, state] SSM state; within a chunk everything is dense
+matmuls (MXU-friendly).  The chunk state is the architectural analogue of
+MPU's near-bank shared memory: it lives in VMEM scratch in the Pallas
+kernel (repro.kernels.ssd_scan) and never round-trips HBM within a chunk.
+
+Shapes: x [B, S, d]; inner dim d_in = expand*d; heads = d_in / head_dim;
+state N = cfg.ssm.state_dim.  B/C projections are shared across heads
+(n_groups = 1, as in zamba2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import Params, dense_init, init_rmsnorm, rmsnorm_apply
+from repro.sharding.constraints import shard_act
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.state_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in, nheads, hd, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (gate), x, B, C, dt] = 2*d_in + 2*n + nheads
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * n + nheads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "D": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 1e-2))).astype(dtype),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in, nheads, hd, n = _dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv1d, width W.  xbc [B,S,C]; w [W,C].
+    Returns (y [B,S,C], new_state [B,W-1,C])."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    xpad = jnp.concatenate([state, xbc], axis=1)
+    y = sum(
+        xpad[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+        for i in range(width)
+    ) + b.astype(xbc.dtype)
+    new_state = xpad[:, xpad.shape[1] - (width - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(logdecay: jnp.ndarray) -> jnp.ndarray:
+    """[..., Q] -> [..., Q, Q] lower-tri cumulative sums:
+    out[i, j] = sum_{j < t <= i} logdecay[t]; -inf above diagonal."""
+    q = logdecay.shape[-1]
+    csum = jnp.cumsum(logdecay, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xh: jnp.ndarray,     # [B, S, H, P]   (values)
+    dt: jnp.ndarray,     # [B, S, H]      (softplus'd step sizes, fp32)
+    a: jnp.ndarray,      # [H]            (negative decay rates, fp32)
+    bmat: jnp.ndarray,   # [B, S, N]
+    cmat: jnp.ndarray,   # [B, S, N]
+    chunk: int,
+    state0: jnp.ndarray | None = None,  # [B, H, P, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq = inp  # [B,Q,H,P] [B,Q,H] [B,Q,N] [B,Q,N]
+        logd = dtq * a  # [B,Q,H] log per-step decay (negative)
+        seg = _segsum(logd.transpose(0, 2, 1))  # [B,H,Q,Q]
+        decay = jnp.exp(seg)
+        # intra-chunk: y[i] = sum_{j<=i} C_i . B_j dt_j decay(i,j) x_j
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)[:, None] * decay  # [B,H,Q,Q]
+        y_intra = jnp.einsum("bhij,bjh,bjhp->bihp", scores, dtq, xq)
+        # inter-chunk: y[i] += C_i . state * exp(cumsum logd through i)
+        dfront = jnp.exp(jnp.cumsum(logd, axis=1))  # [B,Q,H] decay incl. step i
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, state, dfront)
+        # state update: S' = S * exp(sum logd) + sum_j decay(end, j) dt_j B_j x_j
+        total = jnp.exp(jnp.sum(logd, axis=1))  # [B,H]
+        dback = jnp.exp(jnp.sum(logd, axis=1)[:, None] - jnp.cumsum(logd, axis=1))
+        state_new = state * total[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", bq, dtq * dback, xq)
+        return state_new, (y_intra + y_inter).astype(xh.dtype)
+
+    state, yc = jax.lax.scan(chunk_step, state0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, p)
+    return y[:, :s], state
+
+
+def mamba2_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                 return_state: bool = False):
+    """Training/prefill path. x [B,S,d] -> [B,S,d] (+ cache when asked)."""
+    s_cfg = cfg.ssm or SSMConfig()
+    d_in, nheads, hd, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc_pre = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_conv(
+        xbc_pre, params["conv_w"], params["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:-1], nheads, hd)
+    # pin the SSD streams head-sharded (chunk scan collective-free)
+    xh = shard_act(xh, "batch", None, "heads", None)
+    dt = shard_act(dt, "batch", None, "heads")
+    y, ssm_state = ssd_chunked(xh, dt, a, bmat.astype(jnp.float32),
+                               cmat.astype(jnp.float32), s_cfg.chunk_size)
+    y = y + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:-1], d_in)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, {"ssm": ssm_state, "conv": conv_state}
+    return out
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d_in, nheads, hd, n = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, hd, n), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_in + 2 * n), dtype),
+    }
+
+
+def mamba2_decode_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                        cache: Params) -> tuple[jnp.ndarray, Params]:
+    """Single-token recurrent step. x [B,1,d]."""
+    d_in, nheads, hd, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], cache["conv"])
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # [B,H]
+    xh = xs[:, 0].reshape(-1, nheads, hd).astype(jnp.float32)
+    bm = bmat[:, 0].astype(jnp.float32)  # [B,N]
+    cm = cmat[:, 0].astype(jnp.float32)
+    state = cache["ssm"] * da[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bm, dt)
+    y = jnp.einsum("bhpn,bn->bhp", state, cm)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"].astype(x.dtype), {
+        "ssm": state, "conv": conv_state}
+
+
+def reference_ssd(xh, dt, a, bmat, cmat, state0=None):
+    """Step-by-step oracle for ssd_chunked (tests only)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    state = state0 if state0 is not None else jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t] * a)  # [B,H]
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xh[:, t].astype(jnp.float32), bmat[:, t], dt[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, cmat[:, t]))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), state

@@ -1,0 +1,374 @@
+"""Transformer stack assembly: homogeneous and hybrid block stacks.
+
+The decoder stack is defined by ``cfg.block_pattern`` cycled over
+``cfg.num_layers``.  To keep the lowered HLO small (64-layer models must
+compile quickly for the 512-device dry-run) the stack is executed as a
+``lax.scan`` over *pattern periods* with the (short) period unrolled
+inside the body:
+
+    num_layers = n_periods * P + remainder      (P = len(block_pattern))
+    params = { "stack": {pos: stacked [n_periods, ...]},
+               "rem":   {pos: unstacked} ,
+               "shared_attn": tied params }     (zamba2 shared block)
+
+``shared_attention`` positions share one parameter set (tied weights, as
+in Zamba2) but keep *per-occurrence* KV caches.
+
+Block kinds:
+    attention         norm→attn(+cross)→norm→ffn(dense MLP or MoE)
+    shared_attention  same, tied weights
+    mamba2            norm→mamba2 (no FFN — Zamba2-style)
+    rwkv6             norm→time-mix→norm→channel-mix
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockKind, ModelConfig
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    attention_apply,
+    attention_decode_apply,
+    attention_prefill_apply,
+    init_attention,
+)
+from repro.models.layers import (
+    Params,
+    init_mlp,
+    init_rmsnorm,
+    mlp_apply,
+    rmsnorm_apply,
+)
+from repro.models.moe import init_moe, moe_apply_tokens
+from repro.sharding.constraints import shard_act
+
+Cache = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: BlockKind, *,
+               cross: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind in ("attention", "shared_attention"):
+        p: Params = {
+            "ln1": init_rmsnorm(d, dtype),
+            "attn": init_attention(ks[0], cfg, dtype=dtype),
+            "ln2": init_rmsnorm(d, dtype),
+        }
+        if cfg.moe is not None:
+            p["ffn"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = init_mlp(ks[1], d, cfg.d_ff, gated=cfg.gated_mlp,
+                                dtype=dtype)
+        if cross:
+            p["ln_cross"] = init_rmsnorm(d, dtype)
+            p["cross"] = init_attention(ks[2], cfg, cross=True, dtype=dtype)
+        return p
+    if kind == "mamba2":
+        return {"ln1": init_rmsnorm(d, dtype),
+                "mamba": ssm_mod.init_mamba2(ks[0], cfg, dtype)}
+    if kind == "rwkv6":
+        return {"ln1": init_rmsnorm(d, dtype),
+                "ln2": init_rmsnorm(d, dtype),
+                "rwkv": rwkv_mod.init_rwkv6(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _ffn(params: Params, cfg: ModelConfig, x: jnp.ndarray):
+    if cfg.moe is not None:
+        return moe_apply_tokens(params, cfg, x)
+    return mlp_apply(params, x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def block_apply(params: Params, cfg: ModelConfig, kind: BlockKind,
+                x: jnp.ndarray, positions: jnp.ndarray,
+                enc_memory: jnp.ndarray | None = None,
+                causal: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence path. Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attention", "shared_attention"):
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        x = x + attention_apply(params["attn"], cfg, h, positions, causal=causal)
+        if "cross" in params and enc_memory is not None:
+            h = rmsnorm_apply(params["ln_cross"], x, cfg.norm_eps)
+            x = x + attention_apply(params["cross"], cfg, h, positions,
+                                    causal=False, kv_input=enc_memory)
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y, aux = _ffn(params["ffn"], cfg, h)
+        return x + y, aux
+    if kind == "mamba2":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        return x + ssm_mod.mamba2_apply(params["mamba"], cfg, h), aux
+    if kind == "rwkv6":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        x = x + rwkv_mod.rwkv6_time_mix_apply(params["rwkv"], cfg, h)
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        return x + rwkv_mod.rwkv6_channel_mix_apply(params["rwkv"], cfg, h), aux
+    raise ValueError(kind)
+
+
+def block_prefill_apply(params: Params, cfg: ModelConfig, kind: BlockKind,
+                        x: jnp.ndarray, positions: jnp.ndarray,
+                        max_len: int,
+                        enc_memory: jnp.ndarray | None = None,
+                        cache_dtype=jnp.bfloat16
+                        ) -> tuple[jnp.ndarray, Cache]:
+    """Parallel prefill: full-sequence block + cache capture."""
+    if kind in ("attention", "shared_attention"):
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, k_c, v_c = attention_prefill_apply(
+            params["attn"], cfg, h, positions, max_len, cache_dtype)
+        x = x + y
+        if "cross" in params and enc_memory is not None:
+            h = rmsnorm_apply(params["ln_cross"], x, cfg.norm_eps)
+            x = x + attention_apply(params["cross"], cfg, h, positions,
+                                    causal=False, kv_input=enc_memory)
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y, _ = _ffn(params["ffn"], cfg, h)
+        return x + y, {"k": k_c, "v": v_c}
+    if kind == "mamba2":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, cache = ssm_mod.mamba2_apply(params["mamba"], cfg, h,
+                                        return_state=True)
+        return x + y, cache
+    if kind == "rwkv6":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, wkv_state = rwkv_mod.rwkv6_time_mix_apply(
+            params["rwkv"], cfg, h, return_state=True)
+        tshift = h[:, -1:]
+        x = x + y
+        h2 = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y2 = rwkv_mod.rwkv6_channel_mix_apply(params["rwkv"], cfg, h2)
+        return x + y2, {"wkv": wkv_state, "tshift": tshift,
+                        "cshift": h2[:, -1:]}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-block KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: BlockKind, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> Cache:
+    if kind in ("attention", "shared_attention"):
+        h = cfg.resolved_head_dim
+        size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        return {
+            "k": jnp.zeros((batch, size, cfg.num_kv_heads, h), dtype),
+            "v": jnp.zeros((batch, size, cfg.num_kv_heads, h), dtype),
+        }
+    if kind == "mamba2":
+        return ssm_mod.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "rwkv6":
+        return rwkv_mod.init_rwkv6_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode_apply(params: Params, cfg: ModelConfig, kind: BlockKind,
+                       x: jnp.ndarray, cache: Cache, pos: jnp.ndarray, *,
+                       enc_memory: jnp.ndarray | None = None
+                       ) -> tuple[jnp.ndarray, Cache]:
+    """Single-token decode. x [B,1,d]; pos [B]."""
+    if kind in ("attention", "shared_attention"):
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, k, v = attention_decode_apply(
+            params["attn"], cfg, h, cache["k"], cache["v"], pos)
+        x = x + y
+        cache = {**cache, "k": k, "v": v}
+        if "cross" in params and enc_memory is not None:
+            h = rmsnorm_apply(params["ln_cross"], x, cfg.norm_eps)
+            x = x + attention_apply(params["cross"], cfg, h, pos[:, None],
+                                    causal=False, kv_input=enc_memory)
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y, _ = _ffn(params["ffn"], cfg, h)
+        return x + y, cache
+    if kind == "mamba2":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, cache = ssm_mod.mamba2_decode_apply(params["mamba"], cfg, h, cache)
+        return x + y, cache
+    if kind == "rwkv6":
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, cache = rwkv_mod.rwkv6_decode_apply(params["rwkv"], cfg, h, cache)
+        x = x + y
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y = rwkv_mod._channel_mix(params["rwkv"], cfg, h, cache["cshift"])
+        cache = {**cache, "cshift": h}
+        return x + y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack: scan over pattern periods
+# ---------------------------------------------------------------------------
+
+def _pattern_layout(cfg: ModelConfig, num_layers: int):
+    pattern = cfg.block_pattern
+    p = len(pattern)
+    return pattern, num_layers // p, num_layers % p
+
+
+def init_stack(key, cfg: ModelConfig, *, num_layers: int | None = None,
+               cross: bool = False, pattern_override=None,
+               dtype=jnp.float32) -> Params:
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    cfg_pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+    pattern = pattern_override or cfg_pattern
+    if pattern_override:
+        pattern, n_periods, rem = pattern_override, num_layers // len(
+            pattern_override), num_layers % len(pattern_override)
+    keys = jax.random.split(key, len(pattern) * (n_periods + 1) + 1)
+    ki = iter(range(len(keys)))
+    params: Params = {"stack": {}, "rem": {}}
+    has_shared = any(k == "shared_attention" for k in pattern)
+    if has_shared:
+        params["shared_attn"] = init_block(
+            keys[next(ki)], cfg, "shared_attention", cross=cross, dtype=dtype)
+    for pos, kind in enumerate(pattern):
+        if kind == "shared_attention":
+            continue  # tied
+        if n_periods > 0:
+            stacked = [
+                init_block(keys[next(ki)], cfg, kind, cross=cross, dtype=dtype)
+                for _ in range(n_periods)
+            ]
+            params["stack"][str(pos)] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *stacked)
+        if pos < rem:
+            params["rem"][str(pos)] = init_block(
+                keys[next(ki)], cfg, kind, cross=cross, dtype=dtype)
+    return params
+
+
+def stack_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, *, num_layers: int | None = None,
+                pattern_override=None, enc_memory: jnp.ndarray | None = None,
+                causal: bool = True, remat: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence stack. Returns (x, total_moe_aux)."""
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern = pattern_override or cfg.block_pattern
+    n_periods, rem = num_layers // len(pattern), num_layers % len(pattern)
+
+    block = block_apply
+    if remat:
+        block = jax.checkpoint(
+            block_apply, static_argnums=(1, 2, 6),
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+    def period_body(carry, period_params):
+        h, aux = carry
+        for pos, kind in enumerate(pattern):
+            bp = (params["shared_attn"] if kind == "shared_attention"
+                  else period_params[str(pos)])
+            h = shard_act(h, "batch", None, None)  # pin residual stream
+            h, a = block(bp, cfg, kind, h, positions, enc_memory, causal)
+            aux = aux + a
+        return (h, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_periods > 0:
+        (x, aux0), _ = jax.lax.scan(period_body, (x, aux0), params["stack"])
+    for pos in range(rem):
+        kind = pattern[pos]
+        bp = (params["shared_attn"] if kind == "shared_attention"
+              else params["rem"][str(pos)])
+        x, a = block(bp, cfg, kind, x, positions, enc_memory, causal)
+        aux0 = aux0 + a
+    return x, aux0
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     *, num_layers: int | None = None,
+                     dtype=jnp.bfloat16) -> Cache:
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+    cache: Cache = {"stack": {}, "rem": {}}
+    for pos, kind in enumerate(pattern):
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        if n_periods > 0:
+            cache["stack"][str(pos)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (n_periods,) + a.shape).copy(), one)
+        if pos < rem:
+            cache["rem"][str(pos)] = one
+    return cache
+
+
+def stack_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, max_len: int, *,
+                  num_layers: int | None = None,
+                  enc_memory: jnp.ndarray | None = None,
+                  cache_dtype=jnp.bfloat16
+                  ) -> tuple[jnp.ndarray, Cache]:
+    """Parallel prefill through the stack, emitting the decode cache."""
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+
+    def period_body(h, period_params):
+        caches = {}
+        for p_idx, kind in enumerate(pattern):
+            bp = (params["shared_attn"] if kind == "shared_attention"
+                  else period_params[str(p_idx)])
+            h, caches[str(p_idx)] = block_prefill_apply(
+                bp, cfg, kind, h, positions, max_len, enc_memory,
+                cache_dtype)
+        return h, caches
+
+    if n_periods > 0:
+        x, stack_cache = jax.lax.scan(period_body, x, params["stack"])
+    else:
+        stack_cache = {}
+    rem_cache = {}
+    for p_idx in range(rem):
+        kind = pattern[p_idx]
+        bp = (params["shared_attn"] if kind == "shared_attention"
+              else params["rem"][str(p_idx)])
+        x, rem_cache[str(p_idx)] = block_prefill_apply(
+            bp, cfg, kind, x, positions, max_len, enc_memory, cache_dtype)
+    return x, {"stack": stack_cache, "rem": rem_cache}
+
+
+def stack_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 cache: Cache, pos: jnp.ndarray, *,
+                 num_layers: int | None = None,
+                 enc_memory: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, Cache]:
+    """Single-token decode through the whole stack."""
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+
+    def period_body(h, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for p_idx, kind in enumerate(pattern):
+            bp = (params["shared_attn"] if kind == "shared_attention"
+                  else period_params.get(str(p_idx)))
+            h, new_cache[str(p_idx)] = block_decode_apply(
+                bp, cfg, kind, h, period_cache[str(p_idx)], pos,
+                enc_memory=enc_memory)
+        return h, new_cache
+
+    if n_periods > 0:
+        # params["stack"] lacks shared_attention positions; cache has all.
+        x, new_stack_cache = jax.lax.scan(
+            period_body, x, (params["stack"], cache["stack"]))
+    else:
+        new_stack_cache = cache["stack"]
+    new_rem_cache = {}
+    for p_idx in range(rem):
+        kind = pattern[p_idx]
+        bp = (params["shared_attn"] if kind == "shared_attention"
+              else params["rem"][str(p_idx)])
+        x, new_rem_cache[str(p_idx)] = block_decode_apply(
+            bp, cfg, kind, x, cache["rem"][str(p_idx)], pos,
+            enc_memory=enc_memory)
+    return x, {"stack": new_stack_cache, "rem": new_rem_cache}

@@ -1,0 +1,15 @@
+from repro.optim.adamw import (
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    compress_int8,
+    decompress_int8,
+    global_norm,
+    init_state,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "AdamWState", "apply_updates", "clip_by_global_norm", "compress_int8",
+    "decompress_int8", "global_norm", "init_state", "warmup_cosine",
+]

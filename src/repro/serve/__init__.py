@@ -1,0 +1,3 @@
+from repro.serve.engine import Completion, Engine, Request
+
+__all__ = ["Completion", "Engine", "Request"]

@@ -1,0 +1,150 @@
+"""Serving engine: batched prefill + decode with a slot-based KV cache.
+
+``Engine`` keeps a fixed pool of B slots (continuous batching): requests
+occupy free slots, prefill fills a slot's cache region, decode advances
+all active slots every step (inactive slots are masked).  Greedy and
+temperature sampling.
+
+Per-slot prefill uses the parallel prefill path (one pass), then merges
+the slot's cache into the pool; decode is one fused step for the whole
+pool — the production decode shape (decode_32k lowers exactly this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model, build_model
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: list[int] = field(default_factory=list)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.model.init_cache(slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.active = np.zeros((slots,), bool)
+        self.budget = np.zeros((slots,), np.int32)
+        self.rid = np.full((slots,), -1, np.int32)
+        self.last_token = np.zeros((slots,), np.int32)
+        self.rng = jax.random.PRNGKey(seed)
+        self.temps = np.zeros((slots,), np.float32)
+
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._prefill1 = jax.jit(
+            lambda p, batch: self.model.prefill(p, batch, max_len))
+
+    # -- slot management ----------------------------------------------------
+    def _free_slot(self) -> int | None:
+        idx = np.where(~self.active)[0]
+        return int(idx[0]) if idx.size else None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot. Returns False if full."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = np.asarray(req.prompt, np.int32)[None]  # [1, S]
+        batch = {"tokens": toks}
+        if self.cfg.frontend != "none":
+            from repro.models.frontends import synth_frontend_embeddings
+            batch["frontend"] = synth_frontend_embeddings(
+                jax.random.fold_in(self.rng, req.rid), self.cfg, 1)
+        logits, cache1 = self._prefill1(self.params, batch)
+        # merge slot-cache: write cache1 rows into pool slot
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda path, pool, one: _merge_slot(path, pool, one, slot),
+            self.cache, cache1)
+        next_tok = int(jnp.argmax(logits[0]))
+        self.pos[slot] = toks.shape[1]
+        self.active[slot] = True
+        self.budget[slot] = req.max_new_tokens - 1
+        self.rid[slot] = req.rid
+        self.last_token[slot] = next_tok
+        self.temps[slot] = req.temperature
+        return True
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> list[tuple[int, int]]:
+        """One decode step for all active slots.
+        Returns [(rid, token)] emitted this step."""
+        if not self.active.any():
+            return []
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.last_token), jnp.asarray(self.pos))
+        self.rng, sub = jax.random.split(self.rng)
+        greedy = jnp.argmax(logits, -1)
+        temps = jnp.asarray(self.temps)[:, None]
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temps, 1e-3))
+        nxt = np.asarray(jnp.where(jnp.asarray(self.temps) > 0,
+                                   sampled, greedy), np.int32)
+        out = []
+        for s in range(self.slots):
+            if not self.active[s]:
+                continue
+            out.append((int(self.rid[s]), int(self.last_token[s])))
+            self.pos[s] += 1
+            self.last_token[s] = nxt[s]
+            self.budget[s] -= 1
+            if self.budget[s] < 0 or self.pos[s] >= self.max_len - 1:
+                self.active[s] = False
+        return out
+
+    def generate(self, requests: list[Request]) -> dict[int, Completion]:
+        """Run a request list to completion with continuous batching."""
+        pending = list(requests)
+        done: dict[int, Completion] = {
+            r.rid: Completion(r.rid) for r in requests}
+        while pending or self.active.any():
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            for rid, tok in self.step():
+                done[rid].tokens.append(tok)
+        return done
+
+
+# batch-axis position (from the end) per cache leaf name — mirrors the
+# layouts in repro.models.transformer.init_block_cache
+_BATCH_AXIS_FROM_END = {"k": 4, "v": 4, "ssm": 4, "wkv": 4,
+                        "conv": 3, "tshift": 3, "cshift": 3}
+
+
+def _merge_slot(path, pool: jnp.ndarray, one: jnp.ndarray, slot: int):
+    """Write a single-request cache leaf into the pool at ``slot``.
+    The batch axis is resolved by leaf name (robust to slots == 1 and to
+    stacked-layer leading dims)."""
+    name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+    from_end = _BATCH_AXIS_FROM_END.get(name)
+    if from_end is None or one.ndim != pool.ndim:
+        raise ValueError(
+            f"cannot merge cache leaf {name!r} {one.shape} -> {pool.shape}")
+    ax = pool.ndim - from_end
+    idx = [slice(None)] * pool.ndim
+    idx[ax] = slice(slot, slot + 1)
+    return pool.at[tuple(idx)].set(one.astype(pool.dtype))

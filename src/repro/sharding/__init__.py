@@ -1,0 +1,13 @@
+from repro.sharding.specs import (
+    batch_spec,
+    cache_spec_tree,
+    mesh_sizes,
+    param_spec_tree,
+    sanitize_spec,
+    to_shardings,
+)
+
+__all__ = [
+    "batch_spec", "cache_spec_tree", "mesh_sizes", "param_spec_tree",
+    "sanitize_spec", "to_shardings",
+]

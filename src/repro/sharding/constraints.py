@@ -1,0 +1,100 @@
+"""Activation-sharding constraints (the §Perf hillclimb lever).
+
+Model code calls ``shard_act(x, *logical_dims)`` with logical dimension
+names; outside an ``activation_sharding(...)`` context this is a no-op
+(smoke tests and single-device runs are untouched).  Inside the context
+the logical names resolve to mesh axes, divisibility-sanitized, and pin
+the tensor with ``lax.with_sharding_constraint`` — preventing GSPMD's
+involuntary replication of batch dims inside scan bodies (the dominant
+collective pathology in the baseline dry-run; EXPERIMENTS.md §Perf).
+
+Logical dims:
+    batch    data axes (pod, data)
+    batch2d  data axes AND model combined (2D batch split — used inside
+             attention when heads don't divide the model axis)
+    heads    model (only when the dim divides)
+    dff      model
+    vocab    model
+    seq_mp   model (sequence parallelism)
+    None     unsharded
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import mesh_sizes, sanitize_spec
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    axes: tuple[str, ...]
+    shape: tuple[int, ...]
+
+    @property
+    def sizes(self) -> dict[str, int]:
+        return mesh_sizes(self.axes, self.shape)
+
+    @property
+    def fsdp(self):
+        ax = tuple(a for a in ("pod", "data") if a in self.axes)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+    @property
+    def batch2d(self):
+        ax = tuple(a for a in ("pod", "data", "model") if a in self.axes)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+_POLICY: contextvars.ContextVar[ShardingPolicy | None] = \
+    contextvars.ContextVar("repro_sharding_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, axes: tuple[str, ...],
+                        shape: tuple[int, ...]):
+    token = _POLICY.set(ShardingPolicy(mesh, axes, shape))
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def policy() -> ShardingPolicy | None:
+    return _POLICY.get()
+
+
+def _resolve(entry, pol: ShardingPolicy):
+    if entry is None:
+        return None
+    if entry == "batch":
+        return pol.fsdp
+    if entry == "batch2d":
+        return pol.batch2d
+    if entry in ("heads", "dff", "vocab", "seq_mp", "experts"):
+        return "model" if "model" in pol.axes else None
+    raise ValueError(entry)
+
+
+def shard_act(x, *entries):
+    """Constrain activation ``x`` to the resolved logical spec (no-op
+    outside a policy context; axes that don't divide are dropped)."""
+    pol = policy()
+    if pol is None:
+        return x
+    resolved = tuple(_resolve(e, pol) for e in entries)
+    spec = sanitize_spec(P(*resolved), x.shape, pol.sizes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))
+
+
+def model_axis_size() -> int:
+    pol = policy()
+    if pol is None:
+        return 1
+    return pol.sizes.get("model", 1)

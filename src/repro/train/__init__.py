@@ -1,0 +1,10 @@
+from repro.train.loop import train
+from repro.train.step import (
+    TrainState,
+    init_train_state,
+    make_eval_step,
+    make_train_step,
+)
+
+__all__ = ["train", "TrainState", "init_train_state", "make_eval_step",
+           "make_train_step"]

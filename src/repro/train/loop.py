@@ -1,0 +1,64 @@
+"""The training loop: data -> step -> metrics -> checkpoint -> restart.
+
+Runs identically on 1 CPU (smoke/examples) and N pods (launcher): the
+mesh and shardings come in from the caller; everything here is
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager, StragglerMonitor
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data import SyntheticLM, make_data_config
+from repro.models import build_model
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
+          steps: int | None = None, log_every: int = 10,
+          host_id: int = 0, num_hosts: int = 1,
+          on_metrics: Callable[[int, dict], None] | None = None
+          ) -> tuple[TrainState, list[dict]]:
+    """Single-process training driver (the launcher wraps this in the
+    mesh context and passes sharded arrays)."""
+    model = build_model(cfg)
+    train_step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+    data = SyntheticLM(make_data_config(cfg, shape, tcfg.seed))
+    mgr = CheckpointManager(tcfg, host_id=host_id, num_hosts=num_hosts)
+    straggler = StragglerMonitor(tolerance=2.0)
+
+    rng = jax.random.PRNGKey(tcfg.seed)
+    state, start = mgr.restore_or_init(lambda: init_train_state(model, rng))
+    total = steps if steps is not None else tcfg.total_steps
+
+    history: list[dict] = []
+    t_start = time.monotonic()
+    for step in range(start, total):
+        batch = data.batch(step, host_id=host_id, num_hosts=num_hosts)
+        if cfg.frontend != "none":
+            key = jax.random.fold_in(rng, step)
+            from repro.models.frontends import synth_frontend_embeddings
+            batch = dict(batch)
+            batch["frontend"] = synth_frontend_embeddings(
+                key, cfg, batch["tokens"].shape[0])
+        straggler.start()
+        state, metrics = train_step(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        was_slow = straggler.stop(step)
+        metrics["straggler"] = float(was_slow)
+        history.append({"step": step, **metrics})
+        if on_metrics:
+            on_metrics(step, metrics)
+        if log_every and step % log_every == 0:
+            dt = time.monotonic() - t_start
+            print(f"step {step:5d} loss={metrics['loss']:.4f} "
+                  f"gnorm={metrics['grad_norm']:.3f} "
+                  f"lr={metrics['lr']:.2e} ({dt:.0f}s)")
+        mgr.maybe_save(step, state)
+    mgr.maybe_save(total - 1, state, force=(tcfg.checkpoint_every > 0))
+    return state, history

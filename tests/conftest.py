@@ -1,0 +1,26 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import TrainConfig, get_config, reduced
+from repro.configs.base import MoEConfig
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real single
+# device; only launch/dryrun.py forces 512 host devices.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch: str, **over):
+    """Reduced same-family config, fp32 for tight numeric comparisons."""
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32")
+    if cfg.moe is not None and "moe" not in over:
+        # high capacity so dispatch is drop-free in consistency tests
+        over["moe"] = MoEConfig(num_experts=4, top_k=2, capacity_factor=16.0)
+    return dataclasses.replace(cfg, **over)

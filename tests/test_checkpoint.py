@@ -1,0 +1,88 @@
+"""Checkpoint/restore: roundtrip, atomicity, retention, elasticity."""
+import pathlib
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.ckpt import (
+    StragglerMonitor,
+    all_steps,
+    elastic_data_axis,
+    latest_step,
+    restore,
+    save,
+)
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "a": jax.random.normal(k, (8, 4)),
+        "b": {"c": jnp.arange(16, dtype=jnp.int32),
+              "d": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save(tmp_path, 3, tree)
+    out = restore(tmp_path, 3, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_ignores_tmp(tmp_path):
+    save(tmp_path, 1, _tree())
+    (tmp_path / "step_9.tmp").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_retention(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        save(tmp_path, s, _tree(), keep=2)
+    assert all_steps(tmp_path) == [4, 5]
+
+
+def test_multi_host_reassembly(tmp_path):
+    """Two hosts each save their row shard; restore reassembles globals."""
+    tree = _tree()
+    for host in (0, 1):
+        save(tmp_path, 7, tree, host_id=host, num_hosts=2)
+    out = restore(tmp_path, 7, jax.tree.map(jnp.zeros_like, tree),
+                  num_hosts_now=1)
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(out["a"]))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(tmp_path, 1, _tree())
+    bad = {"a": jnp.zeros((4, 4)), "b": {"c": jnp.zeros((16,), jnp.int32),
+                                         "d": jnp.float32(0)}}
+    with pytest.raises(AssertionError):
+        restore(tmp_path, 1, bad)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 512))
+def test_elastic_data_axis_properties(requested, surviving):
+    size = elastic_data_axis(requested, surviving)
+    assert 1 <= size <= requested
+    assert size <= max(1, surviving)
+    assert requested % size == 0 or size == 1
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(tolerance=2.0)
+    import time
+    for step in range(8):
+        mon.start()
+        mon.times.append(0.1)  # synthetic fast history
+        flagged = mon.stop(step)
+    mon.start()
+    mon._t0 -= 10.0  # pretend this step took 10s
+    assert mon.stop(99) is True
+    assert mon.flagged and mon.flagged[-1][0] == 99

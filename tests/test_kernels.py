@@ -1,0 +1,195 @@
+"""Per-kernel validation: interpret-mode Pallas vs the ref.py oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,nq,nk,h,causal,window", [
+    (1, 64, 4, 4, 16, True, 0),
+    (2, 128, 8, 2, 32, True, 0),
+    (1, 96, 4, 1, 64, False, 0),
+    (2, 160, 4, 2, 16, True, 24),
+    (1, 70, 2, 2, 16, True, 0),     # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, nq, nk, h, causal, window, dtype):
+    q = _rand(0, (b, s, nq, h), dtype)
+    k = _rand(1, (b, s, nk, h), dtype)
+    v = _rand(2, (b, s, nk, h), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              impl="interpret", q_block=32, kv_block=32)
+    want = ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,t,nq,nk,h", [
+    (2, 256, 8, 2, 32),
+    (3, 100, 4, 4, 16),
+    (1, 513, 2, 1, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, t, nq, nk, h, dtype):
+    q = _rand(0, (b, nq, h), dtype)
+    kc = _rand(1, (b, t, nk, h), dtype)
+    vc = _rand(2, (b, t, nk, h), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, t + 1, size=(b,)), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lengths, impl="interpret",
+                               kv_block=64)
+    want = ref.ref_decode_attention(q, kc, vc, lengths)
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (33, 96), (257, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_fwd(rows, d, dtype):
+    x = _rand(0, (rows, d), dtype)
+    s = _rand(1, (d,)) * 0.1 + 1.0
+    out = ops.rmsnorm(x, s, impl="interpret", rows_block=32)
+    want = ref.ref_rmsnorm(x, s)
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), **_tol(dtype))
+
+
+def test_rmsnorm_bwd():
+    x = _rand(0, (64, 96))
+    s = _rand(1, (96,)) * 0.1 + 1.0
+    f1 = lambda x, s: jnp.sum(jnp.sin(
+        ops.rmsnorm(x, s, impl="interpret", rows_block=32)))
+    f2 = lambda x, s: jnp.sum(jnp.sin(ref.ref_rmsnorm(x, s)))
+    g1 = jax.grad(f1, argnums=(0, 1))(x, s)
+    g2 = jax.grad(f2, argnums=(0, 1))(x, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("r,n,h,theta", [(100, 4, 32, 1e4), (64, 1, 64, 1e6)])
+def test_rotary(r, n, h, theta):
+    x = _rand(0, (r, n, h))
+    pos = jnp.asarray(
+        np.random.default_rng(0).integers(0, 4096, size=(r,)), jnp.int32)
+    out = ops.rotary(x, pos, theta=theta, impl="interpret", rows_block=32)
+    want = ref.ref_rotary(x, pos, theta)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 2, 16, 8, 16),
+    (1, 100, 3, 8, 16, 32),
+])
+def test_ssd_scan(b, s, h, p, n, chunk):
+    x = _rand(0, (b, s, h, p))
+    dt = jax.nn.softplus(_rand(1, (b, s, h)))
+    a = -jnp.exp(_rand(2, (h,)))
+    logd = dt * a
+    bm, cm = _rand(3, (b, s, n)), _rand(4, (b, s, n))
+    out = ops.ssd_scan(x, logd, dt, bm, cm, impl="interpret", chunk=chunk)
+    want, _ = ref.ref_ssd_scan(x, logd, dt, bm, cm)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,k,chunk", [(2, 48, 2, 16, 16), (1, 70, 1, 32, 8)])
+def test_wkv6(b, s, h, k, chunk):
+    r = _rand(0, (b, s, h, k))
+    kk = _rand(1, (b, s, h, k))
+    v = _rand(2, (b, s, h, k))
+    w = jax.nn.sigmoid(_rand(3, (b, s, h, k))) * 0.5 + 0.45
+    u = _rand(4, (h, k)) * 0.1
+    out = ops.wkv6(r, kk, v, w, u, impl="interpret", chunk=chunk)
+    want, _ = ref.ref_wkv6(r, kk, v, w, u)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (33, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adamw_update(shape, dtype):
+    p = _rand(0, shape, dtype)
+    g = _rand(1, shape, dtype)
+    m = jnp.abs(_rand(2, shape))
+    v = jnp.abs(_rand(3, shape))
+    step = 7
+    hyper = jnp.array([1e-3, 0.9, 0.95, 1e-8, 0.1,
+                       1 - 0.9 ** step, 1 - 0.95 ** step], jnp.float32)
+    po, mo, vo = ops.adamw_update(p, g, m, v, hyper, impl="interpret",
+                                  rows_block=16)
+    pw, mw, vw = ref.ref_adamw(p, g, m, v, lr=1e-3, beta1=0.9, beta2=0.95,
+                               eps=1e-8, weight_decay=0.1, step=step)
+    np.testing.assert_allclose(po.astype(np.float32),
+                               pw.astype(np.float32), **_tol(dtype))
+    np.testing.assert_allclose(mo, mw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(vo, vw, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_elementwise_multi_output():
+    a = _rand(0, (40, 64))
+    b = _rand(1, (40, 64))
+    c = _rand(2, (64,))
+
+    def fn(x, y, p):
+        h = jax.nn.silu(x) * y + p
+        return h, jnp.tanh(h)
+
+    o1, o2 = ops.fused_elementwise(fn, [a, b], [c], impl="interpret",
+                                   n_outputs=2, rows_block=16)
+    w1, w2 = fn(a, b, c)
+    np.testing.assert_allclose(o1, w1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(o2, w2, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,nq,nk,h,causal,window", [
+    (1, 64, 4, 2, 16, True, 0),
+    (2, 96, 4, 4, 32, False, 0),
+    (1, 80, 2, 1, 16, True, 24),
+])
+def test_flash_attention_bwd(b, s, nq, nk, h, causal, window):
+    """Backward Pallas kernels vs autodiff through the naive oracle."""
+    from repro.kernels.flash_attention_bwd import flash_attention_diff
+
+    q = _rand(0, (b, s, nq, h))
+    k = _rand(1, (b, s, nk, h))
+    v = _rand(2, (b, s, nk, h))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention_diff(
+            q, k, v, causal, window, 32, 32, True)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.ref_flash_attention(
+            q, k, v, causal=causal, window=window)))
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in zip(g1, g2):
+        np.testing.assert_allclose(a, bb, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_lse_matches_logsumexp():
+    from repro.kernels.flash_attention import flash_attention
+
+    q = _rand(0, (1, 48, 2, 16))
+    k = _rand(1, (1, 48, 2, 16))
+    v = _rand(2, (1, 48, 2, 16))
+    _, lse = flash_attention(q, k, v, causal=True, q_block=16, kv_block=16,
+                             interpret=True, return_lse=True)
+    # oracle lse
+    g = 1
+    s = jnp.einsum("bskh,btkh->bskt", q, k) / (16 ** 0.5)
+    mask = jnp.tril(jnp.ones((48, 48), bool))
+    s = jnp.where(mask[None, :, None, :], s, -1e30)
+    want = jax.scipy.special.logsumexp(s, axis=-1).reshape(1, 48, 2)
+    np.testing.assert_allclose(lse, want, rtol=1e-5, atol=1e-5)

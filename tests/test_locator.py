@@ -1,0 +1,151 @@
+"""Algorithm 1 (location annotation): faithfulness + properties.
+
+Property-based (hypothesis): random SIMT programs — the fixpoint must
+terminate, seeds must be respected, and the lattice must only move
+upward (U -> {N,F} -> B)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+
+from repro.core.isa import (
+    Instr,
+    Loc,
+    OpKind,
+    Program,
+    annotate_locations,
+    apply_policy,
+    location_stats,
+)
+from repro.core.locator import annotate_fn
+from repro.core.workloads import PROGRAMS
+
+K = OpKind
+
+
+def test_paper_example_fig7():
+    """Fig. 7: ld.global values near; the fma chain on them near; the
+    address/loop registers far."""
+    body = [
+        Instr(K.ALU_INT, ("%r_addr",), ("%r_i",)),
+        Instr(K.LD_GLOBAL, ("%f1",), (), addr=("%r_addr",)),
+        Instr(K.LD_GLOBAL, ("%f2",), (), addr=("%r_addr",)),
+        Instr(K.ALU, ("%f3",), ("%f1", "%f2")),
+        Instr(K.ST_GLOBAL, (), ("%f3",), addr=("%r_addr",)),
+        Instr(K.ALU_INT, ("%r_i",), ("%r_i",)),
+        Instr(K.ALU_INT, ("%p",), ("%r_i",)),
+        Instr(K.JUMP, (), ("%p",)),
+    ]
+    prog = Program("fig7", body)
+    regs, instrs = annotate_locations(prog)
+    assert regs["%f1"] is Loc.N
+    assert regs["%f2"] is Loc.N
+    assert regs["%f3"] is Loc.N
+    assert regs["%r_addr"] is Loc.F
+    assert regs["%p"] is Loc.F
+    assert instrs[3] is Loc.N      # the fma offloads near-bank
+    assert instrs[0] is Loc.F      # address computation stays far
+
+
+def test_smem_seeds_flip_with_location():
+    body = [
+        Instr(K.ALU_INT, ("%r_s",), ("%r_i",)),
+        Instr(K.LD_SHARED, ("%f1",), (), addr=("%r_s",)),
+        Instr(K.ALU, ("%f2",), ("%f1",)),
+        Instr(K.ST_SHARED, (), ("%f2",), addr=("%r_s",)),
+    ]
+    prog = Program("smem", body)
+    near, _ = annotate_locations(prog, smem_near=True)
+    far, _ = annotate_locations(prog, smem_near=False)
+    assert near["%f1"] is Loc.N
+    assert far["%f1"] is Loc.F
+
+
+@st.composite
+def programs(draw):
+    n = draw(st.integers(3, 25))
+    regs = [f"%r{i}" for i in range(8)] + [f"%f{i}" for i in range(8)]
+    body = []
+    for _ in range(n):
+        op = draw(st.sampled_from(list(K)))
+        dst = tuple(draw(st.lists(st.sampled_from(regs), max_size=1)))
+        src = tuple(draw(st.lists(st.sampled_from(regs), max_size=3)))
+        addr = tuple(draw(st.lists(st.sampled_from(regs), max_size=1))) \
+            if op in (K.LD_GLOBAL, K.ST_GLOBAL, K.LD_SHARED, K.ST_SHARED) \
+            else ()
+        if op is K.JUMP:
+            dst = ()
+        body.append(Instr(op, dst, src, addr=addr))
+    return Program("rand", body)
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_annotation_terminates_and_is_total(prog):
+    regs, instrs = annotate_locations(prog)
+    assert set(regs) == prog.registers()
+    assert set(instrs) == set(range(len(prog.full_body())))
+    for loc in instrs.values():
+        assert loc in (Loc.N, Loc.F, Loc.B)
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_seeds_respected(prog):
+    """ld.global addresses stay F-or-B; sources of st.global stay N-or-B;
+    jump predicates never end up pure-N."""
+    regs, _ = annotate_locations(prog)
+    for ins in prog.full_body():
+        if ins.op is K.LD_GLOBAL:
+            for r in ins.addr:
+                assert regs[r] in (Loc.F, Loc.B)
+            for r in ins.dst:
+                assert regs[r] in (Loc.N, Loc.B)
+        if ins.op is K.ST_GLOBAL:
+            for r in ins.src:
+                assert regs[r] in (Loc.N, Loc.B)
+        if ins.op is K.JUMP:
+            for r in ins.src:
+                assert regs[r] in (Loc.F, Loc.B)
+
+
+@settings(max_examples=40, deadline=None)
+@given(programs())
+def test_policies_cover_all_instructions(prog):
+    for policy in ("annotated", "hw_default", "all_near", "all_far"):
+        locs = apply_policy(prog, policy)
+        assert len(locs) == len(prog.full_body())
+        if policy == "all_far":
+            assert all(l is Loc.F for l in locs.values())
+
+
+def test_workload_register_breakdown_matches_paper_trend():
+    """Fig. 14: across the suite, far registers dominate (they carry the
+    address/control chains), near registers are a solid minority, and B
+    registers are a small fraction."""
+    stats = [location_stats(annotate_locations(mk())[0])
+             for mk in PROGRAMS.values()]
+    mean = {k: sum(s[k] for s in stats) / len(stats) for k in ("N", "F", "B")}
+    assert 0.2 < mean["N"] < 0.6
+    assert 0.35 < mean["F"] < 0.75
+    assert mean["B"] < 0.15
+
+
+def test_jaxpr_annotation_separates_chains():
+    """jaxpr frontend: value chain (on bulk fp data) near; the gather
+    index chain far."""
+    def fn(x, idx):
+        y = jnp.tanh(x) * 2.0 + 1.0      # value chain
+        g = y[idx]                        # gather with int addresses
+        return g * 0.5
+
+    x = jnp.zeros((64, 64))
+    idx = jnp.zeros((8,), jnp.int32)
+    ann = annotate_fn(fn, x, idx)
+    stats = ann.stats()
+    assert stats["N"] > 0.3
+    closed = ann.jaxpr
+    names = [e.primitive.name for e in closed.jaxpr.eqns]
+    for name, loc in zip(names, ann.eqn_loc):
+        if name == "gather":
+            assert loc is Loc.F

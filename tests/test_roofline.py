@@ -1,0 +1,97 @@
+"""Roofline cost model: exactness on known programs + HLO parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import TRAIN_4K, DECODE_32K
+from repro.roofline.analysis import (
+    analytic_bytes,
+    collective_bytes,
+    jaxpr_cost,
+    model_flops,
+)
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((64, 128)), jnp.zeros((128, 32)))
+    cost = jaxpr_cost(closed)
+    assert cost.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_trip_count():
+    w = jnp.zeros((32, 32))
+
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f_unrolled(x):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jnp.zeros((32, 32))
+    c_scan = jaxpr_cost(jax.make_jaxpr(f)(x))
+    c_unroll = jaxpr_cost(jax.make_jaxpr(f_unrolled)(x))
+    np.testing.assert_allclose(c_scan.flops, c_unroll.flops, rtol=1e-6)
+
+
+def test_fused_bytes_below_naive():
+    def f(x):
+        h = jnp.tanh(x) * 2.0 + 1.0
+        return jax.nn.silu(h)
+
+    cost = jaxpr_cost(jax.make_jaxpr(f)(jnp.zeros((512, 512))))
+    assert cost.bytes_fused < cost.bytes_naive
+
+
+def test_collective_parser_with_while_trip_counts():
+    hlo = """
+HloModule test
+
+%cond.1 (p: (s32[], f32[16])) -> pred[] {
+  %iter = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iter, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %x = f32[16]{0} get-tuple-element(%p), index=1
+  %ag = f32[64]{0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[], f32[16]) tuple(%i2, %x)
+}
+
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %a = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%a), to_apply=%sum
+  %w = (s32[], f32[16]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[16]{0} get-tuple-element(%w), index=1
+}
+"""
+    out = collective_bytes(hlo)
+    # all-gather inside the 12-trip loop: result f32[64] = 256B x 12
+    # (result size = bytes landing on each device's links per firing)
+    assert out["all-gather"] == 64 * 4 * 12
+    assert out["all-reduce"] == 16 * 4
+
+
+def test_analytic_bytes_ordering():
+    """decode streams less than train for the same arch; train includes
+    optimizer traffic so it exceeds 30x params."""
+    cfg = get_config("qwen3-1.7b")
+    train_b = analytic_bytes(cfg, TRAIN_4K)
+    decode_b = analytic_bytes(cfg, DECODE_32K)
+    assert decode_b < train_b
+    assert train_b > 30 * cfg.param_count()
+
+
+def test_model_flops_scale():
+    cfg = get_config("deepseek-7b")
+    assert model_flops(cfg, TRAIN_4K) == 6.0 * cfg.param_count() * TRAIN_4K.tokens

@@ -1,0 +1,101 @@
+"""Sharding specs: divisibility safety (property) + per-arch coverage."""
+import hypothesis.strategies as st
+import jax
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.optim import init_state
+from repro.sharding import (
+    cache_spec_tree,
+    param_spec_tree,
+    sanitize_spec,
+)
+
+AXES = ("data", "model")
+SHAPE = (16, 16)
+SIZES = dict(zip(AXES, SHAPE))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       st.lists(st.sampled_from(["data", "model", None]), min_size=0,
+                max_size=4))
+def test_sanitize_never_violates_divisibility(shape, entries):
+    spec = sanitize_spec(P(*entries), tuple(shape), SIZES)
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        n = SIZES[entry] if isinstance(entry, str) else \
+            __import__("math").prod(SIZES[a] for a in entry)
+        assert dim % n == 0
+
+
+def _check_tree(shapes, specs):
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for leaf, spec in zip(flat_shapes, flat_specs):
+        entries = tuple(spec)
+        assert len(entries) <= len(leaf.shape), \
+            f"spec {spec} too long for {leaf.shape}"
+        for dim, entry in zip(leaf.shape, entries):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= SIZES[a]
+            assert dim % n == 0, f"{spec} does not divide {leaf.shape}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divide_for_all_archs(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.eval_shape(
+        lambda: jax.random.PRNGKey(0)))
+    specs = param_spec_tree(cfg, params, AXES, SHAPE)
+    _check_tree(params, specs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("batch", [128, 1])
+def test_cache_specs_divide_for_all_archs(arch, batch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(batch, 4096))
+    specs = cache_spec_tree(cfg, cache, AXES, SHAPE)
+    _check_tree(cache, specs)
+
+
+def test_opt_state_inherits_param_specs():
+    cfg = get_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init,
+                            jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(init_state, params)
+    specs = param_spec_tree(cfg, params, AXES, SHAPE)
+    # moments mirror params: same tree structure
+    assert jax.tree.structure(opt.m) == jax.tree.structure(params)
+    _check_tree(opt.m, specs)
+
+
+def test_large_weights_are_sharded():
+    """Every >=8M-element parameter must be sharded on at least one dim
+    (nothing big may be fully replicated — the ZeRO-3 requirement)."""
+    for arch in ("qwen2.5-32b", "mixtral-8x7b", "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(
+            model.init, jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+        specs = param_spec_tree(cfg, params, AXES, SHAPE)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for leaf, spec in zip(flat_p, flat_s):
+            if leaf.size >= 8 * 1024 * 1024:
+                assert any(e is not None for e in tuple(spec)), \
+                    f"{arch}: {leaf.shape} unsharded"

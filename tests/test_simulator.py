@@ -1,0 +1,129 @@
+"""Simulator invariants + paper-trend assertions (Figs. 8-15)."""
+import statistics
+
+import pytest
+
+from repro.core.simulator import SimConfig, end_to_end_time, simulate
+from repro.core.workloads import PROGRAMS
+
+SMALL = dict(warp_iters=512)  # keep CPU runtime low
+
+
+def _sim(name, **kw):
+    prog = PROGRAMS[name]()
+    cfg = SimConfig(**{**SMALL, **kw})
+    return simulate(prog, cfg), cfg
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+def test_invariants(name):
+    res, _ = _sim(name, machine="mpu")
+    assert res.cycles > 0
+    assert res.total_energy > 0
+    assert res.dram_bytes > 0
+    assert 0.0 <= res.row_miss_rate <= 1.0
+    for v in res.energy.values():
+        assert v >= 0
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+def test_mpu_beats_gpu_per_workload(name):
+    rm, cm = _sim(name, machine="mpu")
+    rg, cg = _sim(name, machine="gpu")
+    speedup = end_to_end_time(rg, cg) / end_to_end_time(rm, cm)
+    assert speedup > 0.8, f"{name}: speedup {speedup:.2f}"
+
+
+def test_fig8_mean_speedup_close_to_paper():
+    sp = []
+    for name in PROGRAMS:
+        rm, cm = _sim(name, machine="mpu")
+        rg, cg = _sim(name, machine="gpu")
+        sp.append(end_to_end_time(rg, cg) / end_to_end_time(rm, cm))
+    mean = statistics.geometric_mean(sp)
+    assert 2.4 < mean < 4.8, f"mean speedup {mean:.2f} vs paper 3.46"
+
+
+def test_fig9_mean_energy_close_to_paper():
+    er = []
+    for name in PROGRAMS:
+        rm, _ = _sim(name, machine="mpu")
+        rg, _ = _sim(name, machine="gpu")
+        er.append(rg.total_energy / rm.total_energy)
+    mean = statistics.geometric_mean(er)
+    assert 1.8 < mean < 3.6, f"mean energy reduction {mean:.2f} vs paper 2.57"
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+def test_fig12_more_row_buffers_never_hurt_misses(name):
+    rates = []
+    for rb in (1, 2, 4):
+        res, _ = _sim(name, machine="mpu", row_buffers=rb)
+        rates.append(res.row_miss_rate)
+    assert rates[0] >= rates[1] - 1e-9
+    assert rates[1] >= rates[2] - 1e-9
+
+
+def test_fig12_mean_row_buffer_speedups():
+    r1, r2, r4 = [], [], []
+    for name in PROGRAMS:
+        a, _ = _sim(name, machine="mpu", row_buffers=1)
+        b, _ = _sim(name, machine="mpu", row_buffers=2)
+        c, _ = _sim(name, machine="mpu", row_buffers=4)
+        r2.append(a.cycles / b.cycles)
+        r4.append(a.cycles / c.cycles)
+    g2 = statistics.geometric_mean(r2)
+    g4 = statistics.geometric_mean(r4)
+    assert 1.0 <= g2 < 1.35, f"rb2 speedup {g2:.2f} (paper 1.10)"
+    assert g2 - 0.02 <= g4 < 1.6, f"rb4 speedup {g4:.2f} (paper 1.25)"
+
+
+def test_fig11_near_smem_helps_smem_workloads_only():
+    for name in PROGRAMS:
+        near, _ = _sim(name, machine="mpu", smem_near=True)
+        far, _ = _sim(name, machine="mpu", smem_near=False)
+        uses_smem = any(
+            i.op.value.endswith("shared")
+            for i in PROGRAMS[name]().full_body())
+        ratio = far.cycles / near.cycles
+        if not uses_smem:
+            assert abs(ratio - 1.0) < 0.15, f"{name}: {ratio:.2f}"
+
+
+def test_fig13_mpu_beats_ponb_on_average():
+    ratios = []
+    for name in PROGRAMS:
+        rm, _ = _sim(name, machine="mpu")
+        rp, _ = _sim(name, machine="ponb")
+        ratios.append(rp.cycles / rm.cycles)
+    mean = statistics.geometric_mean(ratios)
+    assert 1.1 < mean < 2.0, f"PonB ratio {mean:.2f} vs paper 1.46"
+
+
+def test_fig15_policy_ordering():
+    """annotated >= hw_default and annotated >= all_near on average —
+    the paper's compiler beats both fallbacks."""
+    def mean_cycles(policy):
+        vals = []
+        for name in PROGRAMS:
+            r, _ = _sim(name, machine="mpu", policy=policy)
+            vals.append(r.cycles)
+        return statistics.geometric_mean(vals)
+
+    annotated = mean_cycles("annotated")
+    hw = mean_cycles("hw_default")
+    near = mean_cycles("all_near")
+    far = mean_cycles("all_far")
+    assert annotated <= hw * 1.02
+    assert annotated <= near * 1.02
+    assert annotated <= far * 1.02
+
+
+def test_energy_breakdown_structure():
+    """Fig. 10: ALU / data access / movement dominate MPU energy."""
+    res, _ = _sim("AXPY", machine="mpu")
+    e = res.energy
+    total = res.total_energy
+    core = (e.get("alu", 0) + e.get("dram", 0) + e.get("dram_act", 0)
+            + e.get("rf", 0) + e.get("opc", 0) + e.get("tsv", 0))
+    assert core / total > 0.8

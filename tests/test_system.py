@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, verified against the simulator + compiler stack:
+  1. 3.46x-class speedup over the GPU baseline (Fig. 8) — test_simulator
+  2. Algorithm 1 separates value chains from address/control chains
+     (Fig. 14) — test_locator
+  3. the offload engine preserves semantics while cutting HBM/TSV
+     traffic (Figs. 11/15) — test_offload
+Here: the cross-component paths (annotate -> offload -> execute on real
+model code; simulator x compiler policy agreement).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Loc,
+    annotate_locations,
+    apply_policy,
+    mpu_offload,
+    offload_report,
+)
+from repro.core.simulator import SimConfig, simulate
+from repro.core.workloads import PROGRAMS, jax_axpy, jax_gemv, jax_pr
+
+from conftest import tiny
+
+
+def test_axpy_end_to_end_annotate_offload_execute():
+    """The paper's Listing-1 workload through the whole deployable stack:
+    jaxpr annotation -> near segment -> fused kernel -> same numbers."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1 << 12,))
+    y = jax.random.normal(jax.random.PRNGKey(1), (1 << 12,))
+
+    def axpy(x, y):
+        return 2.5 * x + y
+
+    plan = offload_report(axpy, x, y, bulk_threshold=1024)
+    assert plan.segments and plan.traffic_reduction > 1.0
+    got = mpu_offload(axpy, bulk_threshold=1024, impl="interpret")(x, y)
+    np.testing.assert_allclose(got, axpy(x, y), rtol=1e-5, atol=1e-6)
+
+
+def test_simulator_and_isa_policy_agree_on_offload_count():
+    """Instructions the locator marks near must be executed near by the
+    simulator under the annotated policy (cross-component consistency)."""
+    for name in ("AXPY", "BLUR", "PR"):
+        prog = PROGRAMS[name]()
+        _, ilocs = annotate_locations(prog)
+        policy_locs = apply_policy(prog, "annotated")
+        assert ilocs == policy_locs
+
+
+def test_offload_on_real_transformer_block():
+    """mpu_offload over an actual transformer block (norm/residual/GLU
+    chains) finds near segments and preserves the output.  (Whole-model
+    losses hide the chains inside scan bodies — scan-body recursion is a
+    beyond-paper extension tracked in EXPERIMENTS.md SPerf.)"""
+    cfg = tiny("qwen3-1.7b", num_layers=1)
+    from repro.models.transformer import block_apply, init_block
+    bp = init_block(jax.random.PRNGKey(0), cfg, "attention")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+
+    def block_of(bp, x):
+        return block_apply(bp, cfg, "attention", x, pos)[0]
+
+    plan = offload_report(block_of, bp, x, bulk_threshold=256)
+    assert plan.segments
+    assert plan.traffic_reduction > 1.0
+    got = mpu_offload(block_of, bulk_threshold=256,
+                      impl="interpret")(bp, x)
+    want = block_of(bp, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_jax_workload_implementations_run():
+    x = jnp.ones((256,))
+    a = jnp.ones((16, 256))
+    assert jax_axpy(2.0, x, x).shape == (256,)
+    assert jax_gemv(a, x).shape == (16,)
+    assert jax_pr(x) == 256.0
+
+
+def test_paper_headline_numbers_summary():
+    """One consolidated check of the reproduction band: speedup within
+    ~35% of 3.46x, energy within ~40% of 2.57x (documented calibration
+    in EXPERIMENTS.md)."""
+    import statistics
+    from repro.core.simulator import end_to_end_time
+    sp, er = [], []
+    for name, mk in PROGRAMS.items():
+        prog = mk()
+        cm, cg = SimConfig("mpu", warp_iters=512), SimConfig(
+            "gpu", warp_iters=512)
+        rm, rg = simulate(prog, cm), simulate(prog, cg)
+        sp.append(end_to_end_time(rg, cg) / end_to_end_time(rm, cm))
+        er.append(rg.total_energy / rm.total_energy)
+    s, e = statistics.geometric_mean(sp), statistics.geometric_mean(er)
+    assert abs(s - 3.46) / 3.46 < 0.35, f"speedup {s:.2f}"
+    assert abs(e - 2.57) / 2.57 < 0.40, f"energy {e:.2f}"
