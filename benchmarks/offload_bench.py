@@ -1,19 +1,36 @@
 """JAX-level offload benchmark (beyond-paper deployable analogue).
 
 For representative memory-bound chains (the Table-I workloads' value
-chains + real transformer-block epilogues), compare:
-  naive   every eqn round-trips HBM (far-bank execution)
-  fused   Algorithm-1 near segments as single-pass kernels (near-bank)
-reporting the HBM-byte reduction and the projected v5e time per call at
-819 GB/s (memory-bound ops: time == bytes / bandwidth).
+chains + real transformer-block epilogues), report two things:
+
+1. **Traffic** (the paper's TSV accounting): naive per-eqn HBM bytes vs
+   Algorithm-1 fused-segment bytes, plus the projected v5e time per call
+   at 819 GB/s (memory-bound ops: time == bytes / bandwidth).
+
+2. **Interpreted vs compiled wall time**: the legacy per-call Python
+   jaxpr interpreter (``mpu_offload_interpreted`` — re-trace + re-plan +
+   eqn-by-eqn dispatch on every call) against the compile-time rewriter
+   (``mpu_offload`` — plan once, stage through ``jax.jit``, then pure
+   compiled execution).  Retrace counts and plan-cache hit rates come
+   from the wrapper's ``stats`` counters; the compiled path must show
+   exactly one trace and one plan miss regardless of call count.
+
+Writes a ``BENCH_offload.json`` artifact at the repo root.
 """
 from __future__ import annotations
+
+import json
+import pathlib
+import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import offload_report
+from repro.core import mpu_offload, mpu_offload_interpreted, offload_report
 from repro.core.machine import V5E
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ARTIFACT = ROOT / "BENCH_offload.json"
 
 
 def _cases():
@@ -23,6 +40,7 @@ def _cases():
     y = jax.random.normal(jax.random.fold_in(k, 1), (n // 256, 256))
     b = jax.random.normal(jax.random.fold_in(k, 2), (256,))
     s = jnp.ones((256,))
+    w = jax.random.normal(jax.random.fold_in(k, 3), (256, 256)) * 0.05
 
     def axpy(x, y):
         return 2.5 * x + y
@@ -41,20 +59,47 @@ def _cases():
         v = 0.95 * x + 0.05 * y * y
         return x - 1e-3 * m / (jnp.sqrt(v) + 1e-8)
 
+    def mlp_residual(x, w, b, y):
+        # the ISSUE's MLP/residual segment workload: far matmul bracketed
+        # by near epilogue chains
+        h = x @ w
+        h = jax.nn.gelu(h + b)
+        h = h * jax.nn.sigmoid(h)
+        return h + y
+
     return [
         ("AXPY", axpy, (x, y)),
         ("BIAS_GELU_RES", bias_gelu_residual, (x, y, b)),
         ("SWIGLU_EPI", swiglu_epilogue, (x, y)),
         ("RMS_SCALE_RES", rms_scale_residual, (x, y, s)),
         ("ADAM_CHAIN", adam_like, (x, y)),
+        ("MLP_RESIDUAL", mlp_residual, (x, w, b, y)),
     ]
 
 
-def run():
+def _time_us(fn, args, reps: int) -> float:
+    out = fn(*args)                      # warmup (compile / first plan)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
     rows = []
     bw = V5E.hbm_gbps * 1e9
     for name, fn, args in _cases():
         plan = offload_report(fn, *args, bulk_threshold=4096)
+
+        compiled = mpu_offload(fn, bulk_threshold=4096)
+        interpreted = mpu_offload_interpreted(fn, bulk_threshold=4096)
+
+        compiled_us = _time_us(compiled, args, reps)
+        interp_us = _time_us(interpreted, args, interp_reps)
+        st = compiled.stats.as_dict()
+
         rows.append({
             "chain": name,
             "segments": len(plan.segments),
@@ -63,6 +108,43 @@ def run():
             "traffic_reduction": plan.traffic_reduction,
             "naive_us_v5e": plan.naive_hbm_bytes / bw * 1e6,
             "fused_us_v5e": plan.fused_hbm_bytes / bw * 1e6,
+            "interpreted_us": interp_us,
+            "compiled_us": compiled_us,
+            "compiled_speedup": interp_us / max(compiled_us, 1e-9),
+            "retraces": st["traces"],          # must stay 1: plan baked in
+            "plan_hits": st["plan_hits"],
+            "plan_misses": st["plan_misses"],
         })
-    mean = sum(r["traffic_reduction"] for r in rows) / len(rows)
-    return rows, {"mean_traffic_reduction": mean}
+
+    mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
+    speedups = [r["compiled_speedup"] for r in rows]
+    geomean = 1.0
+    for s in speedups:
+        geomean *= s
+    geomean **= 1.0 / len(speedups)
+    summary = {
+        "mean_traffic_reduction": mean_traffic,
+        "geomean_compiled_speedup": geomean,
+        "max_retraces": max(r["retraces"] for r in rows),
+        "backend": jax.default_backend(),
+    }
+
+    if write_artifact:
+        ARTIFACT.write_text(json.dumps(
+            {"rows": rows, "summary": summary}, indent=2))
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, summary = run()
+    for r in rows:
+        print(f"{r['chain']:14s} segs={r['segments']} "
+              f"traffic={r['traffic_reduction']:.2f}x "
+              f"interp={r['interpreted_us']:9.1f}us "
+              f"compiled={r['compiled_us']:8.1f}us "
+              f"speedup={r['compiled_speedup']:7.1f}x "
+              f"retraces={r['retraces']}")
+    print(f"geomean compiled speedup: "
+          f"{summary['geomean_compiled_speedup']:.1f}x "
+          f"(traffic {summary['mean_traffic_reduction']:.2f}x, "
+          f"artifact: {ARTIFACT.name})")

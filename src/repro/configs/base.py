@@ -255,6 +255,9 @@ class TrainConfig:
     microbatches: int = 1  # gradient accumulation factor
     remat: bool = True
     seed: int = 0
+    # near-bank instruction offload (compile-time jaxpr rewrite, §IV-B1)
+    offload: bool = False
+    offload_bulk_threshold: int = 1024
     # distributed-optimization knobs
     zero3: bool = True  # shard params/opt-state over the data axis
     grad_compression: Literal["none", "int8"] = "none"

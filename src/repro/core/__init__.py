@@ -10,17 +10,21 @@ from repro.core.isa import (
 from repro.core.locator import JaxprAnnotation, annotate_fn, annotate_jaxpr
 from repro.core.offload import (
     OffloadPlan,
+    OffloadStats,
     Segment,
     mpu_offload,
+    mpu_offload_interpreted,
     offload_report,
     plan_offload,
+    rewrite_offload,
 )
 from repro.core.simulator import SimConfig, SimResult, end_to_end_time, simulate
 
 __all__ = [
     "Instr", "Loc", "OpKind", "Program", "annotate_locations",
     "apply_policy", "location_stats", "JaxprAnnotation", "annotate_fn",
-    "annotate_jaxpr", "OffloadPlan", "Segment", "mpu_offload",
-    "offload_report", "plan_offload", "SimConfig", "SimResult",
+    "annotate_jaxpr", "OffloadPlan", "OffloadStats", "Segment",
+    "mpu_offload", "mpu_offload_interpreted", "offload_report",
+    "plan_offload", "rewrite_offload", "SimConfig", "SimResult",
     "end_to_end_time", "simulate",
 ]

@@ -1,25 +1,50 @@
-"""The instruction offload engine (§IV-B1), jaxpr edition.
+"""The instruction offload engine (§IV-B1) as a compile-time jaxpr
+rewriter with a plan cache.
 
-``mpu_offload(fn)`` returns a drop-in replacement for ``fn`` in which
-every maximal *near-bank segment* — a contiguous run of elementwise
-value-chain eqns over one bulk shape, as annotated by Algorithm 1
-(repro.core.locator) — executes as a single fused Pallas kernel
-(repro.kernels.fused_elementwise): one HBM read per operand, one write
-per segment output, intermediates in VMEM.  Everything else ("far-bank")
-runs through normal XLA.
+The paper's backend decides offloading *once, at compile time* (§V): the
+location annotator (Algorithm 1, repro.core.locator) marks each
+instruction near/far, and the backend emits offload descriptors into the
+compiled program.  This module mirrors that architecture for JAX:
 
-The engine mirrors the paper's runtime pieces:
-  * register track table  -> the interpreter env (which var is live where)
-  * register move engine  -> segment boundary materialization
-  * offload descriptor    -> the fused kernel launch
+  trace once    ``jax.make_jaxpr(fn)`` on the call's avals
+  plan once     ``plan_offload`` segments the jaxpr into maximal
+                near-bank runs (contiguous elementwise value-chain eqns
+                over one bulk shape)
+  rewrite once  ``_build_runner`` bakes every decision into a list of
+                step closures — each near segment becomes ONE fused
+                Pallas launch (repro.kernels.ops.fused_segment: one HBM
+                read per operand, one write per output, intermediates in
+                VMEM), far eqns re-bind unchanged, and ``scan`` /
+                ``pjit`` / ``custom_jvp_call`` bodies are rewritten
+                recursively *at rewrite time*, not per iteration
+  execute fast  the runner is staged through ``jax.jit`` — after the
+                first call the near/far split lives inside one compiled
+                XLA executable; no Python interpretation remains on the
+                hot path
 
-``offload_report`` quantifies the win the way the paper counts TSV
-traffic: naive per-eqn HBM bytes vs post-fusion bytes.
+``mpu_offload(fn)`` returns a drop-in replacement for ``fn`` that caches
+compiled runners keyed by the hashable aval signature of the arguments
+(tree structure + shape/dtype/weak-type per leaf).  The wrapper is
+itself ``jax.jit``-able and composes with the serving engine's jitted
+decode step and the training step.  Cache behaviour is observable via
+``wrapped.stats`` (plan hits/misses, trace count) — a second call with
+identical avals performs zero re-planning and zero re-tracing.
+
+``rewrite_offload`` exposes the rewritten ``ClosedJaxpr`` itself — the
+compile-time artefact in which each near segment appears as a single
+``pallas_call``-backed eqn.  ``offload_report`` (unchanged API) returns
+the plan with the paper's TSV-style traffic accounting: naive per-eqn
+HBM bytes vs post-fusion bytes.
+
+The legacy per-call interpreter is kept as ``execute_offloaded`` /
+``mpu_offload_interpreted`` solely as the benchmark baseline
+(benchmarks/offload_bench.py measures interpreted-vs-compiled wall
+time); it is not used on any production path.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import jax
@@ -56,10 +81,32 @@ class OffloadPlan:
     segments: list[Segment]
     naive_hbm_bytes: int
     fused_hbm_bytes: int
+    inner_plans: list["OffloadPlan"] = field(default_factory=list)
 
     @property
     def traffic_reduction(self) -> float:
         return self.naive_hbm_bytes / max(self.fused_hbm_bytes, 1)
+
+    @property
+    def total_segments(self) -> int:
+        """Segments including those planned inside scan/pjit bodies."""
+        return len(self.segments) + sum(p.total_segments
+                                        for p in self.inner_plans)
+
+
+@dataclass
+class OffloadStats:
+    """Observability for the plan cache and the staged executable."""
+
+    plan_hits: int = 0
+    plan_misses: int = 0
+    traces: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        self.plan_hits = self.plan_misses = self.traces = 0
 
 
 def _dtype_size(aval) -> int:
@@ -75,6 +122,10 @@ def _param_ok(aval, c: int) -> bool:
 
 def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                  min_segment: int = 2) -> OffloadPlan:
+    """Algorithm-1 annotation + maximal near-segment extraction.
+
+    Pure planning: no execution, no recursion into call bodies (the
+    rewriter recurses and records the inner plans it builds)."""
     ann = annotate_jaxpr(closed, bulk_threshold=bulk_threshold)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
@@ -190,14 +241,263 @@ def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
     return fn
 
 
-def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
-                      consts: Sequence, args: Sequence, *,
-                      impl: str = "auto"):
-    """Interpret the jaxpr, dispatching near segments to fused kernels."""
+# call-like primitives whose body jaxpr the rewriter inlines (rewritten
+# recursively at compile time).  ``custom_jvp_call`` / ``custom_vjp_call``
+# have no generic bind path, so inlining their body jaxpr is also a
+# correctness requirement.  (``custom_vjp_call_jaxpr`` — the old-JAX
+# spelling — does re-bind generically and keeps its vjp rule, so it is
+# deliberately absent.)
+_CALL_BODY_PARAM = {
+    "pjit": "jaxpr",
+    "closed_call": "call_jaxpr",
+    "custom_jvp_call": "call_jaxpr",
+    "custom_vjp_call": "call_jaxpr",
+}
+
+
+def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
+                  min_segment: int, impl: str
+                  ) -> tuple[Callable, OffloadPlan]:
+    """The compile-time pass: plan once, then bake every offload decision
+    into a flat list of step closures.
+
+    Returns ``(run, plan)`` where ``run(consts, args)`` is a pure,
+    jit-traceable function: near segments dispatch to
+    ``kops.fused_segment``, scan bodies carry a pre-rewritten body
+    runner, and everything else re-binds its primitive unchanged."""
+    plan = plan_offload(closed, bulk_threshold=bulk_threshold,
+                        min_segment=min_segment)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
     seg_by_start = {s.eqn_idx[0]: s for s in plan.segments}
-    seg_members = {i for s in plan.segments for i in s.eqn_idx}
+
+    def recurse(inner: jcore.ClosedJaxpr) -> Callable:
+        inner_run, inner_plan = _build_runner(
+            inner, bulk_threshold=bulk_threshold,
+            min_segment=min_segment, impl=impl)
+        plan.inner_plans.append(inner_plan)
+        return inner_run
+
+    def make_seg_step(seg: Segment) -> Callable:
+        seg_fn = _segment_fn(eqns, seg)
+        out_dtypes = [v.aval.dtype for v in seg.outputs]
+
+        def step(env, read):
+            bulk = [read(v) for v in seg.bulk_inputs]
+            params = [read(v) for v in seg.param_inputs]
+            outs = kops.fused_segment(seg_fn, bulk, params,
+                                      out_dtypes=out_dtypes, impl=impl)
+            for var, val in zip(seg.outputs, outs):
+                env[var] = val
+        return step
+
+    def make_scan_step(eqn) -> Callable:
+        p = eqn.params
+        inner = p["jaxpr"]
+        inner_run = recurse(inner)
+        inner_consts = tuple(inner.consts)
+        n_consts, n_carry = p["num_consts"], p["num_carry"]
+
+        def step(env, read):
+            invals = [read(v) for v in eqn.invars]
+            sc = tuple(invals[:n_consts])
+            carry0 = tuple(invals[n_consts:n_consts + n_carry])
+            xs = tuple(invals[n_consts + n_carry:])
+
+            def body(carry, x):
+                outs = inner_run(inner_consts, (*sc, *carry, *x))
+                return tuple(outs[:n_carry]), tuple(outs[n_carry:])
+
+            carry, ys = jax.lax.scan(
+                body, carry0, xs, length=p["length"],
+                reverse=p.get("reverse", False),
+                unroll=p.get("unroll", 1))
+            for var, val in zip(eqn.outvars, (*carry, *ys)):
+                env[var] = val
+        return step
+
+    def make_call_step(eqn, body_param: str) -> Callable:
+        inner = eqn.params[body_param]
+        inner_run = recurse(inner)
+        inner_consts = tuple(inner.consts)
+
+        def step(env, read):
+            outs = inner_run(inner_consts, [read(v) for v in eqn.invars])
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
+        return step
+
+    def make_eqn_step(eqn) -> Callable:
+        def step(env, read):
+            out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                     **eqn.params)
+            outs = out if eqn.primitive.multiple_results else (out,)
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
+        return step
+
+    steps: list[Callable] = []
+    i = 0
+    while i < len(eqns):
+        if i in seg_by_start:
+            seg = seg_by_start[i]
+            steps.append(make_seg_step(seg))
+            i = seg.eqn_idx[-1] + 1
+            continue
+        eqn = eqns[i]
+        name = eqn.primitive.name
+        if name == "scan":
+            steps.append(make_scan_step(eqn))
+        elif name in _CALL_BODY_PARAM:
+            steps.append(make_call_step(eqn, _CALL_BODY_PARAM[name]))
+        else:
+            steps.append(make_eqn_step(eqn))
+        i += 1
+
+    def run(consts, args):
+        env: dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for var, val in zip(jaxpr.constvars, consts):
+            env[var] = val
+        for var, val in zip(jaxpr.invars, args):
+            env[var] = val
+        for step in steps:
+            step(env, read)
+        return tuple(read(v) for v in jaxpr.outvars)
+
+    return run, plan
+
+
+def rewrite_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
+                    min_segment: int = 2, impl: str = "auto"
+                    ) -> tuple[jcore.ClosedJaxpr, OffloadPlan]:
+    """jaxpr -> jaxpr: re-stage the runner so each near segment appears as
+    a single fused kernel eqn in the returned ``ClosedJaxpr``."""
+    run, plan = _build_runner(closed, bulk_threshold=bulk_threshold,
+                              min_segment=min_segment, impl=impl)
+    consts = tuple(closed.consts)
+    avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+             for v in closed.jaxpr.invars]
+    rewritten = jax.make_jaxpr(lambda *a: run(consts, a))(*avals)
+    return rewritten, plan
+
+
+def _leaf_signature(leaf) -> tuple:
+    """Hashable aval signature of one argument leaf (what
+    ``jax.eval_shape`` would see)."""
+    shape = tuple(getattr(leaf, "shape", ()))
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:  # python scalar
+        dtype = jnp.result_type(leaf)
+    return (shape, jnp.dtype(dtype).name,
+            bool(getattr(leaf, "weak_type", isinstance(leaf, (int, float)))))
+
+
+@dataclass
+class _CompiledOffload:
+    """One plan-cache entry: everything derived from an aval signature."""
+
+    plan: OffloadPlan
+    executable: Callable         # jitted flat runner
+    out_tree: Any
+    closed: jcore.ClosedJaxpr    # the original (pre-rewrite) jaxpr
+
+
+def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
+                min_segment: int = 2, impl: str = "auto") -> Callable:
+    """Compile-time offload transform with a plan cache.
+
+    Returns ``wrapped`` such that ``wrapped(*args)``:
+      1. looks up the aval signature of ``args`` in the plan cache;
+      2. on miss, traces ``fn`` once, runs the rewriter once, and stages
+         the result through ``jax.jit``;
+      3. on hit (and on every later call with the same avals) dispatches
+         straight into the compiled executable — zero re-planning, zero
+         re-tracing.
+
+    ``wrapped`` composes with ``jax.jit`` / donation (the inner jit
+    collapses into the outer trace), and exposes:
+      * ``wrapped.stats``        — OffloadStats (plan_hits/plan_misses/traces)
+      * ``wrapped.plan_for(*a)`` — the OffloadPlan for a signature
+      * ``wrapped.rewritten(*a)``— the rewritten ClosedJaxpr
+      * ``wrapped.cache_clear()``
+    """
+    cache: dict[Any, _CompiledOffload] = {}
+    stats = OffloadStats()
+
+    def compile_for(args) -> _CompiledOffload:
+        # one trace serves both the jaxpr and the output tree
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
+        run, plan = _build_runner(closed, bulk_threshold=bulk_threshold,
+                                  min_segment=min_segment, impl=impl)
+        consts = tuple(closed.consts)
+        out_tree = jax.tree.structure(out_shape)
+
+        def flat_runner(*flat):
+            stats.traces += 1  # counted once per (re)trace, not per call
+            return run(consts, flat)
+
+        return _CompiledOffload(plan, jax.jit(flat_runner), out_tree, closed)
+
+    def entry_for(args, count: bool = True) -> tuple[_CompiledOffload, list]:
+        """``count=False`` is the introspection path (plan_for/rewritten):
+        it may compile, but never perturbs the hit/miss health counters."""
+        leaves, in_tree = jax.tree.flatten(args)
+        key = (in_tree, tuple(_leaf_signature(l) for l in leaves))
+        entry = cache.get(key)
+        if entry is None:
+            if count:
+                stats.plan_misses += 1
+            entry = compile_for(args)
+            cache[key] = entry
+        elif count:
+            stats.plan_hits += 1
+        return entry, leaves
+
+    def wrapped(*args):
+        entry, leaves = entry_for(args)
+        flat = entry.executable(*leaves)
+        return jax.tree.unflatten(entry.out_tree, flat)
+
+    wrapped.stats = stats
+    wrapped.plan_for = lambda *args: entry_for(args, count=False)[0].plan
+    wrapped.rewritten = lambda *args: rewrite_offload(
+        entry_for(args, count=False)[0].closed, bulk_threshold=bulk_threshold,
+        min_segment=min_segment, impl=impl)[0]
+    wrapped.cache_clear = cache.clear
+    wrapped.cache_size = lambda: len(cache)
+    return wrapped
+
+
+def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
+                   min_segment: int = 2) -> OffloadPlan:
+    closed = jax.make_jaxpr(fn)(*args)
+    return plan_offload(closed, bulk_threshold=bulk_threshold,
+                        min_segment=min_segment)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-call interpreter — benchmark baseline ONLY.
+#
+# This is what the compiled path replaced: every call re-traces fn,
+# re-plans the jaxpr, and walks it eqn-by-eqn in Python (recursing into
+# scan/pjit bodies per call).  benchmarks/offload_bench.py times it
+# against mpu_offload to quantify the win; nothing else should use it.
+# ---------------------------------------------------------------------------
+
+def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
+                      consts: Sequence, args: Sequence, *,
+                      impl: str = "auto", bulk_threshold: int = 1024,
+                      min_segment: int = 2):
+    """Interpret the jaxpr, dispatching near segments to fused kernels.
+    ``bulk_threshold``/``min_segment`` parameterize the per-call planning
+    of nested scan/call bodies (matching the top-level plan)."""
+    jaxpr = closed.jaxpr
+    eqns = jaxpr.eqns
+    seg_by_start = {s.eqn_idx[0]: s for s in plan.segments}
     env: dict[Any, Any] = {}
 
     def read(v):
@@ -216,11 +516,8 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
             bulk = [read(v) for v in seg.bulk_inputs]
             params = [read(v) for v in seg.param_inputs]
             out_dtypes = [v.aval.dtype for v in seg.outputs]
-            outs = kops.fused_elementwise(
-                fn, bulk, params, impl=impl,
-                out_dtypes=out_dtypes, n_outputs=len(seg.outputs))
-            if not isinstance(outs, (tuple, list)):
-                outs = (outs,)
+            outs = kops.fused_segment(fn, bulk, params,
+                                      out_dtypes=out_dtypes, impl=impl)
             for var, val in zip(seg.outputs, outs):
                 env[var] = val
             i = seg.eqn_idx[-1] + 1
@@ -228,16 +525,19 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
         eqn = eqns[i]
         name = eqn.primitive.name
         if name == "scan":
-            # recurse: run the scan with an offloaded body (the paper's
-            # offload engine applied inside the layer/block loops)
-            outs = _offloaded_scan(eqn, [read(v) for v in eqn.invars],
-                                   impl=impl)
-        elif name == "pjit":
-            inner = eqn.params["jaxpr"]
-            inner_plan = plan_offload(inner)
+            outs = _interpreted_scan(eqn, [read(v) for v in eqn.invars],
+                                     impl=impl,
+                                     bulk_threshold=bulk_threshold,
+                                     min_segment=min_segment)
+        elif name in _CALL_BODY_PARAM:
+            inner = eqn.params[_CALL_BODY_PARAM[name]]
+            inner_plan = plan_offload(inner, bulk_threshold=bulk_threshold,
+                                      min_segment=min_segment)
             outs = execute_offloaded(inner, inner_plan, inner.consts,
                                      [read(v) for v in eqn.invars],
-                                     impl=impl)
+                                     impl=impl,
+                                     bulk_threshold=bulk_threshold,
+                                     min_segment=min_segment)
         else:
             out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
                                      **eqn.params)
@@ -248,13 +548,10 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
     return tuple(read(v) for v in jaxpr.outvars)
 
 
-def _offloaded_scan(eqn, invals: Sequence, *, impl: str):
-    """Re-emit a scan with its body transformed by the offload engine.
-
-    scan invars = [consts..., carry..., xs...]; the body jaxpr takes
-    (consts, carry, x_slice) and returns (carry, y_slice)."""
-    import jax
-
+def _interpreted_scan(eqn, invals: Sequence, *, impl: str,
+                      bulk_threshold: int, min_segment: int):
+    """Per-call scan handling of the legacy interpreter: re-plans the body
+    on every outer call (the cost the rewriter eliminates)."""
     params = eqn.params
     inner = params["jaxpr"]            # ClosedJaxpr
     n_consts = params["num_consts"]
@@ -262,12 +559,14 @@ def _offloaded_scan(eqn, invals: Sequence, *, impl: str):
     consts = list(invals[:n_consts])
     carry0 = tuple(invals[n_consts:n_consts + n_carry])
     xs = tuple(invals[n_consts + n_carry:])
-    inner_plan = plan_offload(inner)
+    inner_plan = plan_offload(inner, bulk_threshold=bulk_threshold,
+                              min_segment=min_segment)
 
     def body(carry, x):
         vals = [*consts, *carry, *x]
         outs = execute_offloaded(inner, inner_plan, inner.consts, vals,
-                                 impl=impl)
+                                 impl=impl, bulk_threshold=bulk_threshold,
+                                 min_segment=min_segment)
         return tuple(outs[:n_carry]), tuple(outs[n_carry:])
 
     carry, ys = jax.lax.scan(
@@ -277,10 +576,11 @@ def _offloaded_scan(eqn, invals: Sequence, *, impl: str):
     return (*carry, *ys)
 
 
-def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
-                min_segment: int = 2, impl: str = "auto") -> Callable:
-    """The end-to-end transform: trace -> annotate (Alg. 1) -> segment ->
-    execute with near segments fused into single-pass Pallas kernels."""
+def mpu_offload_interpreted(fn: Callable, *, bulk_threshold: int = 1024,
+                            min_segment: int = 2,
+                            impl: str = "auto") -> Callable:
+    """The pre-rewriter behaviour (trace + plan + interpret on EVERY
+    call).  Benchmark baseline for ``benchmarks/offload_bench.py``."""
 
     def wrapped(*args):
         closed = jax.make_jaxpr(fn)(*args)
@@ -288,16 +588,9 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
                             min_segment=min_segment)
         flat_args = jax.tree.leaves(args)  # invars are flattened leaves
         flat = execute_offloaded(closed, plan, closed.consts, flat_args,
-                                 impl=impl)
-        # re-tree the output like the original function
+                                 impl=impl, bulk_threshold=bulk_threshold,
+                                 min_segment=min_segment)
         out_tree = jax.tree.structure(jax.eval_shape(fn, *args))
         return jax.tree.unflatten(out_tree, flat)
 
     return wrapped
-
-
-def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
-                   min_segment: int = 2) -> OffloadPlan:
-    closed = jax.make_jaxpr(fn)(*args)
-    return plan_offload(closed, bulk_threshold=bulk_threshold,
-                        min_segment=min_segment)

@@ -8,6 +8,7 @@ from repro.kernels.ops import (
     decode_attention,
     flash_attention,
     fused_elementwise,
+    fused_segment,
     rmsnorm,
     rotary,
     ssd_scan,
@@ -23,6 +24,7 @@ __all__ = [
     "decode_attention",
     "flash_attention",
     "fused_elementwise",
+    "fused_segment",
     "rmsnorm",
     "rotary",
     "ssd_scan",

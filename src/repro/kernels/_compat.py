@@ -1,0 +1,25 @@
+"""Version tolerance for the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed upstream
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); kernels import
+it from here so they build against either spelling.  Same treatment for
+``shard_map``, which moved from ``jax.experimental.shard_map`` to
+``jax.shard_map`` (and renamed ``check_rep`` -> ``check_vma``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; the experimental spelling otherwise."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -89,3 +89,25 @@ def fused_elementwise(
         outs = (outs,)
     result = tuple(o[:rows].reshape(shape) for o in outs)
     return result[0] if n_outputs == 1 else result
+
+
+def fused_segment(
+    fn: Callable,
+    bulk: Sequence[jnp.ndarray],
+    params: Sequence[jnp.ndarray] = (),
+    *,
+    out_dtypes: Sequence,
+    rows_block: int = 512,
+    interpret: bool = False,
+) -> tuple:
+    """Multi-output segment entry point — what the offload rewriter emits.
+
+    One eqn per near-bank segment: ``fn`` maps the segment's bulk blocks
+    (+ broadcast params) to ``len(out_dtypes)`` outputs, all written in
+    the same single HBM pass.  Always returns a tuple (one element per
+    segment output), unlike ``fused_elementwise`` which unwraps
+    single-output calls."""
+    outs = fused_elementwise(fn, bulk, params, out_dtypes=list(out_dtypes),
+                             n_outputs=len(out_dtypes),
+                             rows_block=rows_block, interpret=interpret)
+    return outs if isinstance(outs, tuple) else (outs,)

@@ -19,6 +19,7 @@ from repro.kernels.adamw_update import adamw_update as _adamw_pallas
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.fused_elementwise import fused_elementwise as _fused_pallas
+from repro.kernels.fused_elementwise import fused_segment as _fused_seg_pallas
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rotary import rotary as _rotary_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -107,3 +108,17 @@ def fused_elementwise(fn, bulk, params=(), *, impl: Impl = "auto", **kw):
         return fn(*bulk, *full_params)
     return _fused_pallas(fn, bulk, params,
                          interpret=(impl == "interpret"), **kw)
+
+
+def fused_segment(fn, bulk, params=(), *, out_dtypes, impl: Impl = "auto",
+                  **kw):
+    """Multi-output near-bank segment (offload rewriter target).
+    Always returns a tuple with one array per ``out_dtypes`` entry."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        res = fn(*bulk, *[jnp.asarray(p) for p in params])
+        if not isinstance(res, (tuple, list)):
+            res = (res,)
+        return tuple(r.astype(dt) for r, dt in zip(res, out_dtypes))
+    return _fused_seg_pallas(fn, bulk, params, out_dtypes=out_dtypes,
+                             interpret=(impl == "interpret"), **kw)

@@ -25,6 +25,8 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--local", action="store_true")
+    ap.add_argument("--offload", action="store_true",
+                    help="compile-time near-bank offload of the decode step")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch)) if args.local else get_config(
@@ -33,7 +35,8 @@ def main():
     with mesh:
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        engine = Engine(cfg, params, slots=4, max_len=128)
+        engine = Engine(cfg, params, slots=4, max_len=128,
+                        offload=args.offload)
         rng = np.random.default_rng(0)
         reqs = [Request(rng.integers(0, cfg.vocab_size, size=8),
                         max_new_tokens=8, rid=i)
@@ -41,6 +44,10 @@ def main():
         done = engine.generate(reqs)
         total = sum(len(c.tokens) for c in done.values())
         print(f"served {len(reqs)} requests / {total} tokens")
+        if args.offload:
+            # misses == traces == 1 means: planned once, compiled once,
+            # every decode step ran the staged executable
+            print(f"offload compile stats: {engine.offload_stats}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,8 @@ def main():
                     help="1-device mesh with a reduced config (CPU smoke)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--offload", action="store_true",
+                    help="compile-time near-bank offload of the train step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,7 +65,7 @@ def main():
         shape = next(s for s in shapes_for(cfg) if s.name == args.shape)
 
     tcfg = TrainConfig(total_steps=args.steps, checkpoint_every=50,
-                       checkpoint_dir=args.ckpt_dir)
+                       checkpoint_dir=args.ckpt_dir, offload=args.offload)
     model = build_model(cfg)
     train_step = make_train_step(model, tcfg)
 

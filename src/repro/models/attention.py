@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import _compat
 from repro.models.layers import (
     Params,
     apply_rope,
@@ -290,7 +291,7 @@ def _seq_sharded_attention(q, k, v, *, causal: bool, window: int):
             q_l, k_g, v_g, causal=causal, window=window,
             q_offset=idx * s_loc)
 
-    return jax.shard_map(
+    return _compat.shard_map(
         local,
         mesh=pol.mesh,
         in_specs=(P(fsdp, "model", None, None),
@@ -426,7 +427,7 @@ def _split_kv_decode_sharded(q, cache_k, cache_v, new_k, new_v, slot,
         nq = out.shape[1] * out.shape[2]
         return out.reshape(b, nq, -1).astype(q_l.dtype), kc, vc
 
-    return jax.shard_map(
+    return _compat.shard_map(
         local,
         mesh=pol.mesh,
         in_specs=(P(fsdp, None, None),

@@ -39,7 +39,8 @@ class Completion:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0, offload: bool = False,
+                 offload_bulk_threshold: int = 1024):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -54,9 +55,33 @@ class Engine:
         self.rng = jax.random.PRNGKey(seed)
         self.temps = np.zeros((slots,), np.float32)
 
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        # the hot path: with offload=True the decode step goes through the
+        # compile-time near-bank rewriter; the plan is built once for the
+        # pool's decode signature and the result still jits + donates.
+        decode_fn = self.model.decode_step
+        if offload:
+            from repro.core.offload import mpu_offload
+            decode_fn = mpu_offload(
+                decode_fn, bulk_threshold=offload_bulk_threshold)
+        self.offload = offload
+        self._decode_offload = decode_fn if offload else None
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
         self._prefill1 = jax.jit(
             lambda p, batch: self.model.prefill(p, batch, max_len))
+
+    @property
+    def offload_stats(self) -> dict | None:
+        """Compile-time counters of the offloaded decode step (None when
+        offload is off).  The wrapper sits under the engine's ``jax.jit``,
+        so the counters tick at trace/compile time, not per decode step:
+        a healthy steady state is ``plan_misses == traces == 1`` and
+        ``plan_hits == 0`` — every decode after the first runs the
+        compiled executable without re-entering Python at all.  Growing
+        ``traces``/``plan_misses`` would mean the decode signature is
+        unstable and the step is being re-planned."""
+        if self._decode_offload is None:
+            return None
+        return self._decode_offload.stats.as_dict()
 
     # -- slot management ----------------------------------------------------
     def _free_slot(self) -> int | None:

@@ -5,6 +5,13 @@ microbatch k+1 overlapping the gradient reduction of microbatch k (the
 partial-sum carry rides through the scan, so XLA schedules the
 reduce-scatter of one step against the matmuls of the next — the
 standard compute/comm overlap trick at 1000-node scale).
+
+With ``offload=True`` (or ``tcfg.offload``) the whole step is passed
+through the compile-time near-bank rewriter (repro.core.offload): the
+step's elementwise value chains — activation epilogues, residual adds,
+the AdamW update math — execute as single-pass fused kernels inside one
+jitted executable.  The rewrite happens once per batch signature and is
+cached; wrapping in ``jax.jit`` on top composes (the loop does).
 """
 from __future__ import annotations
 
@@ -28,14 +35,28 @@ class TrainState(NamedTuple):
     opt: AdamWState
 
 
+def _maybe_offload(step_fn, tcfg: TrainConfig, offload: bool | None):
+    """Route a step through the near-bank rewriter when enabled
+    (``offload`` overrides ``tcfg.offload`` when not None)."""
+    use_offload = tcfg.offload if offload is None else offload
+    if not use_offload:
+        return step_fn
+    from repro.core.offload import mpu_offload
+    return mpu_offload(step_fn, bulk_threshold=tcfg.offload_bulk_threshold)
+
+
 def init_train_state(model: Model, rng) -> TrainState:
     params = model.init(rng)
     from repro.optim import init_state
     return TrainState(params, init_state(params))
 
 
-def make_train_step(model: Model, tcfg: TrainConfig):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+def make_train_step(model: Model, tcfg: TrainConfig, *,
+                    offload: bool | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``offload`` (default: ``tcfg.offload``) routes the step through the
+    near-bank offload rewriter — same signature, jit-compatible."""
 
     def loss_fn(params, batch):
         loss, metrics = model.loss_fn(params, batch, remat=tcfg.remat)
@@ -77,12 +98,13 @@ def make_train_step(model: Model, tcfg: TrainConfig):
                    "loss": metrics.get("loss", loss)}
         return TrainState(params, opt), metrics
 
-    return train_step
+    return _maybe_offload(train_step, tcfg, offload)
 
 
-def make_eval_step(model: Model, tcfg: TrainConfig):
+def make_eval_step(model: Model, tcfg: TrainConfig, *,
+                   offload: bool | None = None):
     def eval_step(params, batch):
         loss, metrics = model.loss_fn(params, batch, remat=False)
         return metrics
 
-    return eval_step
+    return _maybe_offload(eval_step, tcfg, offload)

@@ -1,0 +1,137 @@
+"""Tiny deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The test image doesn't always ship hypothesis, and the tier-1 suite must
+still collect and run.  This shim implements exactly the strategy surface
+the repo's property tests use (integers, booleans, floats, sampled_from,
+lists, tuples, composite) on top of a seeded ``random.Random``, so runs
+are reproducible.  ``@given`` executes the test body ``max_examples``
+times (from ``@settings``); there is no shrinking — if an example fails,
+the raw drawn values are in the traceback.
+
+Usage in a test module::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from _hyp import st, given, settings
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+
+_MAX_UNIQUE_ATTEMPTS = 1000
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, f):
+        return Strategy(lambda rnd: f(self._draw(rnd)))
+
+    def filter(self, pred):
+        def draw(rnd):
+            for _ in range(_MAX_UNIQUE_ATTEMPTS):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+        return Strategy(draw)
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+
+def just(value):
+    return Strategy(lambda rnd: value)
+
+
+def one_of(*strategies):
+    return Strategy(
+        lambda rnd: strategies[rnd.randrange(len(strategies))].draw(rnd))
+
+
+def lists(elements, *, min_size=0, max_size=None, unique=False):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rnd):
+        n = rnd.randint(min_size, hi)
+        out, seen, attempts = [], set(), 0
+        while len(out) < n and attempts < _MAX_UNIQUE_ATTEMPTS:
+            attempts += 1
+            v = elements.draw(rnd)
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        if len(out) < min_size:  # mirror hypothesis: error, don't shrink
+            raise ValueError(
+                f"could not draw {min_size} unique elements")
+        return out
+
+    return Strategy(draw)
+
+
+def tuples(*strategies):
+    return Strategy(lambda rnd: tuple(s.draw(rnd) for s in strategies))
+
+
+def composite(f):
+    @functools.wraps(f)
+    def make(*args, **kwargs):
+        def draw_one(rnd):
+            return f(lambda s: s.draw(rnd), *args, **kwargs)
+        return Strategy(draw_one)
+    return make
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        # NB: no functools.wraps — pytest would follow ``__wrapped__`` and
+        # mistake the strategy parameters for fixtures.
+        def runner(*args, **kwargs):
+            # @settings sits above @given, so it annotates ``runner``
+            n = getattr(runner, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples", 20))
+            rnd = random.Random(0)
+            for _ in range(n):
+                vals = [s.draw(rnd) for s in strategies]
+                kvals = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                fn(*args, *vals, **kwargs, **kvals)
+        runner.__name__ = getattr(fn, "__name__", "runner")
+        runner.__doc__ = fn.__doc__
+        runner._hyp_max_examples = getattr(fn, "_hyp_max_examples", 20)
+        return runner
+    return deco
+
+
+# ``from _hyp import st`` — the module doubles as the strategies namespace
+st = sys.modules[__name__]

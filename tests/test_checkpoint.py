@@ -1,12 +1,15 @@
 """Checkpoint/restore: roundtrip, atomicity, retention, elasticity."""
 import pathlib
 
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # no hypothesis in the image: fallback shim
+    from _hyp import st, given, settings
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.ckpt import (
     StragglerMonitor,

@@ -1,7 +1,10 @@
 """Data pipeline: determinism + packing invariants (property-based)."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # no hypothesis in the image: fallback shim
+    from _hyp import st, given, settings
 import numpy as np
-from hypothesis import given, settings
 
 from repro.data import DataConfig, SyntheticLM
 

@@ -3,10 +3,13 @@
 Property-based (hypothesis): random SIMT programs — the fixpoint must
 terminate, seeds must be respected, and the lattice must only move
 upward (U -> {N,F} -> B)."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # no hypothesis in the image: fallback shim
+    from _hyp import st, given, settings
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings
 
 from repro.core.isa import (
     Instr,

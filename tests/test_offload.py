@@ -2,11 +2,14 @@
 traffic accounting must behave like the paper's TSV accounting.
 
 Property test: random elementwise DAGs — mpu_offload(f) == f."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # no hypothesis in the image: fallback shim
+    from _hyp import st, given, settings
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import mpu_offload, offload_report
 

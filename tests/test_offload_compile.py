@@ -1,0 +1,187 @@
+"""The compile-time offload path: plan cache, jit composition, rewriter.
+
+Covers the acceptance contract of the rewriter refactor:
+  * plan-cache hit/miss counting keyed by aval signature
+  * ``jax.jit(mpu_offload(fn))`` numerical equivalence vs plain ``fn``
+    (including a ``scan`` body and a ``pjit``-nested jaxpr) with no
+    tracer leaks
+  * zero retraces on a second call with identical avals
+  * the rewritten ClosedJaxpr replaces each near segment with a single
+    ``pallas_call`` eqn and evaluates to the same values
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    mpu_offload,
+    mpu_offload_interpreted,
+    offload_report,
+    rewrite_offload,
+)
+from repro.kernels import ops as kops
+
+
+def _chain(x, y):
+    h = jnp.tanh(x) * 2.0 + y
+    return h * jax.nn.sigmoid(h)
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def test_plan_cache_hit_miss_counting():
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    fn(x, y)
+    assert fn.stats.plan_misses == 1 and fn.stats.plan_hits == 0
+    fn(x, y)
+    assert fn.stats.plan_misses == 1 and fn.stats.plan_hits == 1
+    # a new aval signature compiles a second entry; the old one stays
+    x2, y2 = _rand((128, 32)), _rand((128, 32), 1)
+    fn(x2, y2)
+    assert fn.stats.plan_misses == 2 and fn.cache_size() == 2
+    fn(x, y)
+    assert fn.stats.plan_hits == 2 and fn.stats.plan_misses == 2
+
+
+def test_zero_retraces_on_repeated_call():
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    fn(x, y)
+    traces_after_first = fn.stats.traces
+    assert traces_after_first == 1
+    for _ in range(5):
+        fn(x, y)
+    assert fn.stats.traces == traces_after_first  # zero re-planning/tracing
+
+
+def test_jit_of_offloaded_matches_plain():
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    jitted = jax.jit(fn)
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    got = jitted(x, y)          # must not leak tracers
+    want = _chain(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    got2 = jitted(x + 1.0, y)   # second call through the jit cache
+    np.testing.assert_allclose(np.asarray(got2),
+                               np.asarray(_chain(x + 1.0, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_offload_scan_body_compiled_once():
+    w = _rand((64, 64), 2) * 0.1
+
+    def f(x):
+        def body(c, _):
+            h = c @ w
+            h = jax.nn.gelu(h) * 1.5 + c
+            return h, jnp.sum(h)
+        return jax.lax.scan(body, x, None, length=4)
+
+    x = _rand((128, 64), 3)
+    fn = mpu_offload(f, bulk_threshold=512, impl="interpret")
+    got = jax.jit(fn)(x)
+    want = f(x)
+    for g, wv in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wv),
+                                   rtol=1e-5, atol=1e-6)
+    # the scan body was planned at rewrite time, and only once
+    assert fn.stats.traces == 1
+    plan = fn.plan_for(x)
+    assert plan.total_segments > len(plan.segments), \
+        "expected near segments inside the scan body"
+
+
+def test_offload_pjit_nested_jaxpr():
+    inner = jax.jit(lambda h: jax.nn.gelu(h) * 1.5 + h)
+
+    def f(x, y):
+        h = inner(x * 0.5 + y)
+        return h + x
+
+    x, y = _rand((128, 64)), _rand((128, 64), 1)
+    fn = mpu_offload(f, bulk_threshold=64, impl="interpret")
+    got = jax.jit(fn)(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(f(x, y)),
+                               rtol=1e-5, atol=1e-5)
+    plan = fn.plan_for(x, y)
+    assert plan.total_segments >= 1
+    assert fn.stats.traces == 1
+
+
+def test_rewritten_jaxpr_fuses_segment_to_single_eqn():
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    closed = jax.make_jaxpr(_chain)(x, y)
+    rewritten, plan = rewrite_offload(closed, bulk_threshold=64,
+                                      impl="interpret")
+    assert len(plan.segments) == 1
+    names = [e.primitive.name for e in rewritten.jaxpr.eqns]
+    assert names == ["pallas_call"], names  # 5 elementwise eqns -> 1 launch
+    out = jax.core.eval_jaxpr(rewritten.jaxpr, rewritten.consts, x, y)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(_chain(x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_segment_multi_output():
+    def seg(x, y):
+        h = jnp.tanh(x) + y
+        return h * 2.0, h * h
+
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    outs = kops.fused_segment(seg, [x, y],
+                              out_dtypes=[x.dtype, x.dtype],
+                              impl="interpret")
+    assert isinstance(outs, tuple) and len(outs) == 2
+    want = seg(x, y)
+    for g, w in zip(outs, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_compiled_matches_interpreted_baseline():
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    compiled = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    interpreted = mpu_offload_interpreted(_chain, bulk_threshold=64,
+                                          impl="interpret")
+    np.testing.assert_allclose(np.asarray(compiled(x, y)),
+                               np.asarray(interpreted(x, y)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_offload_report_still_exposes_plan():
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    plan = offload_report(_chain, x, y, bulk_threshold=64)
+    assert plan.segments and plan.traffic_reduction >= 1.0
+    # same plan shape as the one the compiled wrapper caches
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    cached = fn.plan_for(x, y)
+    assert len(cached.segments) == len(plan.segments)
+    assert cached.segments[0].eqn_idx == plan.segments[0].eqn_idx
+
+
+def test_offload_train_and_eval_step_switch():
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.configs.base import TrainConfig
+    from repro.models import build_model
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    tcfg = TrainConfig(total_steps=2, remat=False, checkpoint_every=0)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    _, m_plain = make_train_step(model, tcfg)(state, batch)
+    step_off = make_train_step(model, tcfg, offload=True)
+    _, m_off = step_off(state, batch)
+    np.testing.assert_allclose(float(m_plain["loss"]), float(m_off["loss"]),
+                               rtol=1e-5)
+    step_off(state, batch)
+    assert step_off.stats.plan_misses == 1 and step_off.stats.traces == 1

@@ -1,8 +1,11 @@
 """Sharding specs: divisibility safety (property) + per-arch coverage."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:          # no hypothesis in the image: fallback shim
+    from _hyp import st, given, settings
 import jax
 import pytest
-from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
