@@ -1,26 +1,36 @@
 """JAX-level offload benchmark (beyond-paper deployable analogue).
 
 For representative memory-bound chains (the Table-I workloads' value
-chains + real transformer-block epilogues), report two things:
+chains + real transformer-block epilogues), report three things:
 
 1. **Traffic** (the paper's TSV accounting): naive per-eqn HBM bytes vs
-   Algorithm-1 fused-segment bytes, plus the projected v5e time per call
-   at 819 GB/s (memory-bound ops: time == bytes / bandwidth).
+   Algorithm-1 fused-segment bytes, plus the bytes whose round-trip is
+   eliminated by segment-boundary donation (Pallas
+   ``input_output_aliases`` on dead boundary buffers — the §IV-B3
+   multiple-activated-row-buffers analogue), and the projected v5e time
+   per call at 819 GB/s (memory-bound ops: time == bytes / bandwidth).
 
 2. **Interpreted vs compiled wall time**: the legacy per-call Python
-   jaxpr interpreter (``mpu_offload_interpreted`` — re-trace + re-plan +
-   eqn-by-eqn dispatch on every call) against the compile-time rewriter
-   (``mpu_offload`` — plan once, stage through ``jax.jit``, then pure
-   compiled execution).  Retrace counts and plan-cache hit rates come
-   from the wrapper's ``stats`` counters; the compiled path must show
-   exactly one trace and one plan miss regardless of call count.
+   jaxpr interpreter (``mpu_offload_interpreted``) against the
+   compile-time rewriter (``mpu_offload``).  Retrace counts and
+   plan-cache hit rates come from the wrapper's ``stats`` counters; the
+   compiled path must show exactly one trace and one plan miss
+   regardless of call count.
 
-Writes a ``BENCH_offload.json`` artifact at the repo root.
+3. **Regression guard**: any chain in ``MUST_FUSE`` that reports
+   ``segments == 0``, or any chain whose plan-derived
+   ``traffic_reduction`` drops below the committed artifact's value,
+   makes the process exit non-zero, so CI fails when the segmenter
+   loses coverage it once had.
+
+Writes a versioned ``BENCH_offload.json`` artifact at the repo root.
+``--smoke`` runs a reduced rep count for per-push CI freshness.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import sys
 import time
 
 import jax
@@ -31,6 +41,13 @@ from repro.core.machine import V5E
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
+
+SCHEMA_VERSION = 2
+
+# chains that fuse at this commit; a later segmenter change that drops
+# any of them back to zero segments is a coverage regression.
+MUST_FUSE = {"AXPY", "BIAS_GELU_RES", "SWIGLU_EPI", "RMS_SCALE_RES",
+             "ADAM_CHAIN", "MLP_RESIDUAL"}
 
 
 def _cases():
@@ -49,6 +66,8 @@ def _cases():
         return jax.nn.gelu(x + b) + y
 
     def swiglu_epilogue(x, y):
+        # cross-shape segment: silu's pjit body is flattened into the
+        # caller so the whole epilogue is one fused launch
         return jax.nn.silu(x) * y
 
     def rms_scale_residual(x, y, s):
@@ -60,20 +79,22 @@ def _cases():
         return x - 1e-3 * m / (jnp.sqrt(v) + 1e-8)
 
     def mlp_residual(x, w, b, y):
-        # the ISSUE's MLP/residual segment workload: far matmul bracketed
-        # by near epilogue chains
+        # far matmul bracketed by a near epilogue chain; the matmul's
+        # output dies at the epilogue, so the fused kernel donates it
         h = x @ w
         h = jax.nn.gelu(h + b)
         h = h * jax.nn.sigmoid(h)
         return h + y
 
+    # donate_argnums: the optimizer update overwrites the parameter
+    # buffer in place (the classic near-bank in-place update)
     return [
-        ("AXPY", axpy, (x, y)),
-        ("BIAS_GELU_RES", bias_gelu_residual, (x, y, b)),
-        ("SWIGLU_EPI", swiglu_epilogue, (x, y)),
-        ("RMS_SCALE_RES", rms_scale_residual, (x, y, s)),
-        ("ADAM_CHAIN", adam_like, (x, y)),
-        ("MLP_RESIDUAL", mlp_residual, (x, w, b, y)),
+        ("AXPY", axpy, (x, y), ()),
+        ("BIAS_GELU_RES", bias_gelu_residual, (x, y, b), ()),
+        ("SWIGLU_EPI", swiglu_epilogue, (x, y), ()),
+        ("RMS_SCALE_RES", rms_scale_residual, (x, y, s), ()),
+        ("ADAM_CHAIN", adam_like, (x, y), (0,)),
+        ("MLP_RESIDUAL", mlp_residual, (x, w, b, y), ()),
     ]
 
 
@@ -87,11 +108,21 @@ def _time_us(fn, args, reps: int) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _geomean(vals):
+    g = 1.0
+    for v in vals:
+        g *= v
+    return g ** (1.0 / len(vals))
+
+
 def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
     rows = []
     bw = V5E.hbm_gbps * 1e9
-    for name, fn, args in _cases():
-        plan = offload_report(fn, *args, bulk_threshold=4096)
+    for name, fn, args, donate in _cases():
+        # the modeled-traffic plan includes invar donation; the timed
+        # executable does NOT donate (the timing loop reuses its inputs)
+        plan = offload_report(fn, *args, bulk_threshold=4096,
+                              donate_argnums=donate)
 
         compiled = mpu_offload(fn, bulk_threshold=4096)
         interpreted = mpu_offload_interpreted(fn, bulk_threshold=4096)
@@ -105,6 +136,8 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
             "segments": len(plan.segments),
             "naive_mb": plan.naive_hbm_bytes / 1e6,
             "fused_mb": plan.fused_hbm_bytes / 1e6,
+            "donated_mb": plan.donated_hbm_bytes / 1e6,
+            "effective_mb": plan.effective_hbm_bytes / 1e6,
             "traffic_reduction": plan.traffic_reduction,
             "naive_us_v5e": plan.naive_hbm_bytes / bw * 1e6,
             "fused_us_v5e": plan.fused_hbm_bytes / bw * 1e6,
@@ -114,32 +147,62 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
             "retraces": st["traces"],          # must stay 1: plan baked in
             "plan_hits": st["plan_hits"],
             "plan_misses": st["plan_misses"],
+            "plan_evictions": st["evictions"],
         })
 
     mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
-    speedups = [r["compiled_speedup"] for r in rows]
-    geomean = 1.0
-    for s in speedups:
-        geomean *= s
-    geomean **= 1.0 / len(speedups)
     summary = {
+        "schema_version": SCHEMA_VERSION,
         "mean_traffic_reduction": mean_traffic,
-        "geomean_compiled_speedup": geomean,
+        "geomean_compiled_speedup": _geomean(
+            [r["compiled_speedup"] for r in rows]),
+        "geomean_fused_mb": _geomean([r["fused_mb"] for r in rows]),
+        "geomean_effective_mb": _geomean([r["effective_mb"] for r in rows]),
         "max_retraces": max(r["retraces"] for r in rows),
         "backend": jax.default_backend(),
     }
 
     if write_artifact:
         ARTIFACT.write_text(json.dumps(
-            {"rows": rows, "summary": summary}, indent=2))
+            {"schema_version": SCHEMA_VERSION, "rows": rows,
+             "summary": summary}, indent=2))
     return rows, summary
 
 
+def check_regressions(rows, baseline: dict | None = None) -> list[str]:
+    """Chains that must fuse but report zero segments, plus chains whose
+    (deterministic, plan-derived) traffic_reduction dropped vs the
+    committed artifact."""
+    bad = [f"{r['chain']} fuses 0 segments" for r in rows
+           if r["chain"] in MUST_FUSE and r["segments"] == 0]
+    base = {r["chain"]: r for r in (baseline or {}).get("rows", [])}
+    for r in rows:
+        b = base.get(r["chain"])
+        if b and r["traffic_reduction"] < b["traffic_reduction"] * 0.98:
+            bad.append(f"{r['chain']} traffic {r['traffic_reduction']:.2f}x"
+                       f" < baseline {b['traffic_reduction']:.2f}x")
+    return bad
+
+
+def _load_baseline() -> dict | None:
+    if not ARTIFACT.exists():
+        return None
+    try:
+        prev = json.loads(ARTIFACT.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    return prev if prev.get("schema_version") == SCHEMA_VERSION else None
+
+
 if __name__ == "__main__":
-    rows, summary = run()
+    smoke = "--smoke" in sys.argv[1:]
+    baseline = _load_baseline()      # before run() overwrites the artifact
+    rows, summary = run(reps=5 if smoke else 30,
+                        interp_reps=2 if smoke else 5)
     for r in rows:
         print(f"{r['chain']:14s} segs={r['segments']} "
               f"traffic={r['traffic_reduction']:.2f}x "
+              f"donated={r['donated_mb']:6.2f}MB "
               f"interp={r['interpreted_us']:9.1f}us "
               f"compiled={r['compiled_us']:8.1f}us "
               f"speedup={r['compiled_speedup']:7.1f}x "
@@ -147,4 +210,10 @@ if __name__ == "__main__":
     print(f"geomean compiled speedup: "
           f"{summary['geomean_compiled_speedup']:.1f}x "
           f"(traffic {summary['mean_traffic_reduction']:.2f}x, "
+          f"modeled geomean {summary['geomean_fused_mb']:.2f}MB fused / "
+          f"{summary['geomean_effective_mb']:.2f}MB after donation, "
           f"artifact: {ARTIFACT.name})")
+    regressed = check_regressions(rows, baseline)
+    if regressed:
+        print("FUSION REGRESSION: " + "; ".join(regressed), file=sys.stderr)
+        sys.exit(1)

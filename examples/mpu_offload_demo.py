@@ -41,6 +41,8 @@ def main():
     print(f"HBM traffic: naive {plan.naive_hbm_bytes/1e6:.1f}MB -> fused "
           f"{plan.fused_hbm_bytes/1e6:.1f}MB "
           f"({plan.traffic_reduction:.2f}x reduction)")
+    print(f"boundary donation: {plan.donated_hbm_bytes/1e6:.1f}MB reused "
+          f"in place (effective {plan.effective_hbm_bytes/1e6:.1f}MB)")
 
     fused = mpu_offload(gelu_mlp_epilogue)
     err = jnp.max(jnp.abs(fused(x, w, b, res)

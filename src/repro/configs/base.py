@@ -258,6 +258,7 @@ class TrainConfig:
     # near-bank instruction offload (compile-time jaxpr rewrite, §IV-B1)
     offload: bool = False
     offload_bulk_threshold: int = 1024
+    offload_max_plans: int = 128  # LRU bound on cached offload plans
     # distributed-optimization knobs
     zero3: bool = True  # shard params/opt-state over the data axis
     grad_compression: Literal["none", "int8"] = "none"

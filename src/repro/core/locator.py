@@ -41,6 +41,19 @@ ELEMENTWISE_PRIMS = {
     "shift_right_logical", "shift_right_arithmetic",
 }
 
+# layout-only primitives the segmenter may absorb into a near-bank
+# segment (§IV-B3 multiple-activated-row-buffers: these move no data once
+# operands are viewed as [rows, lanes] blocks — broadcasts become
+# per-block index remaps, lane splits/concats become block-column
+# slices).  They are not ALU work (the planner does not count them
+# toward ``min_segment``) and they are not near-eligible on their own;
+# ``repro.core.offload.plan_offload`` admits them only when the 2-D
+# block views of their operands line up with the surrounding segment.
+LAYOUT_PRIMS = {
+    "broadcast_in_dim", "reshape", "squeeze", "expand_dims",
+    "concatenate", "slice",
+}
+
 # far-bank-only opcode set (hardware policy step 1): MXU / data-movement /
 # control primitives that need the full far pipeline (TPU: the MXU and
 # XLA's gather/scatter/sort machinery)

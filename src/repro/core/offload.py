@@ -1,49 +1,70 @@
 """The instruction offload engine (§IV-B1) as a compile-time jaxpr
-rewriter with a plan cache.
+rewriter with a bounded plan cache.
 
 The paper's backend decides offloading *once, at compile time* (§V): the
 location annotator (Algorithm 1, repro.core.locator) marks each
 instruction near/far, and the backend emits offload descriptors into the
 compiled program.  This module mirrors that architecture for JAX:
 
+  flatten once  trivially-inlinable call eqns (``pjit``-wrapped
+                elementwise helpers like ``jax.nn.silu``, and
+                ``custom_jvp/vjp`` bodies, which have no generic bind
+                path) are spliced into the caller so near chains are not
+                cut at call boundaries
   trace once    ``jax.make_jaxpr(fn)`` on the call's avals
   plan once     ``plan_offload`` segments the jaxpr into maximal
-                near-bank runs (contiguous elementwise value-chain eqns
-                over one bulk shape)
+                near-bank runs.  Segments are *cross-shape*: every
+                operand carries its own 2-D block view ([rows, lanes])
+                and an index-map role — ``bulk`` (tiled over rows),
+                ``param`` (one broadcast block), ``rep``/``tile``
+                (row-broadcast operands such as [B,1,D] against
+                [B,S,D]) — and lane-axis layout prims
+                (``broadcast_in_dim``/``reshape``/``slice``/
+                ``concatenate``, see locator.LAYOUT_PRIMS) are absorbed
+                instead of ending the segment.  Segment inputs that die
+                at the segment are donated: the fused kernel is emitted
+                with Pallas ``input_output_aliases`` so boundary buffers
+                between consecutive segments are reused in place
+                (§IV-B3's multiple-activated-row-buffers analogue).
   rewrite once  ``_build_runner`` bakes every decision into a list of
                 step closures — each near segment becomes ONE fused
-                Pallas launch (repro.kernels.ops.fused_segment: one HBM
-                read per operand, one write per output, intermediates in
-                VMEM), far eqns re-bind unchanged, and ``scan`` /
-                ``pjit`` / ``custom_jvp_call`` bodies are rewritten
-                recursively *at rewrite time*, not per iteration
+                Pallas launch (repro.kernels.ops.fused_segment_grid: one
+                HBM read per operand, one write per output,
+                intermediates in VMEM), far eqns re-bind unchanged,
+                ``scan``/``closed_call`` bodies are rewritten
+                recursively *at rewrite time*, and non-trivial ``pjit``
+                eqns are re-emitted as ``jax.jit`` calls so their
+                fully-specified ``in_shardings``/``out_shardings`` and
+                ``donated_invars`` survive the rewrite (partially
+                specified sharding tuples are dropped — see ROADMAP)
   execute fast  the runner is staged through ``jax.jit`` — after the
                 first call the near/far split lives inside one compiled
                 XLA executable; no Python interpretation remains on the
                 hot path
 
 ``mpu_offload(fn)`` returns a drop-in replacement for ``fn`` that caches
-compiled runners keyed by the hashable aval signature of the arguments
-(tree structure + shape/dtype/weak-type per leaf).  The wrapper is
-itself ``jax.jit``-able and composes with the serving engine's jitted
-decode step and the training step.  Cache behaviour is observable via
-``wrapped.stats`` (plan hits/misses, trace count) — a second call with
-identical avals performs zero re-planning and zero re-tracing.
+compiled runners keyed by the hashable aval signature of the arguments.
+The cache is an LRU bounded by ``max_plans`` (serving with many shapes
+stays bounded); hits, misses, evictions and traces are observable via
+``wrapped.stats``.  ``donate_argnums`` marks positional arguments whose
+buffers may be reused by fused segments (same contract as ``jax.jit``
+donation: pass fresh buffers on subsequent calls).
 
 ``rewrite_offload`` exposes the rewritten ``ClosedJaxpr`` itself — the
 compile-time artefact in which each near segment appears as a single
-``pallas_call``-backed eqn.  ``offload_report`` (unchanged API) returns
-the plan with the paper's TSV-style traffic accounting: naive per-eqn
-HBM bytes vs post-fusion bytes.
+``pallas_call``-backed eqn carrying its ``input_output_aliases``.
+``offload_report`` returns the plan with the paper's TSV-style traffic
+accounting: naive per-eqn HBM bytes vs post-fusion bytes, plus the bytes
+whose round-trip is eliminated by segment-boundary donation.
 
 The legacy per-call interpreter is kept as ``execute_offloaded`` /
-``mpu_offload_interpreted`` solely as the benchmark baseline
-(benchmarks/offload_bench.py measures interpreted-vs-compiled wall
-time); it is not used on any production path.
+``mpu_offload_interpreted`` solely as the benchmark baseline; it is not
+used on any production path.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -54,25 +75,89 @@ from jax.extend import core as jcore
 from repro.core.isa import Loc
 from repro.core.locator import (
     ELEMENTWISE_PRIMS,
+    LAYOUT_PRIMS,
     JaxprAnnotation,
     annotate_jaxpr,
 )
 from repro.kernels import ops as kops
 
 
+# ---------------------------------------------------------------------------
+# 2-D block views: every segment value is a [rows, lanes] tile.
+# ---------------------------------------------------------------------------
+
+def _bulk_view(shape: Sequence[int]) -> tuple[int, int]:
+    """[*, C] -> (prod(leading), C); rank-1 [N] is a column (N, 1)."""
+    shape = tuple(shape)
+    if len(shape) >= 2:
+        r = 1
+        for d in shape[:-1]:
+            r *= d
+        return r, shape[-1]
+    if len(shape) == 1:
+        return shape[0], 1
+    return 1, 1
+
+
+def _lane(shape: Sequence[int]) -> int:
+    return shape[-1] if len(shape) else 1
+
+
+def _is_param_shape(shape: Sequence[int]) -> bool:
+    """Broadcastable to any row count: all leading dims are 1."""
+    return all(d == 1 for d in tuple(shape)[:-1])
+
+
+@dataclass(frozen=True)
+class OperandSpec:
+    """How one segment input is blocked by the fused kernel.
+
+    role:
+      * ``bulk``  — [rows, cols], tiled over the row grid
+      * ``param`` — [1, cols], the same block broadcast to every step
+      * ``rep``   — [op_rows, cols]; each row repeated rows/op_rows
+                    times (suffix broadcast, e.g. [B,1,D] vs [B,S,D])
+      * ``tile``  — [op_rows, cols]; rows cycle with period op_rows
+                    (prefix broadcast, e.g. [1,S,D] vs [B,S,D])
+    """
+
+    var: Any
+    role: str
+    rows: int
+    cols: int
+
+    @property
+    def meta(self) -> tuple[str, int, int]:
+        return (self.role, self.rows, self.cols)
+
+
 @dataclass
 class Segment:
-    """A maximal near-bank subgraph: contiguous eqn indices, one bulk shape."""
+    """A maximal near-bank subgraph with per-operand block views."""
 
-    eqn_idx: list[int]
-    bulk_shape: tuple[int, ...]
-    bulk_inputs: list[Any]    # vars of shape == bulk_shape
-    param_inputs: list[Any]   # rank-1 [C] / scalar vars
-    outputs: list[Any]        # vars needed outside the segment
+    eqn_idx: list[int]            # eqns fused into the kernel
+    rows: int                     # shared row count of the 2-D views
+    bulk_shape: tuple[int, ...]   # anchor shape (first bulk output)
+    operand_specs: list[OperandSpec]
+    outputs: list[Any]            # vars needed outside the segment
+    out_cols: list[int]
+    donations: list[tuple[int, int]]  # (operand idx, output idx) aliases
+    pre_eqns: list[int]           # ejected layout eqns run before the call
+    n_compute: int                # ALU eqns (layout prims excluded)
+    span_start: int
+    span_end: int
 
     @property
     def n_eqns(self) -> int:
         return len(self.eqn_idx)
+
+    @property
+    def bulk_inputs(self) -> list[Any]:
+        return [s.var for s in self.operand_specs if s.role != "param"]
+
+    @property
+    def param_inputs(self) -> list[Any]:
+        return [s.var for s in self.operand_specs if s.role == "param"]
 
 
 @dataclass
@@ -81,11 +166,19 @@ class OffloadPlan:
     segments: list[Segment]
     naive_hbm_bytes: int
     fused_hbm_bytes: int
+    donated_hbm_bytes: int = 0
     inner_plans: list["OffloadPlan"] = field(default_factory=list)
 
     @property
     def traffic_reduction(self) -> float:
         return self.naive_hbm_bytes / max(self.fused_hbm_bytes, 1)
+
+    @property
+    def effective_hbm_bytes(self) -> int:
+        """Fused traffic minus boundary buffers donated in place.
+        Modeled assuming the kernel grid tiles each segment's rows
+        exactly; the launcher drops aliases when it must pad."""
+        return max(self.fused_hbm_bytes - self.donated_hbm_bytes, 0)
 
     @property
     def total_segments(self) -> int:
@@ -101,152 +194,25 @@ class OffloadStats:
     plan_hits: int = 0
     plan_misses: int = 0
     traces: int = 0
+    evictions: int = 0
 
     def as_dict(self) -> dict[str, int]:
         return dataclasses.asdict(self)
 
     def reset(self) -> None:
         self.plan_hits = self.plan_misses = self.traces = 0
+        self.evictions = 0
 
 
 def _dtype_size(aval) -> int:
     return aval.size * aval.dtype.itemsize
 
 
-def _param_ok(aval, c: int) -> bool:
-    """Rank-1 [C] vectors or scalars ride along as broadcast params."""
-    if aval.ndim == 0:
-        return True
-    return aval.ndim == 1 and aval.shape[0] == c
+# ---------------------------------------------------------------------------
+# Call flattening: splice trivially-inlinable call bodies into the caller
+# so near chains are not cut at pjit boundaries (jax.nn.silu & friends).
+# ---------------------------------------------------------------------------
 
-
-def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
-                 min_segment: int = 2) -> OffloadPlan:
-    """Algorithm-1 annotation + maximal near-segment extraction.
-
-    Pure planning: no execution, no recursion into call bodies (the
-    rewriter recurses and records the inner plans it builds)."""
-    ann = annotate_jaxpr(closed, bulk_threshold=bulk_threshold)
-    jaxpr = closed.jaxpr
-    eqns = jaxpr.eqns
-
-    # which vars are consumed by which eqn (for output liveness)
-    consumers: dict[Any, list[int]] = {}
-    for i, eqn in enumerate(eqns):
-        for v in eqn.invars:
-            if not isinstance(v, jcore.Literal):
-                consumers.setdefault(v, []).append(i)
-    outvar_set = {v for v in jaxpr.outvars if not isinstance(v, jcore.Literal)}
-
-    segments: list[Segment] = []
-    current: list[int] = []
-    cur_shape: tuple[int, ...] | None = None
-
-    def flush():
-        nonlocal current, cur_shape
-        if len(current) >= min_segment:
-            seg_set = set(current)
-            produced = {v for i in current for v in eqns[i].outvars}
-            bulk_in, param_in, seen = [], [], set()
-            c = cur_shape[-1] if len(cur_shape) > 0 else 1
-            for i in current:
-                for v in eqns[i].invars:
-                    if isinstance(v, jcore.Literal) or v in produced or \
-                            v in seen:
-                        continue
-                    seen.add(v)
-                    if tuple(v.aval.shape) == cur_shape:
-                        bulk_in.append(v)
-                    else:
-                        param_in.append(v)
-            outputs = [
-                v for i in current for v in eqns[i].outvars
-                if v in outvar_set or any(ci not in seg_set
-                                          for ci in consumers.get(v, []))
-            ]
-            segments.append(Segment(list(current), cur_shape, bulk_in,
-                                    param_in, outputs))
-        current, cur_shape = [], None
-
-    for i, eqn in enumerate(eqns):
-        loc = ann.eqn_loc[i]
-        name = eqn.primitive.name
-        offloadable = (
-            loc in (Loc.N, Loc.B)
-            and name in ELEMENTWISE_PRIMS
-            and all(len(v.aval.shape) <= len(eqn.outvars[0].aval.shape)
-                    for v in eqn.invars if not isinstance(v, jcore.Literal))
-            and eqn.outvars[0].aval.size >= bulk_threshold
-        )
-        if offloadable:
-            shape = tuple(eqn.outvars[0].aval.shape)
-            c = shape[-1]
-            operands_ok = all(
-                isinstance(v, jcore.Literal)
-                or tuple(v.aval.shape) == shape
-                or _param_ok(v.aval, c)
-                for v in eqn.invars
-            )
-            if operands_ok:
-                if cur_shape is None:
-                    cur_shape = shape
-                if shape == cur_shape:
-                    current.append(i)
-                    continue
-                flush()
-                cur_shape = shape
-                current = [i]
-                continue
-        flush()
-    flush()
-
-    # traffic accounting (the TSV analogue): naive = every eqn round-trips
-    # HBM; fused = segment boundary tensors only.
-    seg_eqns = {i for s in segments for i in s.eqn_idx}
-    naive = fused = 0
-    for i, eqn in enumerate(eqns):
-        io_bytes = sum(
-            _dtype_size(v.aval) for v in (*eqn.invars, *eqn.outvars)
-            if not isinstance(v, jcore.Literal))
-        naive += io_bytes
-        if i not in seg_eqns:
-            fused += io_bytes
-    for s in segments:
-        fused += sum(_dtype_size(v.aval) for v in
-                     (*s.bulk_inputs, *s.param_inputs, *s.outputs))
-    return OffloadPlan(ann, segments, naive, fused)
-
-
-def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
-    """Build the fused near-bank function for a segment (executed inside
-    the Pallas kernel on VMEM blocks)."""
-
-    def fn(*vals):
-        env: dict[Any, Any] = {}
-        for var, val in zip((*seg.bulk_inputs, *seg.param_inputs), vals):
-            env[var] = val
-
-        def read(v):
-            return v.val if isinstance(v, jcore.Literal) else env[v]
-
-        for i in seg.eqn_idx:
-            eqn = eqns[i]
-            out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
-                                     **eqn.params)
-            outs = out if eqn.primitive.multiple_results else (out,)
-            for var, val in zip(eqn.outvars, outs):
-                env[var] = val
-        return tuple(env[v] for v in seg.outputs)
-
-    return fn
-
-
-# call-like primitives whose body jaxpr the rewriter inlines (rewritten
-# recursively at compile time).  ``custom_jvp_call`` / ``custom_vjp_call``
-# have no generic bind path, so inlining their body jaxpr is also a
-# correctness requirement.  (``custom_vjp_call_jaxpr`` — the old-JAX
-# spelling — does re-bind generically and keeps its vjp rule, so it is
-# deliberately absent.)
 _CALL_BODY_PARAM = {
     "pjit": "jaxpr",
     "closed_call": "call_jaxpr",
@@ -255,47 +221,579 @@ _CALL_BODY_PARAM = {
 }
 
 
-def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
-                  min_segment: int, impl: str
-                  ) -> tuple[Callable, OffloadPlan]:
-    """The compile-time pass: plan once, then bake every offload decision
-    into a flat list of step closures.
+def _unspecified(s) -> bool:
+    return type(s).__name__ == "UnspecifiedValue"
 
-    Returns ``(run, plan)`` where ``run(consts, args)`` is a pure,
-    jit-traceable function: near segments dispatch to
-    ``kops.fused_segment``, scan bodies carry a pre-rewritten body
-    runner, and everything else re-binds its primitive unchanged."""
-    plan = plan_offload(closed, bulk_threshold=bulk_threshold,
-                        min_segment=min_segment)
+
+def _inline_body(eqn) -> Any | None:
+    """The ClosedJaxpr to splice in place of ``eqn``, or None.
+
+    ``custom_jvp_call``/``custom_vjp_call``/``closed_call`` have no
+    generic re-bind path under trace, so their bodies are always inlined
+    (the offload trace is post-grad; PR 1's runner made the same call).
+    A ``pjit`` is inlined only when it carries no shardings or donation
+    AND its body is purely elementwise/layout eqns — anything else keeps
+    its call boundary (pjit fidelity is preserved separately by the
+    runner's re-emitted ``jax.jit``)."""
+    name = eqn.primitive.name
+    if name not in _CALL_BODY_PARAM:
+        return None
+    body = eqn.params.get(_CALL_BODY_PARAM[name])
+    if body is None:
+        return None
+    if name in ("custom_jvp_call", "custom_vjp_call", "closed_call"):
+        return body
+    if name == "pjit":
+        if any(not _unspecified(s) for s in eqn.params.get("in_shardings", ())):
+            return None
+        if any(not _unspecified(s)
+               for s in eqn.params.get("out_shardings", ())):
+            return None
+        if any(eqn.params.get("donated_invars", ())):
+            return None
+    for e in body.jaxpr.eqns:
+        n = e.primitive.name
+        if n in ELEMENTWISE_PRIMS or n in LAYOUT_PRIMS:
+            continue
+        if _inline_body(e) is not None:
+            continue
+        return None
+    return body
+
+
+def _flatten_calls(closed: jcore.ClosedJaxpr) -> jcore.ClosedJaxpr:
+    """jaxpr -> jaxpr with inlinable call eqns spliced into the caller.
+
+    Implemented as a functional re-trace (eqn-by-eqn re-bind under
+    ``make_jaxpr``) so no JaxprEqn surgery is needed; runs once per plan
+    compile.  Invar order and avals are preserved."""
+    if not any(_inline_body(e) is not None for e in closed.jaxpr.eqns):
+        return closed
+
+    def ev(c, args):
+        env: dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for var, val in zip(c.jaxpr.constvars, c.consts):
+            env[var] = val
+        for var, val in zip(c.jaxpr.invars, args):
+            env[var] = val
+        for eqn in c.jaxpr.eqns:
+            body = _inline_body(eqn)
+            if body is not None:
+                outs = ev(body, [read(v) for v in eqn.invars])
+            else:
+                out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                         **eqn.params)
+                outs = out if eqn.primitive.multiple_results else (out,)
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
+        return tuple(read(v) for v in c.jaxpr.outvars)
+
+    avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+             for v in closed.jaxpr.invars]
+    return jax.make_jaxpr(lambda *a: ev(closed, a))(*avals)
+
+
+# ---------------------------------------------------------------------------
+# Planning: maximal cross-shape near segments over 2-D block views.
+# ---------------------------------------------------------------------------
+
+def _classify_operand(shape: tuple[int, ...], out_shape: tuple[int, ...],
+                      rows: int) -> tuple[str, int, int] | None:
+    """Block view of an elementwise operand vs its eqn's output, or None
+    if the broadcast pattern is not expressible as a 2-D index map."""
+    if shape == out_shape:
+        r, c = _bulk_view(shape)
+        return ("bulk", r, c)
+    n = len(out_shape)
+    if len(shape) == n and n >= 1:
+        if any(d not in (1, od) for d, od in zip(shape, out_shape)):
+            return None
+        lead = shape[:-1]
+        if all(d == 1 for d in lead):
+            return ("param", 1, shape[-1])
+        r_op = 1
+        for d in lead:
+            r_op *= d
+        cols = shape[-1]
+        if r_op == rows:
+            return ("bulk", rows, cols)      # lane broadcast [..., 1]
+        k = len(lead)
+        while k > 0 and lead[k - 1] == 1:
+            k -= 1
+        if lead[:k] == out_shape[:k]:        # [B, 1, D]-style suffix bcast
+            return ("rep", r_op, cols)
+        j = 0
+        while j < len(lead) and lead[j] == 1:
+            j += 1
+        if lead[j:] == out_shape[j:n - 1]:   # [1, S, D]-style prefix bcast
+            return ("tile", r_op, cols)
+        return None
+    if _is_param_shape(shape):
+        return ("param", 1, _lane(shape))
+    return None
+
+
+def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
+                 min_segment: int = 2,
+                 donate_invars: frozenset = frozenset()) -> OffloadPlan:
+    """Algorithm-1 annotation + maximal cross-shape segment extraction.
+
+    Pure planning on the given (already-flattened) jaxpr: no execution,
+    no recursion into call bodies.  ``donate_invars`` marks jaxpr invars
+    whose buffers may be aliased into segment outputs (from the
+    wrapper's ``donate_argnums``); intermediates that die at a segment
+    are always donation candidates."""
+    ann = annotate_jaxpr(closed, bulk_threshold=bulk_threshold)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
-    seg_by_start = {s.eqn_idx[0]: s for s in plan.segments}
 
-    def recurse(inner: jcore.ClosedJaxpr) -> Callable:
-        inner_run, inner_plan = _build_runner(
+    consumers: dict[Any, list[int]] = {}
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not isinstance(v, jcore.Literal):
+                consumers.setdefault(v, []).append(i)
+    outvar_set = {v for v in jaxpr.outvars if not isinstance(v, jcore.Literal)}
+    constvar_set = set(jaxpr.constvars)
+    invar_set = set(jaxpr.invars)
+
+    segments: list[Segment] = []
+    # mutable run state
+    current: list[int] = []
+    cur_rows: int | None = None
+    n_compute = 0
+    anchor: tuple[int, ...] | None = None
+    specs: dict[Any, tuple[str, int, int]] = {}   # external operand views
+    produced: dict[Any, tuple[str, int]] = {}     # var -> (kind, cols)
+    param_out_set: set[int] = set()
+
+    def reset():
+        nonlocal current, cur_rows, n_compute, anchor, specs, produced, \
+            param_out_set
+        current, cur_rows, n_compute, anchor = [], None, 0, None
+        specs, produced, param_out_set = {}, {}, set()
+
+    def _merge_spec(new_specs, v, cls) -> bool:
+        old = specs.get(v) or new_specs.get(v)
+        if old is not None and old != cls:
+            return False
+        new_specs[v] = cls
+        return True
+
+    def try_admit_elementwise(i, eqn) -> bool:
+        nonlocal cur_rows, n_compute, anchor
+        if ann.eqn_loc[i] not in (Loc.N, Loc.B) or len(eqn.outvars) != 1:
+            return False
+        out = eqn.outvars[0]
+        if out.aval.size < bulk_threshold:
+            return False
+        oshape = tuple(out.aval.shape)
+        r_out, c_out = _bulk_view(oshape)
+        rows = r_out if cur_rows is None else cur_rows
+        if r_out != rows:
+            return False
+        new_specs: dict[Any, tuple[str, int, int]] = {}
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal) or v in produced:
+                continue
+            cls = _classify_operand(tuple(v.aval.shape), oshape, rows)
+            if cls is None or not _merge_spec(new_specs, v, cls):
+                return False
+        specs.update(new_specs)
+        produced[out] = ("bulk", c_out)
+        cur_rows = rows
+        if anchor is None:
+            anchor = oshape
+        current.append(i)
+        n_compute += 1
+        return True
+
+    def _full_leading_slice(eqn, ishape) -> bool:
+        start = eqn.params["start_indices"]
+        limit = eqn.params["limit_indices"]
+        strides = eqn.params.get("strides") or (1,) * len(start)
+        return all(start[d] == 0 and limit[d] == ishape[d]
+                   and strides[d] == 1 for d in range(len(ishape) - 1))
+
+    def try_admit_layout(i, eqn) -> bool:
+        nonlocal cur_rows, n_compute, anchor
+        name = eqn.primitive.name
+        out = eqn.outvars[0]
+        if not jnp.issubdtype(out.aval.dtype, jnp.floating):
+            return False
+        oshape = tuple(out.aval.shape)
+        # rank-1 [N] is a bulk column view (N, 1), not a param: the
+        # all-leading-dims-1 test is vacuously true for rank 1, so gate
+        # it out explicitly (e.g. jnp.full-style scalar->[N] broadcasts)
+        param_out = (_is_param_shape(oshape) and cur_rows != 1
+                     and not (len(oshape) == 1 and oshape[0] > 1))
+
+        if param_out:
+            # tiny layout eqn over broadcast params ([C] -> [1,C] etc);
+            # operands must be external so the eqn can be ejected and run
+            # ahead of the kernel if its output escapes the segment.
+            new_specs: dict[Any, tuple[str, int, int]] = {}
+            for v in eqn.invars:
+                if isinstance(v, jcore.Literal):
+                    continue
+                if v in produced:
+                    return False
+                vshape = tuple(v.aval.shape)
+                if not _is_param_shape(vshape):
+                    return False
+                if not _merge_spec(new_specs, v, ("param", 1, _lane(vshape))):
+                    return False
+            if name == "broadcast_in_dim":
+                ishape = tuple(eqn.invars[0].aval.shape)
+                bdims = eqn.params["broadcast_dimensions"]
+                if _lane(ishape) > 1 and (
+                        not bdims or bdims[-1] != len(oshape) - 1
+                        or oshape[-1] != ishape[-1]):
+                    return False
+            elif name in ("reshape", "squeeze", "expand_dims"):
+                if name == "reshape" and eqn.params.get("dimensions"):
+                    return False
+                if _lane(tuple(eqn.invars[0].aval.shape)) != _lane(oshape):
+                    return False
+            elif name == "slice":
+                ishape = tuple(eqn.invars[0].aval.shape)
+                if not _full_leading_slice(eqn, ishape):
+                    return False
+            elif name == "concatenate":
+                if eqn.params["dimension"] != len(oshape) - 1:
+                    return False
+            else:
+                return False
+            specs.update(new_specs)
+            produced[out] = ("param", _lane(oshape))
+            param_out_set.add(i)
+            current.append(i)
+            return True
+
+        # bulk-out layout eqn
+        if out.aval.size < bulk_threshold:
+            return False
+        r_out, c_out = _bulk_view(oshape)
+        rows = r_out if cur_rows is None else cur_rows
+        if r_out != rows:
+            return False
+        if len(oshape) < 2 and name in ("slice", "concatenate"):
+            return False                  # rank-1 lane == row axis
+        new_specs = {}
+
+        def external_bulk(v, want_cols=None) -> bool:
+            vshape = tuple(v.aval.shape)
+            r_in, c_in = _bulk_view(vshape)
+            if r_in != rows or (want_cols is not None and c_in != want_cols):
+                return False
+            return _merge_spec(new_specs, v, ("bulk", rows, c_in))
+
+        if name == "broadcast_in_dim":
+            v = eqn.invars[0]
+            ishape = tuple(v.aval.shape)
+            bdims = tuple(eqn.params["broadcast_dimensions"])
+            if isinstance(v, jcore.Literal):
+                if not _is_param_shape(ishape):
+                    return False
+            elif _is_param_shape(ishape):
+                if _lane(ishape) > 1 and (
+                        not bdims or bdims[-1] != len(oshape) - 1
+                        or oshape[-1] != ishape[-1]):
+                    return False
+                if v in produced:
+                    if produced[v][0] != "param":
+                        return False
+                elif not _merge_spec(
+                        new_specs, v, ("param", 1, _lane(ishape))):
+                    return False
+            else:
+                if bdims != tuple(range(len(oshape) - len(ishape),
+                                        len(oshape))):
+                    return False
+                if v in produced:
+                    if produced[v][0] != "bulk":
+                        return False
+                elif not external_bulk(v):
+                    return False
+        elif name in ("reshape", "squeeze", "expand_dims"):
+            if name == "reshape" and eqn.params.get("dimensions"):
+                return False
+            v = eqn.invars[0]
+            if isinstance(v, jcore.Literal):
+                return False
+            if _bulk_view(tuple(v.aval.shape)) != (rows, c_out):
+                return False
+            if v in produced:
+                if produced[v] != ("bulk", c_out):
+                    return False
+            elif not external_bulk(v, want_cols=c_out):
+                return False
+        elif name == "slice":
+            v = eqn.invars[0]
+            ishape = tuple(v.aval.shape)
+            if isinstance(v, jcore.Literal):
+                return False
+            if len(ishape) != len(oshape) or not _full_leading_slice(
+                    eqn, ishape):
+                return False
+            if v in produced:
+                if produced[v][0] != "bulk":
+                    return False
+            elif not external_bulk(v):
+                return False
+        elif name == "concatenate":
+            if eqn.params["dimension"] != len(oshape) - 1:
+                return False
+            for v in eqn.invars:
+                if isinstance(v, jcore.Literal):
+                    return False
+                vshape = tuple(v.aval.shape)
+                if vshape[:-1] != oshape[:-1]:
+                    return False
+                if v in produced:
+                    if produced[v][0] != "bulk":
+                        return False
+                elif not external_bulk(v):
+                    return False
+        else:
+            return False
+
+        specs.update(new_specs)
+        produced[out] = ("bulk", c_out)
+        cur_rows = rows
+        if anchor is None:
+            anchor = oshape
+        current.append(i)
+        return True
+
+    def try_admit(i, eqn) -> bool:
+        name = eqn.primitive.name
+        if name in ELEMENTWISE_PRIMS:
+            return try_admit_elementwise(i, eqn)
+        if name in LAYOUT_PRIMS:
+            return try_admit_layout(i, eqn)
+        return False
+
+    def flush():
+        if n_compute < min_segment:
+            reset()
+            return
+        seg_idx = list(current)
+        seg_set = set(seg_idx)
+        span_start, span_end = seg_idx[0], seg_idx[-1]
+
+        # eject param-out layout eqns whose output escapes the segment:
+        # they run unfused just ahead of the kernel (their operands are
+        # external by construction), and their output becomes a plain
+        # segment input where consumed inside.
+        pre: list[int] = []
+        for i in sorted(param_out_set):
+            ov = eqns[i].outvars[0]
+            if ov in outvar_set or any(ci not in seg_set
+                                       for ci in consumers.get(ov, [])):
+                seg_set.discard(i)
+                pre.append(i)
+        seg_idx = [i for i in seg_idx if i in seg_set]
+
+        produced_f: dict[Any, tuple[str, int]] = {}
+        for i in seg_idx:
+            out = eqns[i].outvars[0]
+            produced_f[out] = produced[out]
+
+        operand_specs: list[OperandSpec] = []
+        seen: set[Any] = set()
+        for i in seg_idx:
+            for v in eqns[i].invars:
+                if isinstance(v, jcore.Literal) or v in produced_f or \
+                        v in seen:
+                    continue
+                seen.add(v)
+                cls = specs.get(v)
+                if cls is None:         # output of an ejected layout eqn
+                    cls = ("param", 1, _lane(tuple(v.aval.shape)))
+                operand_specs.append(OperandSpec(v, *cls))
+
+        outputs, out_cols = [], []
+        for i in seg_idx:
+            v = eqns[i].outvars[0]
+            if v in outvar_set or any(ci not in seg_set
+                                      for ci in consumers.get(v, [])):
+                kind, cols = produced_f[v]
+                assert kind == "bulk", "segment outputs must be bulk"
+                outputs.append(v)
+                out_cols.append(cols)
+        if not outputs:
+            reset()
+            return
+
+        # segment-boundary donation: a bulk input whose value dies at
+        # this segment may share its buffer with a matching output.
+        donations: list[tuple[int, int]] = []
+        taken: set[int] = set()
+        seg_end = seg_idx[-1]
+        for bi, sp in enumerate(operand_specs):
+            if sp.role != "bulk" or sp.var in constvar_set or \
+                    sp.var in outvar_set:
+                continue
+            if sp.var in invar_set and sp.var not in donate_invars:
+                continue
+            if any(ci > seg_end for ci in consumers.get(sp.var, ())):
+                continue
+            for oi in range(len(outputs)):
+                if oi in taken:
+                    continue
+                if out_cols[oi] == sp.cols and \
+                        outputs[oi].aval.dtype == sp.var.aval.dtype:
+                    donations.append((bi, oi))
+                    taken.add(oi)
+                    break
+
+        segments.append(Segment(
+            eqn_idx=seg_idx, rows=cur_rows, bulk_shape=anchor,
+            operand_specs=operand_specs, outputs=outputs, out_cols=out_cols,
+            donations=donations, pre_eqns=pre, n_compute=n_compute,
+            span_start=span_start, span_end=span_end))
+        reset()
+
+    for i, eqn in enumerate(eqns):
+        if try_admit(i, eqn):
+            continue
+        flush()
+        if not try_admit(i, eqn):
+            reset()
+    flush()
+
+    # traffic accounting (the TSV analogue): naive = every eqn round-trips
+    # HBM; fused = segment boundary tensors only; donated = boundary
+    # buffers reused in place via input_output_aliases.
+    seg_eqns = {i for s in segments for i in s.eqn_idx}
+    naive = fused = donated = 0
+    for i, eqn in enumerate(eqns):
+        io_bytes = sum(
+            _dtype_size(v.aval) for v in (*eqn.invars, *eqn.outvars)
+            if not isinstance(v, jcore.Literal))
+        naive += io_bytes
+        if i not in seg_eqns:
+            fused += io_bytes
+    for s in segments:
+        fused += sum(_dtype_size(sp.var.aval) for sp in s.operand_specs)
+        fused += sum(_dtype_size(v.aval) for v in s.outputs)
+        donated += sum(_dtype_size(s.outputs[oi].aval)
+                       for _, oi in s.donations)
+    return OffloadPlan(ann, segments, naive, fused, donated)
+
+
+# ---------------------------------------------------------------------------
+# Segment body: the fused near-bank function over 2-D blocks.
+# ---------------------------------------------------------------------------
+
+def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
+    """Build the fused near-bank function for a segment.
+
+    Executed inside the Pallas kernel: every value is a 2-D block —
+    bulk/tile values are [block_rows, cols] tiles, params and rep values
+    are [1, cols] — and layout prims become block-local index ops."""
+    in_vars = [s.var for s in seg.operand_specs]
+    rows = seg.rows
+
+    def fn(*vals, block_rows: int):
+        env: dict[Any, Any] = dict(zip(in_vars, vals))
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for i in seg.eqn_idx:
+            eqn = eqns[i]
+            name = eqn.primitive.name
+            ins = [read(v) for v in eqn.invars]
+            if name == "broadcast_in_dim":
+                oshape = tuple(eqn.outvars[0].aval.shape)
+                # mirror the planner's view rules: rank-1 [N] outputs
+                # are bulk columns (block_rows, 1), not [1, N] params
+                if rows > 1 and _is_param_shape(oshape) and \
+                        not (len(oshape) == 1 and oshape[0] > 1):
+                    target = (1, _lane(oshape))
+                else:
+                    target = (block_rows, _bulk_view(oshape)[1])
+                val = jnp.asarray(ins[0])
+                if val.ndim != 2:   # literal / raw param: to [1, lane] view
+                    val = val.reshape(1, -1)
+                out = jnp.broadcast_to(val, target)
+            elif name in ("reshape", "squeeze", "expand_dims"):
+                out = ins[0]              # identical 2-D view by planning
+            elif name == "slice":
+                start = eqn.params["start_indices"]
+                limit = eqn.params["limit_indices"]
+                strides = eqn.params.get("strides") or (1,) * len(start)
+                out = ins[0][:, start[-1]:limit[-1]:strides[-1]]
+            elif name == "concatenate":
+                out = jnp.concatenate([jnp.asarray(x) for x in ins], axis=-1)
+            else:
+                out = eqn.primitive.bind(*ins, **eqn.params)
+                if eqn.primitive.multiple_results:
+                    out = out[0]
+            env[eqn.outvars[0]] = out
+        return tuple(env[v] for v in seg.outputs)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# The compile-time rewriter.
+# ---------------------------------------------------------------------------
+
+def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
+                  min_segment: int, impl: str,
+                  donate_leaves: Sequence[int] = ()
+                  ) -> tuple[Callable, OffloadPlan, jcore.ClosedJaxpr]:
+    """The compile-time pass: flatten + plan once, then bake every
+    offload decision into a flat list of step closures.
+
+    Returns ``(run, plan, flat)`` where ``flat`` is the flattened
+    ClosedJaxpr the plan indexes into, and ``run(consts, args)`` is a
+    pure, jit-traceable function: near segments dispatch to
+    ``kops.fused_segment_grid`` (with donation aliases baked in), scan
+    bodies carry a pre-rewritten body runner, non-trivial pjit eqns are
+    re-emitted through ``jax.jit`` with their shardings/donation, and
+    everything else re-binds its primitive unchanged."""
+    closed = _flatten_calls(closed)
+    donate_invars = frozenset(closed.jaxpr.invars[i] for i in donate_leaves)
+    plan = plan_offload(closed, bulk_threshold=bulk_threshold,
+                        min_segment=min_segment,
+                        donate_invars=donate_invars)
+    jaxpr = closed.jaxpr
+    eqns = jaxpr.eqns
+    seg_by_start = {s.span_start: s for s in plan.segments}
+
+    def recurse(inner: jcore.ClosedJaxpr) -> tuple[Callable, tuple]:
+        inner_run, inner_plan, inner_flat = _build_runner(
             inner, bulk_threshold=bulk_threshold,
             min_segment=min_segment, impl=impl)
         plan.inner_plans.append(inner_plan)
-        return inner_run
+        return inner_run, tuple(inner_flat.consts)
 
     def make_seg_step(seg: Segment) -> Callable:
         seg_fn = _segment_fn(eqns, seg)
+        meta = tuple(s.meta for s in seg.operand_specs)
         out_dtypes = [v.aval.dtype for v in seg.outputs]
+        out_shapes = [tuple(v.aval.shape) for v in seg.outputs]
+        donate = tuple(seg.donations)
 
         def step(env, read):
-            bulk = [read(v) for v in seg.bulk_inputs]
-            params = [read(v) for v in seg.param_inputs]
-            outs = kops.fused_segment(seg_fn, bulk, params,
-                                      out_dtypes=out_dtypes, impl=impl)
-            for var, val in zip(seg.outputs, outs):
-                env[var] = val
+            vals = [read(s.var) for s in seg.operand_specs]
+            outs = kops.fused_segment_grid(
+                seg_fn, vals, meta, rows=seg.rows, out_cols=seg.out_cols,
+                out_dtypes=out_dtypes, donate=donate, impl=impl)
+            for var, val, shp in zip(seg.outputs, outs, out_shapes):
+                env[var] = val.reshape(shp)
         return step
 
     def make_scan_step(eqn) -> Callable:
         p = eqn.params
-        inner = p["jaxpr"]
-        inner_run = recurse(inner)
-        inner_consts = tuple(inner.consts)
+        inner_run, inner_consts = recurse(p["jaxpr"])
         n_consts, n_carry = p["num_consts"], p["num_carry"]
 
         def step(env, read):
@@ -316,13 +814,45 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
                 env[var] = val
         return step
 
-    def make_call_step(eqn, body_param: str) -> Callable:
-        inner = eqn.params[body_param]
-        inner_run = recurse(inner)
-        inner_consts = tuple(inner.consts)
-
+    def make_inline_call_step(eqn, inner_run, inner_consts) -> Callable:
         def step(env, read):
             outs = inner_run(inner_consts, [read(v) for v in eqn.invars])
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
+        return step
+
+    def make_pjit_step(eqn) -> Callable:
+        """Re-emit non-trivial pjit eqns through ``jax.jit`` so their
+        in/out shardings and donated invars survive the rewrite instead
+        of being dropped on inlining."""
+        inner_run, inner_consts = recurse(eqn.params["jaxpr"])
+        in_sh = eqn.params.get("in_shardings", ())
+        out_sh = eqn.params.get("out_shardings", ())
+        donated = tuple(i for i, d
+                        in enumerate(eqn.params.get("donated_invars", ()))
+                        if d)
+        # only fully-specified sharding tuples pass through: a partially
+        # specified tuple would need UnspecifiedValue placeholders that
+        # jax.jit's public API does not accept, so those are dropped
+        # (same placement loss as inlining, but donation is still kept)
+        jit_kwargs: dict[str, Any] = {}
+        if in_sh and all(not _unspecified(s) for s in in_sh):
+            jit_kwargs["in_shardings"] = tuple(in_sh)
+        if out_sh and all(not _unspecified(s) for s in out_sh):
+            jit_kwargs["out_shardings"] = tuple(out_sh)
+        if not jit_kwargs and not donated:
+            return make_inline_call_step(eqn, inner_run, inner_consts)
+
+        def call(*a):
+            return inner_run(inner_consts, a)
+
+        try:
+            jitted = jax.jit(call, donate_argnums=donated, **jit_kwargs)
+        except Exception:                 # sharding repr drift: inline
+            return make_inline_call_step(eqn, inner_run, inner_consts)
+
+        def step(env, read):
+            outs = jitted(*[read(v) for v in eqn.invars])
             for var, val in zip(eqn.outvars, outs):
                 env[var] = val
         return step
@@ -341,16 +871,20 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
     while i < len(eqns):
         if i in seg_by_start:
             seg = seg_by_start[i]
+            for j in seg.pre_eqns:
+                steps.append(make_eqn_step(eqns[j]))
             steps.append(make_seg_step(seg))
-            i = seg.eqn_idx[-1] + 1
+            i = seg.span_end + 1
             continue
         eqn = eqns[i]
         name = eqn.primitive.name
         if name == "scan":
             steps.append(make_scan_step(eqn))
-        elif name in _CALL_BODY_PARAM:
-            steps.append(make_call_step(eqn, _CALL_BODY_PARAM[name]))
+        elif name == "pjit":
+            steps.append(make_pjit_step(eqn))
         else:
+            # custom_jvp/vjp_call and closed_call never reach here: the
+            # _flatten_calls pass inlined their bodies unconditionally
             steps.append(make_eqn_step(eqn))
         i += 1
 
@@ -368,19 +902,42 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
             step(env, read)
         return tuple(read(v) for v in jaxpr.outvars)
 
-    return run, plan
+    return run, plan, closed
+
+
+def _normalize_donate(donate_argnums) -> tuple[int, ...]:
+    if isinstance(donate_argnums, int):
+        return (donate_argnums,)
+    return tuple(donate_argnums)
+
+
+def _donate_leaf_indices(args, donate: tuple[int, ...]) -> tuple[int, ...]:
+    """Map user-level donated argument positions to flat leaf indices
+    (== jaxpr invar indices) of the traced call."""
+    idx: list[int] = []
+    off = 0
+    for ai, a in enumerate(args):
+        n = len(jax.tree.leaves(a))
+        if ai in donate:
+            idx.extend(range(off, off + n))
+        off += n
+    return tuple(idx)
 
 
 def rewrite_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
-                    min_segment: int = 2, impl: str = "auto"
+                    min_segment: int = 2, impl: str = "auto",
+                    donate_argnums: int | Sequence[int] = ()
                     ) -> tuple[jcore.ClosedJaxpr, OffloadPlan]:
-    """jaxpr -> jaxpr: re-stage the runner so each near segment appears as
-    a single fused kernel eqn in the returned ``ClosedJaxpr``."""
-    run, plan = _build_runner(closed, bulk_threshold=bulk_threshold,
-                              min_segment=min_segment, impl=impl)
-    consts = tuple(closed.consts)
+    """jaxpr -> jaxpr: re-stage the runner so each near segment appears
+    as a single fused kernel eqn (carrying its ``input_output_aliases``)
+    in the returned ``ClosedJaxpr``.  ``donate_argnums`` indexes the
+    (flat) jaxpr invars whose buffers segments may alias."""
+    run, plan, flat = _build_runner(
+        closed, bulk_threshold=bulk_threshold, min_segment=min_segment,
+        impl=impl, donate_leaves=_normalize_donate(donate_argnums))
+    consts = tuple(flat.consts)
     avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
-             for v in closed.jaxpr.invars]
+             for v in flat.jaxpr.invars]
     rewritten = jax.make_jaxpr(lambda *a: run(consts, a))(*avals)
     return rewritten, plan
 
@@ -404,56 +961,89 @@ class _CompiledOffload:
     executable: Callable         # jitted flat runner
     out_tree: Any
     closed: jcore.ClosedJaxpr    # the original (pre-rewrite) jaxpr
+    run: Callable                # un-jitted runner (for re-staging)
+    flat: jcore.ClosedJaxpr      # the flattened jaxpr the plan indexes
+
+    def restage(self) -> jcore.ClosedJaxpr:
+        """The rewritten ClosedJaxpr, staged from the already-built
+        runner (no second flatten/plan/build)."""
+        consts = tuple(self.flat.consts)
+        avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                 for v in self.flat.jaxpr.invars]
+        return jax.make_jaxpr(lambda *a: self.run(consts, a))(*avals)
 
 
 def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
-                min_segment: int = 2, impl: str = "auto") -> Callable:
-    """Compile-time offload transform with a plan cache.
+                min_segment: int = 2, impl: str = "auto",
+                max_plans: int = 128,
+                donate_argnums: int | Sequence[int] = ()) -> Callable:
+    """Compile-time offload transform with a bounded plan cache.
 
     Returns ``wrapped`` such that ``wrapped(*args)``:
       1. looks up the aval signature of ``args`` in the plan cache;
       2. on miss, traces ``fn`` once, runs the rewriter once, and stages
-         the result through ``jax.jit``;
+         the result through ``jax.jit`` (evicting the least-recently-used
+         plan beyond ``max_plans`` entries);
       3. on hit (and on every later call with the same avals) dispatches
          straight into the compiled executable — zero re-planning, zero
          re-tracing.
 
+    ``donate_argnums`` marks positional arguments whose buffers fused
+    segments may reuse in place (threaded through the staged jit's
+    ``donate_argnums`` AND the kernels' ``input_output_aliases``); as
+    with ``jax.jit``, donated arguments must be fresh on every call.
+
     ``wrapped`` composes with ``jax.jit`` / donation (the inner jit
     collapses into the outer trace), and exposes:
-      * ``wrapped.stats``        — OffloadStats (plan_hits/plan_misses/traces)
+      * ``wrapped.stats``        — OffloadStats
+                                   (plan_hits/plan_misses/traces/evictions)
       * ``wrapped.plan_for(*a)`` — the OffloadPlan for a signature
       * ``wrapped.rewritten(*a)``— the rewritten ClosedJaxpr
-      * ``wrapped.cache_clear()``
+      * ``wrapped.cache_clear()`` / ``wrapped.cache_size()``
     """
-    cache: dict[Any, _CompiledOffload] = {}
+    if max_plans < 1:
+        raise ValueError("max_plans must be >= 1")
+    donate = _normalize_donate(donate_argnums)
+    cache: OrderedDict[Any, _CompiledOffload] = OrderedDict()
     stats = OffloadStats()
 
     def compile_for(args) -> _CompiledOffload:
         # one trace serves both the jaxpr and the output tree
         closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
-        run, plan = _build_runner(closed, bulk_threshold=bulk_threshold,
-                                  min_segment=min_segment, impl=impl)
-        consts = tuple(closed.consts)
+        donate_leaves = _donate_leaf_indices(args, donate)
+        run, plan, flat = _build_runner(
+            closed, bulk_threshold=bulk_threshold, min_segment=min_segment,
+            impl=impl, donate_leaves=donate_leaves)
+        consts = tuple(flat.consts)
         out_tree = jax.tree.structure(out_shape)
 
-        def flat_runner(*flat):
+        def flat_runner(*flat_args):
             stats.traces += 1  # counted once per (re)trace, not per call
-            return run(consts, flat)
+            return run(consts, flat_args)
 
-        return _CompiledOffload(plan, jax.jit(flat_runner), out_tree, closed)
+        executable = jax.jit(flat_runner,
+                             donate_argnums=tuple(donate_leaves))
+        return _CompiledOffload(plan, executable, out_tree, closed,
+                                run, flat)
 
     def entry_for(args, count: bool = True) -> tuple[_CompiledOffload, list]:
         """``count=False`` is the introspection path (plan_for/rewritten):
-        it may compile, but never perturbs the hit/miss health counters."""
+        it may compile a transient entry, but never mutates the LRU (no
+        insertion, no eviction, no recency bump) or the health counters —
+        probing a novel shape must not evict a hot compiled plan."""
         leaves, in_tree = jax.tree.flatten(args)
         key = (in_tree, tuple(_leaf_signature(l) for l in leaves))
         entry = cache.get(key)
         if entry is None:
-            if count:
-                stats.plan_misses += 1
-            entry = compile_for(args)
-            cache[key] = entry
+            if not count:
+                return compile_for(args), leaves
+            stats.plan_misses += 1
+            entry = cache[key] = compile_for(args)
+            while len(cache) > max_plans:
+                cache.popitem(last=False)
+                stats.evictions += 1
         elif count:
+            cache.move_to_end(key)
             stats.plan_hits += 1
         return entry, leaves
 
@@ -464,19 +1054,23 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
 
     wrapped.stats = stats
     wrapped.plan_for = lambda *args: entry_for(args, count=False)[0].plan
-    wrapped.rewritten = lambda *args: rewrite_offload(
-        entry_for(args, count=False)[0].closed, bulk_threshold=bulk_threshold,
-        min_segment=min_segment, impl=impl)[0]
+    wrapped.rewritten = lambda *args: \
+        entry_for(args, count=False)[0].restage()
     wrapped.cache_clear = cache.clear
     wrapped.cache_size = lambda: len(cache)
     return wrapped
 
 
 def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
-                   min_segment: int = 2) -> OffloadPlan:
-    closed = jax.make_jaxpr(fn)(*args)
+                   min_segment: int = 2,
+                   donate_argnums: int | Sequence[int] = ()) -> OffloadPlan:
+    closed = _flatten_calls(jax.make_jaxpr(fn)(*args))
+    donate_leaves = _donate_leaf_indices(args, _normalize_donate(
+        donate_argnums))
+    donate_invars = frozenset(closed.jaxpr.invars[i] for i in donate_leaves)
     return plan_offload(closed, bulk_threshold=bulk_threshold,
-                        min_segment=min_segment)
+                        min_segment=min_segment,
+                        donate_invars=donate_invars)
 
 
 # ---------------------------------------------------------------------------
@@ -486,22 +1080,31 @@ def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
 # re-plans the jaxpr, and walks it eqn-by-eqn in Python (recursing into
 # scan/pjit bodies per call).  benchmarks/offload_bench.py times it
 # against mpu_offload to quantify the win; nothing else should use it.
+# Donation is deliberately NOT applied here (pure baseline semantics).
 # ---------------------------------------------------------------------------
 
 def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
                       consts: Sequence, args: Sequence, *,
                       impl: str = "auto", bulk_threshold: int = 1024,
                       min_segment: int = 2):
-    """Interpret the jaxpr, dispatching near segments to fused kernels.
-    ``bulk_threshold``/``min_segment`` parameterize the per-call planning
-    of nested scan/call bodies (matching the top-level plan)."""
+    """Interpret the (flattened) jaxpr, dispatching near segments to
+    fused kernels.  ``bulk_threshold``/``min_segment`` parameterize the
+    per-call planning of nested scan/call bodies (matching the top-level
+    plan)."""
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
-    seg_by_start = {s.eqn_idx[0]: s for s in plan.segments}
+    seg_by_start = {s.span_start: s for s in plan.segments}
     env: dict[Any, Any] = {}
 
     def read(v):
         return v.val if isinstance(v, jcore.Literal) else env[v]
+
+    def bind_eqn(eqn):
+        out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                 **eqn.params)
+        outs = out if eqn.primitive.multiple_results else (out,)
+        for var, val in zip(eqn.outvars, outs):
+            env[var] = val
 
     for var, val in zip(jaxpr.constvars, consts):
         env[var] = val
@@ -512,15 +1115,18 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
     while i < len(eqns):
         if i in seg_by_start:
             seg = seg_by_start[i]
+            for j in seg.pre_eqns:
+                bind_eqn(eqns[j])
             fn = _segment_fn(eqns, seg)
-            bulk = [read(v) for v in seg.bulk_inputs]
-            params = [read(v) for v in seg.param_inputs]
-            out_dtypes = [v.aval.dtype for v in seg.outputs]
-            outs = kops.fused_segment(fn, bulk, params,
-                                      out_dtypes=out_dtypes, impl=impl)
+            vals = [read(s.var) for s in seg.operand_specs]
+            outs = kops.fused_segment_grid(
+                fn, vals, tuple(s.meta for s in seg.operand_specs),
+                rows=seg.rows, out_cols=seg.out_cols,
+                out_dtypes=[v.aval.dtype for v in seg.outputs],
+                donate=(), impl=impl)
             for var, val in zip(seg.outputs, outs):
-                env[var] = val
-            i = seg.eqn_idx[-1] + 1
+                env[var] = val.reshape(tuple(var.aval.shape))
+            i = seg.span_end + 1
             continue
         eqn = eqns[i]
         name = eqn.primitive.name
@@ -529,8 +1135,10 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
                                      impl=impl,
                                      bulk_threshold=bulk_threshold,
                                      min_segment=min_segment)
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
         elif name in _CALL_BODY_PARAM:
-            inner = eqn.params[_CALL_BODY_PARAM[name]]
+            inner = _flatten_calls(eqn.params[_CALL_BODY_PARAM[name]])
             inner_plan = plan_offload(inner, bulk_threshold=bulk_threshold,
                                       min_segment=min_segment)
             outs = execute_offloaded(inner, inner_plan, inner.consts,
@@ -538,12 +1146,10 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
                                      impl=impl,
                                      bulk_threshold=bulk_threshold,
                                      min_segment=min_segment)
+            for var, val in zip(eqn.outvars, outs):
+                env[var] = val
         else:
-            out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
-                                     **eqn.params)
-            outs = out if eqn.primitive.multiple_results else (out,)
-        for var, val in zip(eqn.outvars, outs):
-            env[var] = val
+            bind_eqn(eqn)
         i += 1
     return tuple(read(v) for v in jaxpr.outvars)
 
@@ -553,7 +1159,7 @@ def _interpreted_scan(eqn, invals: Sequence, *, impl: str,
     """Per-call scan handling of the legacy interpreter: re-plans the body
     on every outer call (the cost the rewriter eliminates)."""
     params = eqn.params
-    inner = params["jaxpr"]            # ClosedJaxpr
+    inner = _flatten_calls(params["jaxpr"])
     n_consts = params["num_consts"]
     n_carry = params["num_carry"]
     consts = list(invals[:n_consts])
@@ -583,7 +1189,7 @@ def mpu_offload_interpreted(fn: Callable, *, bulk_threshold: int = 1024,
     call).  Benchmark baseline for ``benchmarks/offload_bench.py``."""
 
     def wrapped(*args):
-        closed = jax.make_jaxpr(fn)(*args)
+        closed = _flatten_calls(jax.make_jaxpr(fn)(*args))
         plan = plan_offload(closed, bulk_threshold=bulk_threshold,
                             min_segment=min_segment)
         flat_args = jax.tree.leaves(args)  # invars are flattened leaves

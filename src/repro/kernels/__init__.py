@@ -9,6 +9,7 @@ from repro.kernels.ops import (
     flash_attention,
     fused_elementwise,
     fused_segment,
+    fused_segment_grid,
     rmsnorm,
     rotary,
     ssd_scan,
@@ -25,6 +26,7 @@ __all__ = [
     "flash_attention",
     "fused_elementwise",
     "fused_segment",
+    "fused_segment_grid",
     "rmsnorm",
     "rotary",
     "ssd_scan",

@@ -16,6 +16,7 @@ Operands come in two flavors, mirroring MPU's register classes:
 from __future__ import annotations
 
 import functools
+import math
 from typing import Callable, Sequence
 
 import jax
@@ -89,6 +90,124 @@ def fused_elementwise(
         outs = (outs,)
     result = tuple(o[:rows].reshape(shape) for o in outs)
     return result[0] if n_outputs == 1 else result
+
+
+def _largest_divisor_leq(n: int, limit: int) -> int:
+    """Largest divisor of ``n`` that is <= ``limit`` (n >= 1)."""
+    if n <= limit:
+        return n
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= limit:
+                best = max(best, d)
+            if n // d <= limit:
+                best = max(best, n // d)
+        d += 1
+    return best
+
+
+def _seg_kernel(*refs, fn: Callable, n_in: int):
+    vals = [r[...] for r in refs[:n_in]]
+    outs = fn(*vals)
+    for o_ref, o in zip(refs[n_in:], outs):
+        o_ref[...] = o.astype(o_ref.dtype)
+
+
+def fused_segment_grid(
+    fn: Callable,
+    operands: Sequence[jnp.ndarray],
+    specs: Sequence[tuple[str, int, int]],
+    *,
+    rows: int,
+    out_cols: Sequence[int],
+    out_dtypes: Sequence,
+    donate: Sequence[tuple[int, int]] = (),
+    rows_block: int = 512,
+    interpret: bool = False,
+) -> tuple:
+    """Cross-shape near-bank segment — the offload rewriter's target.
+
+    Every operand carries its own 2-D block view via ``specs``
+    (``(role, op_rows, cols)`` triples, see
+    repro.core.offload.OperandSpec): ``bulk`` operands tile the row
+    grid, ``param`` operands broadcast one [1, cols] block to every
+    step, and ``rep``/``tile`` operands remap the grid index
+    (``i // q`` / ``i % p``) so row-broadcast tensors like [B,1,D] are
+    read once per distinct row instead of being materialized.  ``fn``
+    maps the blocks (plus a static ``block_rows``) to one
+    [block_rows, out_cols[j]] block per output, all written in the same
+    single HBM pass.
+
+    ``donate`` is a sequence of (operand index, output index) pairs
+    emitted as Pallas ``input_output_aliases``: segment-boundary buffers
+    that die at this segment are reused in place for the outputs.
+    """
+    limit = max(min(rows_block, rows), 1)
+    g = 0   # rb must divide every rep repeat factor and tile period
+    for role, op_rows, _ in specs:
+        if role == "rep":
+            g = math.gcd(g, rows // op_rows)
+        elif role == "tile":
+            g = math.gcd(g, op_rows)
+    # largest divisor that fits the block budget (NOT gcd with the
+    # budget, which collapses to 1 for coprime extents like 511)
+    rb = _largest_divisor_leq(g, limit) if g else limit
+    pad = (-rows) % rb
+    if pad and donate:
+        # aliasing a jnp.pad temporary reuses a dead buffer, not the
+        # real boundary tensor; prefer a row-dividing block (rep/tile
+        # constraints guarantee pad == 0, so g is 0 here), and only
+        # give up donation when that would tank the block size
+        alt = _largest_divisor_leq(rows, limit)
+        if alt >= max(limit // 8, 16):
+            rb, pad = alt, 0
+    if pad:
+        donate = ()
+    grid = ((rows + pad) // rb,)
+
+    ops2, in_specs = [], []
+    for (role, op_rows, c), v in zip(specs, operands):
+        v = jnp.asarray(v)
+        if role == "param":
+            ops2.append(v.reshape(1, c))
+            in_specs.append(pl.BlockSpec((1, c), lambda i: (0, 0)))
+        elif role == "bulk":
+            v2 = v.reshape(rows, c)
+            if pad:
+                v2 = jnp.pad(v2, ((0, pad), (0, 0)))
+            ops2.append(v2)
+            in_specs.append(pl.BlockSpec((rb, c), lambda i: (i, 0)))
+        elif role == "rep":
+            q = (rows // op_rows) // rb   # rb divides the repeat factor
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(
+                pl.BlockSpec((1, c), lambda i, q=q: (i // q, 0)))
+        else:                             # tile: rb divides the period
+            p = op_rows // rb
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(
+                pl.BlockSpec((rb, c), lambda i, p=p: (i % p, 0)))
+
+    out_shape = [jax.ShapeDtypeStruct((rows + pad, c), dt)
+                 for c, dt in zip(out_cols, out_dtypes)]
+    out_specs = [pl.BlockSpec((rb, c), lambda i: (i, 0)) for c in out_cols]
+
+    outs = pl.pallas_call(
+        functools.partial(_seg_kernel,
+                          fn=functools.partial(fn, block_rows=rb),
+                          n_in=len(ops2)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=dict(donate),
+        interpret=interpret,
+    )(*ops2)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return tuple(o[:rows] for o in outs)
 
 
 def fused_segment(

@@ -20,6 +20,9 @@ from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.fused_elementwise import fused_elementwise as _fused_pallas
 from repro.kernels.fused_elementwise import fused_segment as _fused_seg_pallas
+from repro.kernels.fused_elementwise import (
+    fused_segment_grid as _fused_seg_grid_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rotary import rotary as _rotary_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -112,7 +115,7 @@ def fused_elementwise(fn, bulk, params=(), *, impl: Impl = "auto", **kw):
 
 def fused_segment(fn, bulk, params=(), *, out_dtypes, impl: Impl = "auto",
                   **kw):
-    """Multi-output near-bank segment (offload rewriter target).
+    """Multi-output near-bank segment (legacy single-shape entry point).
     Always returns a tuple with one array per ``out_dtypes`` entry."""
     impl = _resolve(impl)
     if impl == "ref":
@@ -122,3 +125,31 @@ def fused_segment(fn, bulk, params=(), *, out_dtypes, impl: Impl = "auto",
         return tuple(r.astype(dt) for r, dt in zip(res, out_dtypes))
     return _fused_seg_pallas(fn, bulk, params, out_dtypes=out_dtypes,
                              interpret=(impl == "interpret"), **kw)
+
+
+def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
+                       donate=(), impl: Impl = "auto", **kw):
+    """Cross-shape near-bank segment with per-operand block views (what
+    the offload rewriter emits).  ``specs`` are (role, op_rows, cols)
+    triples; ``donate`` pairs become Pallas ``input_output_aliases``.
+    Returns one [rows, out_cols[j]] array per output.  The "ref" path
+    materializes the broadcast views and runs ``fn`` as one full-array
+    pass (donation is XLA's problem there)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        full = []
+        for (role, op_rows, c), v in zip(specs, operands):
+            v2 = jnp.asarray(v).reshape(
+                (1, c) if role == "param" else (op_rows, c)
+                if role in ("rep", "tile") else (rows, c))
+            if role == "rep":
+                v2 = jnp.repeat(v2, rows // op_rows, axis=0)
+            elif role == "tile":
+                v2 = jnp.tile(v2, (rows // op_rows, 1))
+            full.append(v2)
+        outs = fn(*full, block_rows=rows)
+        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+    return _fused_seg_grid_pallas(fn, operands, specs, rows=rows,
+                                  out_cols=out_cols, out_dtypes=out_dtypes,
+                                  donate=donate,
+                                  interpret=(impl == "interpret"), **kw)

@@ -40,7 +40,8 @@ class Completion:
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
                  max_len: int = 512, seed: int = 0, offload: bool = False,
-                 offload_bulk_threshold: int = 1024):
+                 offload_bulk_threshold: int = 1024,
+                 offload_max_plans: int = 128):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -62,7 +63,8 @@ class Engine:
         if offload:
             from repro.core.offload import mpu_offload
             decode_fn = mpu_offload(
-                decode_fn, bulk_threshold=offload_bulk_threshold)
+                decode_fn, bulk_threshold=offload_bulk_threshold,
+                max_plans=offload_max_plans)
         self.offload = offload
         self._decode_offload = decode_fn if offload else None
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
@@ -78,7 +80,9 @@ class Engine:
         ``plan_hits == 0`` — every decode after the first runs the
         compiled executable without re-entering Python at all.  Growing
         ``traces``/``plan_misses`` would mean the decode signature is
-        unstable and the step is being re-planned."""
+        unstable and the step is being re-planned; growing ``evictions``
+        means the signature churn exceeds the ``offload_max_plans`` LRU
+        bound and plans are being recompiled."""
         if self._decode_offload is None:
             return None
         return self._decode_offload.stats.as_dict()

@@ -42,7 +42,8 @@ def _maybe_offload(step_fn, tcfg: TrainConfig, offload: bool | None):
     if not use_offload:
         return step_fn
     from repro.core.offload import mpu_offload
-    return mpu_offload(step_fn, bulk_threshold=tcfg.offload_bulk_threshold)
+    return mpu_offload(step_fn, bulk_threshold=tcfg.offload_bulk_threshold,
+                       max_plans=tcfg.offload_max_plans)
 
 
 def init_train_state(model: Model, rng) -> TrainState:

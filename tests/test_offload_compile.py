@@ -1,13 +1,23 @@
 """The compile-time offload path: plan cache, jit composition, rewriter.
 
-Covers the acceptance contract of the rewriter refactor:
-  * plan-cache hit/miss counting keyed by aval signature
+Covers the acceptance contract of the rewriter:
+  * plan-cache hit/miss/eviction accounting (LRU keyed by aval
+    signature, bounded by ``max_plans``)
   * ``jax.jit(mpu_offload(fn))`` numerical equivalence vs plain ``fn``
     (including a ``scan`` body and a ``pjit``-nested jaxpr) with no
     tracer leaks
   * zero retraces on a second call with identical avals
   * the rewritten ClosedJaxpr replaces each near segment with a single
     ``pallas_call`` eqn and evaluates to the same values
+  * cross-shape fusion: pjit-wrapped elementwise helpers (silu) are
+    flattened, broadcast params ([C]/[1,C]/scalar), row-broadcast
+    operands ([B,1,D]) and lane splits fuse into one segment across
+    dtypes
+  * segment-boundary donation: dead boundary buffers appear as Pallas
+    ``input_output_aliases`` in the rewritten jaxpr, and donated-invar
+    execution stays correct (the aliased buffer is never read after
+    the kernel writes it)
+  * nested-pjit fidelity: shardings/donated_invars survive the rewrite
 """
 import jax
 import jax.numpy as jnp
@@ -162,6 +172,202 @@ def test_offload_report_still_exposes_plan():
     assert cached.segments[0].eqn_idx == plan.segments[0].eqn_idx
 
 
+# ---------------------------------------------------------------------------
+# cross-shape fusion
+# ---------------------------------------------------------------------------
+
+def test_swiglu_pjit_body_flattened_and_fused():
+    """jax.nn.silu's pjit wrapper must not cut the segment: the whole
+    epilogue is one fused launch with a real traffic reduction."""
+    def swiglu(x, y):
+        return jax.nn.silu(x) * y
+
+    x, y = _rand((128, 64)), _rand((128, 64), 1)
+    plan = offload_report(swiglu, x, y, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    assert plan.traffic_reduction > 1.5
+    got = mpu_offload(swiglu, bulk_threshold=64, impl="interpret")(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(swiglu(x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_broadcast_fusion_numerics_vs_ref_dtypes():
+    """[C] / [1,C] / scalar broadcast operands fuse into the segment and
+    match the pure-jnp reference across dtypes."""
+    def chain(x, y, s, b):
+        h = jnp.tanh(x) * s + b          # [C] scale and bias
+        h = h + y * 0.5                  # scalar literal
+        return h * jax.nn.sigmoid(h)
+
+    for dtype, rtol in ((jnp.float32, 1e-5), (jnp.bfloat16, 5e-2)):
+        x = _rand((64, 32)).astype(dtype)
+        y = _rand((64, 32), 1).astype(dtype)
+        s = (jnp.ones((32,)) * 1.1).astype(dtype)
+        b = _rand((32,), 2).astype(dtype)
+        plan = offload_report(chain, x, y, s, b, bulk_threshold=64)
+        assert len(plan.segments) == 1, (dtype, plan.segments)
+        got = mpu_offload(chain, bulk_threshold=64, impl="interpret")(
+            x, y, s, b)
+        want = chain(x, y, s, b)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=rtol, atol=rtol)
+
+
+def test_row_broadcast_rep_operand_fuses():
+    """[B,1,D] against [B,S,D] fuses via a rep index map instead of
+    ending the segment."""
+    def gated(a, m):
+        return jnp.tanh(a) * m + a * 0.5
+
+    a = _rand((4, 64, 32))
+    m = _rand((4, 1, 32), 1)
+    plan = offload_report(gated, a, m, bulk_threshold=1024)
+    assert len(plan.segments) == 1
+    roles = {sp.role for sp in plan.segments[0].operand_specs}
+    assert "rep" in roles
+    got = mpu_offload(gated, bulk_threshold=1024, impl="interpret")(a, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(gated(a, m)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lane_split_swiglu_fuses():
+    """The real swiglu shape: [R,2C] lane-split into two [R,C] halves
+    stays one segment (slice absorbed as a block-column remap)."""
+    def swiglu_split(xw):
+        a, g = xw[:, :32], xw[:, 32:]
+        return jax.nn.silu(a) * g
+
+    xw = _rand((128, 64))
+    plan = offload_report(swiglu_split, xw, bulk_threshold=1024)
+    assert len(plan.segments) == 1
+    got = mpu_offload(swiglu_split, bulk_threshold=1024,
+                      impl="interpret")(xw)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(swiglu_split(xw)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rank1_bulk_broadcast_fuses():
+    """Rank-1 [N] values are bulk columns (N, 1), not [1, N] params —
+    a jnp.full-style scalar->[N] broadcast inside a rank-1 segment must
+    not be misclassified (vacuous all-leading-dims-1)."""
+    def f(x):
+        y = jnp.tanh(x)
+        return y * jnp.full(x.shape, 0.5) + y
+
+    x = jnp.linspace(-1.0, 1.0, 4096)
+    w = mpu_offload(f, bulk_threshold=1024, impl="interpret")
+    np.testing.assert_allclose(np.asarray(w(x)), np.asarray(f(x)),
+                               rtol=1e-6, atol=1e-6)
+    assert len(w.plan_for(x).segments) == 1
+
+
+# ---------------------------------------------------------------------------
+# segment-boundary donation
+# ---------------------------------------------------------------------------
+
+def _two_seg(x, y, w):
+    h = jnp.tanh(x) * 2.0 + y
+    h2 = h @ w
+    return jax.nn.silu(h2) * 0.5 + 1.0
+
+
+def test_two_segment_chain_shows_input_output_aliases():
+    """A segment input that dies at the segment (here the matmul output
+    feeding the second segment) is donated: the fused pallas_call in the
+    rewritten jaxpr carries a non-empty ``input_output_aliases``."""
+    x, y, w = _rand((64, 32)), _rand((64, 32), 1), _rand((32, 32), 2) * 0.1
+    closed = jax.make_jaxpr(_two_seg)(x, y, w)
+    rewritten, plan = rewrite_offload(closed, bulk_threshold=64,
+                                      impl="interpret")
+    assert len(plan.segments) == 2
+    assert plan.donated_hbm_bytes > 0
+    aliases = [e.params.get("input_output_aliases", ())
+               for e in rewritten.jaxpr.eqns
+               if e.primitive.name == "pallas_call"]
+    assert len(aliases) == 2
+    assert any(a for a in aliases), aliases   # at least one real alias
+    out = jax.core.eval_jaxpr(rewritten.jaxpr, rewritten.consts, x, y, w)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(_two_seg(x, y, w)),
+                               rtol=1e-5, atol=1e-5)
+    assert plan.effective_hbm_bytes < plan.fused_hbm_bytes
+
+
+def test_donated_invar_not_read_after_write():
+    """``donate_argnums`` threads user buffers into the kernels'
+    aliases; results must match values computed before donation, and
+    repeated calls with fresh buffers stay correct."""
+    def adam_like(p, g):
+        m = 0.9 * p + 0.1 * g
+        v = 0.95 * p + 0.05 * g * g
+        return p - 1e-3 * m / (jnp.sqrt(v) + 1e-8)
+
+    fn = mpu_offload(adam_like, bulk_threshold=64, impl="interpret",
+                     donate_argnums=(0,))
+    p, g = _rand((64, 32)), _rand((64, 32), 1)
+    plan = fn.plan_for(p, g)
+    assert plan.donated_hbm_bytes > 0
+    want = np.asarray(adam_like(p, g))       # before the buffer is donated
+    got = fn(p, g)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    p2 = _rand((64, 32), 3)
+    want2 = np.asarray(adam_like(p2, g))     # p2 is donated by fn below
+    np.testing.assert_allclose(np.asarray(fn(p2, g)), want2,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LRU plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_lru_eviction_accounting():
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                     max_plans=2)
+    shapes = [(64, 32), (128, 32), (256, 32)]
+    for s in shapes:
+        fn(_rand(s), _rand(s, 1))
+    assert fn.stats.plan_misses == 3
+    assert fn.stats.evictions == 1           # first signature evicted
+    assert fn.cache_size() == 2
+    # most-recent signatures still hit...
+    fn(_rand(shapes[2]), _rand(shapes[2], 1))
+    assert fn.stats.plan_hits == 1
+    # ...but the evicted one recompiles (and evicts the LRU survivor)
+    fn(_rand(shapes[0]), _rand(shapes[0], 1))
+    assert fn.stats.plan_misses == 4 and fn.stats.evictions == 2
+    # hitting keeps an entry warm: touch shapes[0], insert a new shape,
+    # and shapes[0] must survive while the untouched one is evicted
+    fn(_rand(shapes[0]), _rand(shapes[0], 1))
+    fn(_rand((512, 32)), _rand((512, 32), 1))
+    fn(_rand(shapes[0]), _rand(shapes[0], 1))
+    assert fn.stats.plan_misses == 5         # shapes[0] was not evicted
+
+
+# ---------------------------------------------------------------------------
+# nested-pjit fidelity
+# ---------------------------------------------------------------------------
+
+def test_pjit_donated_invars_survive_rewrite():
+    """A non-trivial inner jit (matmul body, donation) is re-emitted as
+    a pjit eqn with its donated_invars instead of being inlined away."""
+    inner = jax.jit(lambda a, b: (a @ b) * 2.0, donate_argnums=(0,))
+
+    def f(x, w):
+        return inner(x, w) + 1.0
+
+    x, w = _rand((32, 32)), _rand((32, 32), 1) * 0.1
+    fn = mpu_offload(f, bulk_threshold=64, impl="interpret")
+    rewritten = fn.rewritten(x, w)
+    pjits = [e for e in rewritten.jaxpr.eqns if e.primitive.name == "pjit"]
+    assert pjits, "pjit eqn was dropped by the rewrite"
+    assert any(any(e.params.get("donated_invars", ())) for e in pjits)
+    got = fn(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(f(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_offload_train_and_eval_step_switch():
     import dataclasses
     from repro.configs import get_config, reduced
@@ -172,7 +378,10 @@ def test_offload_train_and_eval_step_switch():
     cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
                               dtype="float32", num_layers=2)
     model = build_model(cfg)
-    tcfg = TrainConfig(total_steps=2, remat=False, checkpoint_every=0)
+    # remat=True is the launcher default and the harder path: the
+    # post-grad jaxpr contains closed_call/remat eqns, which have no
+    # generic re-bind and must be inlined by the flatten pass
+    tcfg = TrainConfig(total_steps=2, remat=True, checkpoint_every=0)
     state = init_train_state(model, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                               cfg.vocab_size)
