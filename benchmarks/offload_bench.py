@@ -1,7 +1,8 @@
 """JAX-level offload benchmark (beyond-paper deployable analogue).
 
 For representative memory-bound chains (the Table-I workloads' value
-chains + real transformer-block epilogues), report three things:
+chains + real transformer-block epilogues, now including the
+matmul-anchored GEMM epilogues and lane-reduction chains), report:
 
 1. **Traffic** (the paper's TSV accounting): naive per-eqn HBM bytes vs
    Algorithm-1 fused-segment bytes, plus the bytes whose round-trip is
@@ -9,6 +10,10 @@ chains + real transformer-block epilogues), report three things:
    ``input_output_aliases`` on dead boundary buffers — the §IV-B3
    multiple-activated-row-buffers analogue), and the projected v5e time
    per call at 819 GB/s (memory-bound ops: time == bytes / bandwidth).
+   For anchored chains the fused bytes count the matmul operands but
+   NOT the product tensor — it lives in accumulator scratch; the [K,N]
+   rhs weight is counted once per row block, matching the kernel's
+   actual re-streaming.
 
 2. **Interpreted vs compiled wall time**: the legacy per-call Python
    jaxpr interpreter (``mpu_offload_interpreted``) against the
@@ -17,14 +22,17 @@ chains + real transformer-block epilogues), report three things:
    compiled path must show exactly one trace and one plan miss
    regardless of call count.
 
-3. **Regression guard**: any chain in ``MUST_FUSE`` that reports
-   ``segments == 0``, or any chain whose plan-derived
-   ``traffic_reduction`` drops below the committed artifact's value,
-   makes the process exit non-zero, so CI fails when the segmenter
-   loses coverage it once had.
+3. **Regression guard**: every chain in ``MUST_FUSE`` carries its
+   committed (segment count, traffic floor): reporting a different
+   segment count (an anchored chain splitting back to >= 2 segments or
+   losing fusion entirely) or a traffic_reduction below the floor makes
+   the process exit non-zero — independent of the artifact, so CI fails
+   on fresh checkouts too.  The committed ``BENCH_offload.json`` adds a
+   second, tighter ratchet against the last recorded numbers.
 
 Writes a versioned ``BENCH_offload.json`` artifact at the repo root.
-``--smoke`` runs a reduced rep count for per-push CI freshness.
+``--smoke`` runs a reduced rep count for per-push CI freshness;
+``--csv`` emits the rows table as CSV for quick diffing.
 """
 from __future__ import annotations
 
@@ -42,12 +50,25 @@ from repro.core.machine import V5E
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
-# chains that fuse at this commit; a later segmenter change that drops
-# any of them back to zero segments is a coverage regression.
-MUST_FUSE = {"AXPY", "BIAS_GELU_RES", "SWIGLU_EPI", "RMS_SCALE_RES",
-             "ADAM_CHAIN", "MLP_RESIDUAL"}
+# Committed fusion contract: chain -> (segments, traffic_reduction
+# floor).  A later segmenter change that reports a different segment
+# count (e.g. an anchored GEMM chain splitting back into >= 2 segments)
+# or a traffic_reduction below the floor is a coverage regression and
+# fails CI even without a baseline artifact.
+MUST_FUSE = {
+    "AXPY": (1, 1.3),
+    "BIAS_GELU_RES": (1, 2.0),
+    "SWIGLU_EPI": (1, 2.5),
+    "RMS_SCALE_RES": (1, 2.9),
+    "ADAM_CHAIN": (1, 3.0),
+    "MLP_RESIDUAL": (1, 2.5),
+    "GEMM_BIAS_GELU": (1, 1.5),
+    "GEMM_SWIGLU": (1, 1.5),
+    "RMSNORM_CHAIN": (1, 1.5),
+    "SOFTMAX_CHAIN": (1, 1.5),
+}
 
 
 def _cases():
@@ -58,6 +79,7 @@ def _cases():
     b = jax.random.normal(jax.random.fold_in(k, 2), (256,))
     s = jnp.ones((256,))
     w = jax.random.normal(jax.random.fold_in(k, 3), (256, 256)) * 0.05
+    wgu = jax.random.normal(jax.random.fold_in(k, 4), (256, 512)) * 0.05
 
     def axpy(x, y):
         return 2.5 * x + y
@@ -79,12 +101,28 @@ def _cases():
         return x - 1e-3 * m / (jnp.sqrt(v) + 1e-8)
 
     def mlp_residual(x, w, b, y):
-        # far matmul bracketed by a near epilogue chain; the matmul's
-        # output dies at the epilogue, so the fused kernel donates it
+        # matmul-anchored segment: the dot opens the segment and the
+        # epilogue runs on the accumulator — h never round-trips HBM
         h = x @ w
         h = jax.nn.gelu(h + b)
         h = h * jax.nn.sigmoid(h)
         return h + y
+
+    def gemm_bias_gelu(x, w, b, y):
+        return jax.nn.gelu(x @ w + b) + y
+
+    def gemm_swiglu(x, wgu):
+        # fused gate+up projection: the [R, 2C] product is lane-split
+        # and gated inside the anchored kernel; only [R, C] is stored
+        hw = x @ wgu
+        return jax.nn.silu(hw[:, :256]) * hw[:, 256:]
+
+    def rmsnorm_chain(x, s):
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-5) * s
+
+    def softmax_chain(x):
+        return jax.nn.softmax(x * 0.125, axis=-1)
 
     # donate_argnums: the optimizer update overwrites the parameter
     # buffer in place (the classic near-bank in-place update)
@@ -95,6 +133,10 @@ def _cases():
         ("RMS_SCALE_RES", rms_scale_residual, (x, y, s), ()),
         ("ADAM_CHAIN", adam_like, (x, y), (0,)),
         ("MLP_RESIDUAL", mlp_residual, (x, w, b, y), ()),
+        ("GEMM_BIAS_GELU", gemm_bias_gelu, (x, w, b, y), ()),
+        ("GEMM_SWIGLU", gemm_swiglu, (x, wgu), ()),
+        ("RMSNORM_CHAIN", rmsnorm_chain, (x, s), ()),
+        ("SOFTMAX_CHAIN", softmax_chain, (x,), ()),
     ]
 
 
@@ -134,6 +176,8 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
         rows.append({
             "chain": name,
             "segments": len(plan.segments),
+            "anchored": sum(1 for s in plan.segments
+                            if s.matmul is not None),
             "naive_mb": plan.naive_hbm_bytes / 1e6,
             "fused_mb": plan.fused_hbm_bytes / 1e6,
             "donated_mb": plan.donated_hbm_bytes / 1e6,
@@ -148,12 +192,15 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
             "plan_hits": st["plan_hits"],
             "plan_misses": st["plan_misses"],
             "plan_evictions": st["evictions"],
+            "plan_hit_rate": st["hit_rate"],
         })
 
     mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
     summary = {
         "schema_version": SCHEMA_VERSION,
         "mean_traffic_reduction": mean_traffic,
+        "geomean_traffic_reduction": _geomean(
+            [r["traffic_reduction"] for r in rows]),
         "geomean_compiled_speedup": _geomean(
             [r["compiled_speedup"] for r in rows]),
         "geomean_fused_mb": _geomean([r["fused_mb"] for r in rows]),
@@ -170,11 +217,24 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
 
 
 def check_regressions(rows, baseline: dict | None = None) -> list[str]:
-    """Chains that must fuse but report zero segments, plus chains whose
-    (deterministic, plan-derived) traffic_reduction dropped vs the
-    committed artifact."""
-    bad = [f"{r['chain']} fuses 0 segments" for r in rows
-           if r["chain"] in MUST_FUSE and r["segments"] == 0]
+    """Chains violating their committed (segments, traffic floor)
+    contract, plus chains whose (deterministic, plan-derived)
+    traffic_reduction dropped vs the committed artifact."""
+    bad = []
+    missing = set(MUST_FUSE) - {r["chain"] for r in rows}
+    if missing:        # a contracted chain vanished from the suite
+        bad.append(f"chains missing from the run: {sorted(missing)}")
+    for r in rows:
+        contract = MUST_FUSE.get(r["chain"])
+        if contract is None:
+            continue
+        want_segments, floor = contract
+        if r["segments"] != want_segments:
+            bad.append(f"{r['chain']} fuses {r['segments']} segments"
+                       f" (committed: {want_segments})")
+        if r["traffic_reduction"] < floor:
+            bad.append(f"{r['chain']} traffic {r['traffic_reduction']:.2f}x"
+                       f" < committed floor {floor:.2f}x")
     base = {r["chain"]: r for r in (baseline or {}).get("rows", [])}
     for r in rows:
         b = base.get(r["chain"])
@@ -194,23 +254,45 @@ def _load_baseline() -> dict | None:
     return prev if prev.get("schema_version") == SCHEMA_VERSION else None
 
 
+_CSV_COLS = ["chain", "segments", "anchored", "naive_mb", "fused_mb",
+             "donated_mb", "effective_mb", "traffic_reduction",
+             "naive_us_v5e", "fused_us_v5e", "interpreted_us",
+             "compiled_us", "compiled_speedup", "retraces", "plan_hits",
+             "plan_misses", "plan_evictions", "plan_hit_rate"]
+
+
+def _print_csv(rows):
+    print(",".join(_CSV_COLS))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])
+            for c in _CSV_COLS))
+
+
 if __name__ == "__main__":
-    smoke = "--smoke" in sys.argv[1:]
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    csv = "--csv" in argv
     baseline = _load_baseline()      # before run() overwrites the artifact
     rows, summary = run(reps=5 if smoke else 30,
                         interp_reps=2 if smoke else 5)
-    for r in rows:
-        print(f"{r['chain']:14s} segs={r['segments']} "
-              f"traffic={r['traffic_reduction']:.2f}x "
-              f"donated={r['donated_mb']:6.2f}MB "
-              f"interp={r['interpreted_us']:9.1f}us "
-              f"compiled={r['compiled_us']:8.1f}us "
-              f"speedup={r['compiled_speedup']:7.1f}x "
-              f"retraces={r['retraces']}")
-    print(f"geomean compiled speedup: "
-          f"{summary['geomean_compiled_speedup']:.1f}x "
-          f"(traffic {summary['mean_traffic_reduction']:.2f}x, "
-          f"modeled geomean {summary['geomean_fused_mb']:.2f}MB fused / "
+    if csv:
+        _print_csv(rows)
+    else:
+        for r in rows:
+            print(f"{r['chain']:14s} segs={r['segments']}"
+                  f"{'*' if r['anchored'] else ' '} "
+                  f"traffic={r['traffic_reduction']:.2f}x "
+                  f"donated={r['donated_mb']:6.2f}MB "
+                  f"interp={r['interpreted_us']:9.1f}us "
+                  f"compiled={r['compiled_us']:8.1f}us "
+                  f"speedup={r['compiled_speedup']:7.1f}x "
+                  f"retraces={r['retraces']}")
+        print("(* = matmul-anchored segment)")
+    print(f"geomean: traffic_reduction="
+          f"{summary['geomean_traffic_reduction']:.2f}x "
+          f"compiled_speedup={summary['geomean_compiled_speedup']:.1f}x "
+          f"(modeled {summary['geomean_fused_mb']:.2f}MB fused / "
           f"{summary['geomean_effective_mb']:.2f}MB after donation, "
           f"artifact: {ARTIFACT.name})")
     regressed = check_regressions(rows, baseline)

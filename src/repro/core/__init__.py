@@ -9,6 +9,7 @@ from repro.core.isa import (
 )
 from repro.core.locator import JaxprAnnotation, annotate_fn, annotate_jaxpr
 from repro.core.offload import (
+    MatmulAnchor,
     OffloadPlan,
     OffloadStats,
     Segment,
@@ -23,7 +24,8 @@ from repro.core.simulator import SimConfig, SimResult, end_to_end_time, simulate
 __all__ = [
     "Instr", "Loc", "OpKind", "Program", "annotate_locations",
     "apply_policy", "location_stats", "JaxprAnnotation", "annotate_fn",
-    "annotate_jaxpr", "OffloadPlan", "OffloadStats", "Segment",
+    "annotate_jaxpr", "MatmulAnchor", "OffloadPlan", "OffloadStats",
+    "Segment",
     "mpu_offload", "mpu_offload_interpreted", "offload_report",
     "plan_offload", "rewrite_offload", "SimConfig", "SimResult",
     "end_to_end_time", "simulate",

@@ -21,16 +21,29 @@ compiled program.  This module mirrors that architecture for JAX:
                 [B,S,D]) — and lane-axis layout prims
                 (``broadcast_in_dim``/``reshape``/``slice``/
                 ``concatenate``, see locator.LAYOUT_PRIMS) are absorbed
-                instead of ending the segment.  Segment inputs that die
-                at the segment are donated: the fused kernel is emitted
-                with Pallas ``input_output_aliases`` so boundary buffers
-                between consecutive segments are reused in place
-                (§IV-B3's multiple-activated-row-buffers analogue).
+                instead of ending the segment.  Segments are also
+                *matmul-anchored*: a qualifying ``dot_general``
+                (locator.ANCHOR_PRIMS — no batch dims, lhs contracts
+                its lane axis, rank-2 rhs) OPENS a segment rather than
+                ending it, absorbing its elementwise lhs prologue and
+                its whole epilogue around an in-kernel K-reduction
+                (``MatmulAnchor``), and lane-axis reductions
+                (locator.REDUCE_LANE_PRIMS) fuse as (rows, 1) row
+                statistics so softmax/rmsnorm chains stay whole.
+                Segment inputs that die at the segment are donated: the
+                fused kernel is emitted with Pallas
+                ``input_output_aliases`` so boundary buffers between
+                consecutive segments are reused in place (§IV-B3's
+                multiple-activated-row-buffers analogue).
   rewrite once  ``_build_runner`` bakes every decision into a list of
                 step closures — each near segment becomes ONE fused
-                Pallas launch (repro.kernels.ops.fused_segment_grid: one
-                HBM read per operand, one write per output,
-                intermediates in VMEM), far eqns re-bind unchanged,
+                Pallas launch (repro.kernels.ops.fused_segment_grid for
+                elementwise segments, repro.kernels.ops.
+                fused_matmul_segment for anchored ones: one HBM read
+                per operand — the rank-2 rhs weight streams once per
+                row block — one write per output, intermediates and
+                the matmul accumulator in VMEM), far eqns re-bind
+                unchanged,
                 ``scan``/``closed_call`` bodies are rewritten
                 recursively *at rewrite time*, and non-trivial ``pjit``
                 eqns are re-emitted as ``jax.jit`` calls so their
@@ -78,6 +91,7 @@ from repro.core.locator import (
     LAYOUT_PRIMS,
     JaxprAnnotation,
     annotate_jaxpr,
+    eqn_tier,
 )
 from repro.kernels import ops as kops
 
@@ -131,6 +145,29 @@ class OperandSpec:
         return (self.role, self.rows, self.cols)
 
 
+@dataclass(frozen=True)
+class MatmulAnchor:
+    """The dot_general a matmul-anchored segment is built around.
+
+    The contraction itself runs on the MXU inside the fused kernel
+    (K-reduction grid + f32 accumulator scratch); ``pro_eqns`` is the
+    elementwise prologue chain producing the dot's lhs (applied per
+    [rows_block, k_block] tile before each partial product), and the
+    segment's ordinary ``eqn_idx`` holds the epilogue applied to the
+    accumulator in-registers before the single store.
+    """
+
+    eqn_idx: int                  # the dot_general eqn
+    lhs_var: Any                  # the (possibly prologue-produced) lhs
+    lhs_specs: list[OperandSpec]  # prologue inputs: roles bulk_k/param_k
+    rhs: Any                      # [K, N] weight operand, read as-is
+    pro_eqns: list[int]           # prologue chain (inside the kernel)
+    k: int                        # contraction extent
+    n: int                        # lane width of the dot output
+    out_var: Any                  # the product var (kernel accumulator)
+    out_dtype: Any
+
+
 @dataclass
 class Segment:
     """A maximal near-bank subgraph with per-operand block views."""
@@ -146,18 +183,55 @@ class Segment:
     n_compute: int                # ALU eqns (layout prims excluded)
     span_start: int
     span_end: int
+    matmul: MatmulAnchor | None = None   # set for matmul-anchored segments
 
     @property
     def n_eqns(self) -> int:
         return len(self.eqn_idx)
 
     @property
+    def all_eqn_idx(self) -> list[int]:
+        """Every eqn the fused kernel absorbs, including the anchor
+        contraction and its prologue chain."""
+        if self.matmul is None:
+            return list(self.eqn_idx)
+        return sorted({*self.matmul.pro_eqns, self.matmul.eqn_idx,
+                       *self.eqn_idx})
+
+    @property
     def bulk_inputs(self) -> list[Any]:
-        return [s.var for s in self.operand_specs if s.role != "param"]
+        bulk = [s.var for s in self.operand_specs if s.role != "param"]
+        if self.matmul is not None:
+            bulk += [s.var for s in self.matmul.lhs_specs
+                     if s.role != "param_k"]
+            bulk.append(self.matmul.rhs)
+        return bulk
 
     @property
     def param_inputs(self) -> list[Any]:
-        return [s.var for s in self.operand_specs if s.role == "param"]
+        params = [s.var for s in self.operand_specs if s.role == "param"]
+        if self.matmul is not None:
+            params += [s.var for s in self.matmul.lhs_specs
+                       if s.role == "param_k"]
+        return params
+
+    def io_bytes(self) -> int:
+        """Fused HBM bytes this segment moves: one read per operand —
+        the anchored rhs weight once per row block, matching the
+        kernel's actual re-streaming — and one write per output.  The
+        single source of truth for both the plan's traffic accounting
+        and the roofline model."""
+        from repro.kernels.fused_matmul import matmul_row_blocks
+
+        total = sum(_dtype_size(sp.var.aval) for sp in self.operand_specs)
+        total += sum(_dtype_size(v.aval) for v in self.outputs)
+        if self.matmul is not None:
+            total += sum(_dtype_size(sp.var.aval)
+                         for sp in self.matmul.lhs_specs)
+            total += _dtype_size(self.matmul.rhs.aval) * matmul_row_blocks(
+                self.rows, [sp.meta for sp in self.operand_specs],
+                self.matmul.n)
+        return total
 
 
 @dataclass
@@ -196,12 +270,25 @@ class OffloadStats:
     traces: int = 0
     evictions: int = 0
 
-    def as_dict(self) -> dict[str, int]:
-        return dataclasses.asdict(self)
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of calls served straight from the plan cache (0.0
+        before the first call)."""
+        total = self.plan_hits + self.plan_misses
+        return self.plan_hits / total if total else 0.0
+
+    def as_dict(self) -> dict[str, float]:
+        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
 
     def reset(self) -> None:
         self.plan_hits = self.plan_misses = self.traces = 0
         self.evictions = 0
+
+    def __repr__(self) -> str:
+        return (f"OffloadStats(plan_hits={self.plan_hits}, "
+                f"plan_misses={self.plan_misses}, traces={self.traces}, "
+                f"plan_evictions={self.evictions}, "
+                f"hit_rate={self.hit_rate:.3f})")
 
 
 def _dtype_size(aval) -> int:
@@ -369,12 +456,15 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
     specs: dict[Any, tuple[str, int, int]] = {}   # external operand views
     produced: dict[Any, tuple[str, int]] = {}     # var -> (kind, cols)
     param_out_set: set[int] = set()
+    reduced_vars: set[Any] = set()   # rank-reduced row stats: view (rows, 1)
+    mm: dict[str, Any] | None = None  # open matmul-anchor state
 
     def reset():
         nonlocal current, cur_rows, n_compute, anchor, specs, produced, \
-            param_out_set
+            param_out_set, reduced_vars, mm
         current, cur_rows, n_compute, anchor = [], None, 0, None
         specs, produced, param_out_set = {}, {}, set()
+        reduced_vars, mm = set(), None
 
     def _merge_spec(new_specs, v, cls) -> bool:
         old = specs.get(v) or new_specs.get(v)
@@ -385,17 +475,59 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
 
     def try_admit_elementwise(i, eqn) -> bool:
         nonlocal cur_rows, n_compute, anchor
-        if ann.eqn_loc[i] not in (Loc.N, Loc.B) or len(eqn.outvars) != 1:
+        if len(eqn.outvars) != 1:
             return False
         out = eqn.outvars[0]
-        if out.aval.size < bulk_threshold:
+        nonlit = [v for v in eqn.invars if not isinstance(v, jcore.Literal)]
+        # continuation eqns extend a value chain already in the segment:
+        # the bulk/eqn-loc gates only guard segment *entry*
+        continuation = any(v in produced for v in nonlit)
+        if ann.eqn_loc[i] not in (Loc.N, Loc.B) and not continuation:
+            return False
+        if out.aval.size < bulk_threshold and not continuation:
             return False
         oshape = tuple(out.aval.shape)
+
+        if any(v in reduced_vars for v in nonlit):
+            # reduced space: rank-reduced row statistics ([B,S] against a
+            # [B,S,D] segment) — every value is one element per row, so
+            # the whole eqn is a (rows, 1) column op
+            rows = cur_rows
+            r_out = 1
+            for d in oshape:
+                r_out *= d
+            if rows is None or r_out != rows:
+                return False
+            new_specs: dict[Any, tuple[str, int, int]] = {}
+            for v in nonlit:
+                if v in produced:
+                    if produced[v][1] != 1:
+                        return False
+                    continue
+                vshape = tuple(v.aval.shape)
+                sz = 1
+                for d in vshape:
+                    sz *= d
+                if sz == rows:
+                    cls = ("bulk", rows, 1)
+                elif sz == 1:
+                    cls = ("param", 1, 1)
+                else:
+                    return False
+                if not _merge_spec(new_specs, v, cls):
+                    return False
+            specs.update(new_specs)
+            produced[out] = ("bulk", 1)
+            reduced_vars.add(out)
+            current.append(i)
+            n_compute += 1
+            return True
+
         r_out, c_out = _bulk_view(oshape)
         rows = r_out if cur_rows is None else cur_rows
         if r_out != rows:
             return False
-        new_specs: dict[Any, tuple[str, int, int]] = {}
+        new_specs = {}
         for v in eqn.invars:
             if isinstance(v, jcore.Literal) or v in produced:
                 continue
@@ -407,6 +539,48 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         cur_rows = rows
         if anchor is None:
             anchor = oshape
+        current.append(i)
+        n_compute += 1
+        return True
+
+    def try_admit_reduce(i, eqn) -> bool:
+        """Lane-axis reduce_sum/reduce_max: the row statistic completes
+        inside one [block_rows, cols] tile, so it fuses into the segment
+        as a (rows, 1) column (softmax/rmsnorm row stats)."""
+        nonlocal cur_rows, n_compute, anchor
+        if len(eqn.outvars) != 1:
+            return False
+        v = eqn.invars[0]
+        if isinstance(v, jcore.Literal) or v in reduced_vars:
+            return False
+        vshape = tuple(v.aval.shape)
+        if tuple(eqn.params.get("axes", ())) != (len(vshape) - 1,):
+            return False                 # only the lane axis reduces near
+        if not jnp.issubdtype(eqn.outvars[0].aval.dtype, jnp.floating):
+            return False
+        r_op = 1
+        for d in vshape[:-1]:
+            r_op *= d
+        cols = vshape[-1]
+        rows = r_op if cur_rows is None else cur_rows
+        if r_op != rows:
+            return False
+        new_specs: dict[Any, tuple[str, int, int]] = {}
+        if v in produced:
+            if produced[v] != ("bulk", cols):
+                return False
+        else:
+            if len(vshape) < 2 or v.aval.size < bulk_threshold:
+                return False
+            if not _merge_spec(new_specs, v, ("bulk", rows, cols)):
+                return False
+        specs.update(new_specs)
+        out = eqn.outvars[0]
+        produced[out] = ("bulk", 1)
+        reduced_vars.add(out)
+        cur_rows = rows
+        if anchor is None:
+            anchor = vshape
         current.append(i)
         n_compute += 1
         return True
@@ -453,7 +627,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                         not bdims or bdims[-1] != len(oshape) - 1
                         or oshape[-1] != ishape[-1]):
                     return False
-            elif name in ("reshape", "squeeze", "expand_dims"):
+            elif name in ("reshape", "squeeze"):
                 if name == "reshape" and eqn.params.get("dimensions"):
                     return False
                 if _lane(tuple(eqn.invars[0].aval.shape)) != _lane(oshape):
@@ -474,7 +648,9 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
             return True
 
         # bulk-out layout eqn
-        if out.aval.size < bulk_threshold:
+        continuation = any(v in produced for v in eqn.invars
+                           if not isinstance(v, jcore.Literal))
+        if out.aval.size < bulk_threshold and not continuation:
             return False
         r_out, c_out = _bulk_view(oshape)
         rows = r_out if cur_rows is None else cur_rows
@@ -495,7 +671,16 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
             v = eqn.invars[0]
             ishape = tuple(v.aval.shape)
             bdims = tuple(eqn.params["broadcast_dimensions"])
-            if isinstance(v, jcore.Literal):
+            if (not isinstance(v, jcore.Literal) and v in produced
+                    and bdims == tuple(range(len(ishape)))
+                    and oshape[:len(ishape)] == ishape
+                    and all(d == 1 for d in oshape[len(ishape):])):
+                # pure rank expansion appending trailing singleton dims
+                # (a [B,S] row stat re-expanding to [B,S,1]): the 2-D
+                # view is unchanged
+                if produced[v] != ("bulk", c_out):
+                    return False
+            elif isinstance(v, jcore.Literal):
                 if not _is_param_shape(ishape):
                     return False
             elif _is_param_shape(ishape):
@@ -518,7 +703,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                         return False
                 elif not external_bulk(v):
                     return False
-        elif name in ("reshape", "squeeze", "expand_dims"):
+        elif name in ("reshape", "squeeze"):
             if name == "reshape" and eqn.params.get("dimensions"):
                 return False
             v = eqn.invars[0]
@@ -569,21 +754,133 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         current.append(i)
         return True
 
+    def _prologue_convertible(anchor_i, lhs_v, m_rows, k_dim):
+        """Whether the open elementwise run can be absorbed as the dot's
+        lhs prologue (applied per [rows_block, k_block] tile inside the
+        kernel).  Returns (pro_eqns, lhs_specs) or None."""
+        if lhs_v not in produced or param_out_set or reduced_vars:
+            return None
+        cur_set = set(current)
+        for j in current:
+            e = eqns[j]
+            if e.primitive.name not in ELEMENTWISE_PRIMS:
+                return None
+            ov = e.outvars[0]
+            if _bulk_view(tuple(ov.aval.shape)) != (m_rows, k_dim):
+                return None
+            if ov in outvar_set:
+                return None
+            cons = consumers.get(ov, [])
+            if any(c not in cur_set and c != anchor_i for c in cons):
+                return None              # chain value escapes: keep split
+            if ov is not lhs_v and anchor_i in cons:
+                return None              # only the lhs may feed the dot
+        seen: set[Any] = set()
+        lhs_specs: list[OperandSpec] = []
+        for j in current:
+            for v in eqns[j].invars:
+                if isinstance(v, jcore.Literal) or v in produced or \
+                        v in seen:
+                    continue
+                seen.add(v)
+                cls = specs.get(v)
+                if cls is None:
+                    return None
+                role, r, c = cls
+                if role == "bulk" and (r, c) == (m_rows, k_dim):
+                    lhs_specs.append(OperandSpec(v, "bulk_k", m_rows, k_dim))
+                elif role == "param" and c in (1, k_dim):
+                    lhs_specs.append(OperandSpec(v, "param_k", 1, c))
+                else:
+                    return None          # rep/tile prologues stay split
+        return list(current), lhs_specs
+
+    def try_admit_anchor(i, eqn) -> bool:
+        """A qualifying dot_general OPENS a matmul-anchored segment: the
+        contraction runs inside the fused kernel (K-grid + accumulator
+        scratch) and subsequent elementwise/layout/reduce eqns fuse as
+        its epilogue, so the product never round-trips HBM."""
+        nonlocal mm, cur_rows, n_compute, anchor, current, specs, produced
+        if mm is not None:
+            return False                 # one anchor per segment
+        (lc, rc), (lbatch, rbatch) = eqn.params["dimension_numbers"]
+        lhs_v, rhs_v = eqn.invars
+        if isinstance(lhs_v, jcore.Literal) or isinstance(rhs_v, jcore.Literal):
+            return False
+        lshape = tuple(lhs_v.aval.shape)
+        rshape = tuple(rhs_v.aval.shape)
+        out = eqn.outvars[0]
+        oshape = tuple(out.aval.shape)
+        # plain [*, K] x [K, N] contraction only: no batch dims, lhs
+        # contracts its lane axis, rhs is a rank-2 weight
+        if tuple(lbatch) or tuple(rbatch) or len(rshape) != 2 \
+                or len(lshape) < 2:
+            return False
+        if tuple(lc) != (len(lshape) - 1,) or tuple(rc) != (0,):
+            return False
+        if not jnp.issubdtype(out.aval.dtype, jnp.floating):
+            return False
+        # the kernel accumulates in f32: wider dtypes (f64 under x64)
+        # would silently lose precision vs the unfused XLA dot
+        if any(jnp.dtype(v.aval.dtype).itemsize > 4
+               for v in (lhs_v, rhs_v, out)):
+            return False
+        if out.aval.size < bulk_threshold:
+            return False
+        if rhs_v in produced:
+            return False
+        m_rows, n_cols = _bulk_view(oshape)
+        k_dim = lshape[-1]
+        if _bulk_view(lshape) != (m_rows, k_dim):
+            return False
+        if current:
+            conv = _prologue_convertible(i, lhs_v, m_rows, k_dim)
+            if conv is None:
+                return False
+            pro_eqns, lhs_specs = conv
+            span0, n_pro = current[0], n_compute
+        else:
+            pro_eqns = []
+            lhs_specs = [OperandSpec(lhs_v, "bulk_k", m_rows, k_dim)]
+            span0, n_pro = i, 0
+        mm = dict(eqn_idx=i, lhs_var=lhs_v, lhs_specs=lhs_specs,
+                  rhs=rhs_v, pro_eqns=pro_eqns, k=k_dim, n=n_cols,
+                  out_var=out, out_dtype=out.aval.dtype, span_start=span0)
+        # fresh elementwise state for the epilogue; the product is the
+        # segment's root value
+        current, specs = [], {}
+        produced = {out: ("bulk", n_cols)}
+        cur_rows, anchor, n_compute = m_rows, oshape, n_pro
+        return True
+
     def try_admit(i, eqn) -> bool:
-        name = eqn.primitive.name
-        if name in ELEMENTWISE_PRIMS:
+        tier = eqn_tier(eqn.primitive.name)
+        if tier == "near":
             return try_admit_elementwise(i, eqn)
-        if name in LAYOUT_PRIMS:
+        if tier == "layout":
             return try_admit_layout(i, eqn)
+        if tier == "reduce":
+            return try_admit_reduce(i, eqn)
+        if tier == "anchor":
+            return try_admit_anchor(i, eqn)
         return False
 
     def flush():
-        if n_compute < min_segment:
-            reset()
+        if mm is None:
+            if n_compute < min_segment:
+                reset()
+                return
+        elif n_compute < 1:
+            reset()                  # bare matmul: no fused ALU work
             return
         seg_idx = list(current)
         seg_set = set(seg_idx)
-        span_start, span_end = seg_idx[0], seg_idx[-1]
+        if mm is None:
+            span_start, span_end = seg_idx[0], seg_idx[-1]
+        else:
+            span_start = mm["span_start"]
+            span_end = max([mm["eqn_idx"], *seg_idx]) if seg_idx \
+                else mm["eqn_idx"]
 
         # eject param-out layout eqns whose output escapes the segment:
         # they run unfused just ahead of the kernel (their operands are
@@ -599,9 +896,14 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         seg_idx = [i for i in seg_idx if i in seg_set]
 
         produced_f: dict[Any, tuple[str, int]] = {}
+        out_candidates: list[Any] = []
+        if mm is not None:
+            produced_f[mm["out_var"]] = ("bulk", mm["n"])
+            out_candidates.append(mm["out_var"])
         for i in seg_idx:
             out = eqns[i].outvars[0]
             produced_f[out] = produced[out]
+            out_candidates.append(out)
 
         operand_specs: list[OperandSpec] = []
         seen: set[Any] = set()
@@ -616,10 +918,14 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                     cls = ("param", 1, _lane(tuple(v.aval.shape)))
                 operand_specs.append(OperandSpec(v, *cls))
 
+        # escape analysis runs over every eqn the kernel absorbs
+        member_set = set(seg_set)
+        if mm is not None:
+            member_set.add(mm["eqn_idx"])
+            member_set.update(mm["pro_eqns"])
         outputs, out_cols = [], []
-        for i in seg_idx:
-            v = eqns[i].outvars[0]
-            if v in outvar_set or any(ci not in seg_set
+        for v in out_candidates:
+            if v in outvar_set or any(ci not in member_set
                                       for ci in consumers.get(v, [])):
                 kind, cols = produced_f[v]
                 assert kind == "bulk", "segment outputs must be bulk"
@@ -631,16 +937,22 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
 
         # segment-boundary donation: a bulk input whose value dies at
         # this segment may share its buffer with a matching output.
+        # Never alias a buffer the matmul side also reads: rhs blocks
+        # walk the k axis over ALL rows, so an output row-block written
+        # at (i, nk-1) would clobber rhs rows that a later (i+1, k)
+        # step still reads (lhs excluded too, conservatively).
+        mm_vars: set[Any] = set()
+        if mm is not None:
+            mm_vars = {mm["rhs"], *(sp.var for sp in mm["lhs_specs"])}
         donations: list[tuple[int, int]] = []
         taken: set[int] = set()
-        seg_end = seg_idx[-1]
         for bi, sp in enumerate(operand_specs):
             if sp.role != "bulk" or sp.var in constvar_set or \
-                    sp.var in outvar_set:
+                    sp.var in outvar_set or sp.var in mm_vars:
                 continue
             if sp.var in invar_set and sp.var not in donate_invars:
                 continue
-            if any(ci > seg_end for ci in consumers.get(sp.var, ())):
+            if any(ci > span_end for ci in consumers.get(sp.var, ())):
                 continue
             for oi in range(len(outputs)):
                 if oi in taken:
@@ -651,11 +963,18 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                     taken.add(oi)
                     break
 
+        anchor_spec = None
+        if mm is not None:
+            anchor_spec = MatmulAnchor(
+                eqn_idx=mm["eqn_idx"], lhs_var=mm["lhs_var"],
+                lhs_specs=mm["lhs_specs"], rhs=mm["rhs"],
+                pro_eqns=mm["pro_eqns"], k=mm["k"], n=mm["n"],
+                out_var=mm["out_var"], out_dtype=mm["out_dtype"])
         segments.append(Segment(
             eqn_idx=seg_idx, rows=cur_rows, bulk_shape=anchor,
             operand_specs=operand_specs, outputs=outputs, out_cols=out_cols,
             donations=donations, pre_eqns=pre, n_compute=n_compute,
-            span_start=span_start, span_end=span_end))
+            span_start=span_start, span_end=span_end, matmul=anchor_spec))
         reset()
 
     for i, eqn in enumerate(eqns):
@@ -667,9 +986,12 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
     flush()
 
     # traffic accounting (the TSV analogue): naive = every eqn round-trips
-    # HBM; fused = segment boundary tensors only; donated = boundary
-    # buffers reused in place via input_output_aliases.
-    seg_eqns = {i for s in segments for i in s.eqn_idx}
+    # HBM; fused = segment boundary tensors only (for anchored segments
+    # that includes the matmul operands, while the product itself never
+    # leaves the accumulator — the [K, N] rhs weight is counted once per
+    # row block, matching the kernel's actual re-streaming); donated =
+    # boundary buffers reused in place via input_output_aliases.
+    seg_eqns = {i for s in segments for i in s.all_eqn_idx}
     naive = fused = donated = 0
     for i, eqn in enumerate(eqns):
         io_bytes = sum(
@@ -679,8 +1001,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         if i not in seg_eqns:
             fused += io_bytes
     for s in segments:
-        fused += sum(_dtype_size(sp.var.aval) for sp in s.operand_specs)
-        fused += sum(_dtype_size(v.aval) for v in s.outputs)
+        fused += s.io_bytes()
         donated += sum(_dtype_size(s.outputs[oi].aval)
                        for _, oi in s.donations)
     return OffloadPlan(ann, segments, naive, fused, donated)
@@ -695,8 +1016,17 @@ def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
 
     Executed inside the Pallas kernel: every value is a 2-D block —
     bulk/tile values are [block_rows, cols] tiles, params and rep values
-    are [1, cols] — and layout prims become block-local index ops."""
+    are [1, cols] — layout prims become block-local index ops, and
+    lane-axis reductions collapse the block to a [block_rows, 1] row
+    statistic (the whole lane extent is resident, so the reduce and its
+    re-broadcast are two passes over the row inside VMEM).
+
+    For a matmul-anchored segment this is the *epilogue*: the leading
+    value is the accumulator block (the dot_general's product), followed
+    by the external epilogue operands."""
     in_vars = [s.var for s in seg.operand_specs]
+    if seg.matmul is not None:
+        in_vars = [seg.matmul.out_var] + in_vars
     rows = seg.rows
 
     def fn(*vals, block_rows: int):
@@ -722,7 +1052,7 @@ def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
                 if val.ndim != 2:   # literal / raw param: to [1, lane] view
                     val = val.reshape(1, -1)
                 out = jnp.broadcast_to(val, target)
-            elif name in ("reshape", "squeeze", "expand_dims"):
+            elif name in ("reshape", "squeeze"):
                 out = ins[0]              # identical 2-D view by planning
             elif name == "slice":
                 start = eqn.params["start_indices"]
@@ -731,6 +1061,10 @@ def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
                 out = ins[0][:, start[-1]:limit[-1]:strides[-1]]
             elif name == "concatenate":
                 out = jnp.concatenate([jnp.asarray(x) for x in ins], axis=-1)
+            elif name == "reduce_sum":
+                out = jnp.asarray(ins[0]).sum(axis=-1, keepdims=True)
+            elif name == "reduce_max":
+                out = jnp.asarray(ins[0]).max(axis=-1, keepdims=True)
             else:
                 out = eqn.primitive.bind(*ins, **eqn.params)
                 if eqn.primitive.multiple_results:
@@ -739,6 +1073,54 @@ def _segment_fn(eqns: Sequence, seg: Segment) -> Callable:
         return tuple(env[v] for v in seg.outputs)
 
     return fn
+
+
+def _prologue_fn(eqns: Sequence, mm: MatmulAnchor) -> Callable:
+    """The anchored segment's lhs prologue: an elementwise chain applied
+    per [rows_block, k_block] tile before each partial product (dtype
+    casts, scales, per-channel dequant)."""
+    in_vars = [s.var for s in mm.lhs_specs]
+
+    def fn(*vals, block_rows: int):
+        env: dict[Any, Any] = dict(zip(in_vars, vals))
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for i in mm.pro_eqns:
+            eqn = eqns[i]
+            out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                     **eqn.params)
+            if eqn.primitive.multiple_results:
+                out = out[0]
+            env[eqn.outvars[0]] = out
+        return env[mm.lhs_var]
+
+    return fn
+
+
+def _segment_call(eqns: Sequence, seg: Segment, read, *, impl: str,
+                  donate: bool = True):
+    """Dispatch one planned segment to its fused kernel (shared by the
+    compile-time runner and the legacy interpreter).  Returns one
+    [rows, out_cols[j]] array per segment output."""
+    epi_meta = tuple(s.meta for s in seg.operand_specs)
+    out_dtypes = [v.aval.dtype for v in seg.outputs]
+    aliases = tuple(seg.donations) if donate else ()
+    if seg.matmul is None:
+        return kops.fused_segment_grid(
+            _segment_fn(eqns, seg), [read(s.var) for s in seg.operand_specs],
+            epi_meta, rows=seg.rows, out_cols=seg.out_cols,
+            out_dtypes=out_dtypes, donate=aliases, impl=impl)
+    mm = seg.matmul
+    return kops.fused_matmul_segment(
+        _prologue_fn(eqns, mm), _segment_fn(eqns, seg),
+        [read(s.var) for s in mm.lhs_specs],
+        tuple(s.meta for s in mm.lhs_specs), read(mm.rhs),
+        [read(s.var) for s in seg.operand_specs], epi_meta,
+        rows=seg.rows, k_dim=mm.k, n_dim=mm.n, acc_dtype=mm.out_dtype,
+        out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=aliases,
+        impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -776,17 +1158,10 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
         return inner_run, tuple(inner_flat.consts)
 
     def make_seg_step(seg: Segment) -> Callable:
-        seg_fn = _segment_fn(eqns, seg)
-        meta = tuple(s.meta for s in seg.operand_specs)
-        out_dtypes = [v.aval.dtype for v in seg.outputs]
         out_shapes = [tuple(v.aval.shape) for v in seg.outputs]
-        donate = tuple(seg.donations)
 
         def step(env, read):
-            vals = [read(s.var) for s in seg.operand_specs]
-            outs = kops.fused_segment_grid(
-                seg_fn, vals, meta, rows=seg.rows, out_cols=seg.out_cols,
-                out_dtypes=out_dtypes, donate=donate, impl=impl)
+            outs = _segment_call(eqns, seg, read, impl=impl)
             for var, val, shp in zip(seg.outputs, outs, out_shapes):
                 env[var] = val.reshape(shp)
         return step
@@ -1117,13 +1492,7 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
             seg = seg_by_start[i]
             for j in seg.pre_eqns:
                 bind_eqn(eqns[j])
-            fn = _segment_fn(eqns, seg)
-            vals = [read(s.var) for s in seg.operand_specs]
-            outs = kops.fused_segment_grid(
-                fn, vals, tuple(s.meta for s in seg.operand_specs),
-                rows=seg.rows, out_cols=seg.out_cols,
-                out_dtypes=[v.aval.dtype for v in seg.outputs],
-                donate=(), impl=impl)
+            outs = _segment_call(eqns, seg, read, impl=impl, donate=False)
             for var, val in zip(seg.outputs, outs):
                 env[var] = val.reshape(tuple(var.aval.shape))
             i = seg.span_end + 1

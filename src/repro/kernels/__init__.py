@@ -8,6 +8,7 @@ from repro.kernels.ops import (
     decode_attention,
     flash_attention,
     fused_elementwise,
+    fused_matmul_segment,
     fused_segment,
     fused_segment_grid,
     rmsnorm,
@@ -25,6 +26,7 @@ __all__ = [
     "decode_attention",
     "flash_attention",
     "fused_elementwise",
+    "fused_matmul_segment",
     "fused_segment",
     "fused_segment_grid",
     "rmsnorm",

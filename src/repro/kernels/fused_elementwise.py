@@ -143,6 +143,13 @@ def fused_segment_grid(
     ``donate`` is a sequence of (operand index, output index) pairs
     emitted as Pallas ``input_output_aliases``: segment-boundary buffers
     that die at this segment are reused in place for the outputs.
+
+    Lane-axis reductions fuse here as a two-pass row-reduce: blocks span
+    the full lane extent of their rows, so ``fn`` computes the row
+    statistic ([block_rows, 1]) in a first pass over the resident block
+    and applies/re-broadcasts it in a second pass — both in VMEM, with
+    no extra HBM traffic (rmsnorm/softmax row stats; see
+    ``repro.core.offload`` REDUCE_LANE_PRIMS admission).
     """
     limit = max(min(rows_block, rows), 1)
     g = 0   # rb must divide every rep repeat factor and tile period

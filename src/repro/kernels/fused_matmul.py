@@ -1,0 +1,192 @@
+"""Matmul-anchored near-bank segment — the fused-GEMM-epilogue kernel.
+
+The offload planner (repro.core.offload) anchors a near segment on a
+qualifying ``dot_general``: this kernel runs the [rows, K] x [K, N]
+contraction over a (row_blocks, k_blocks) grid with an f32 accumulator
+in VMEM scratch, applies the elementwise *prologue* to each lhs tile
+before its partial product (dtype casts, scales, per-channel dequant)
+and the *epilogue* (bias+gelu, swiglu gate/split, residual add,
+lane-axis reductions, dtype cast) to the finished accumulator
+in-registers before the single store.  The product tensor itself never
+round-trips HBM — the flash-attention-style producer/consumer fusion of
+the paper's §IV-B1 offload decision applied at the MXU boundary.
+
+Grid: (rows // rows_block, K // k_block), K innermost (sequential);
+block sizes are divisors of the extents so no padding is ever needed
+and segment-boundary donation (``input_output_aliases`` on dead
+epilogue operands) always holds.
+
+Operand roles (see repro.core.offload.OperandSpec):
+  * lhs side  — ``bulk_k`` [rows, K] tiles walk (i, k); ``param_k``
+                [1, K] vectors walk (0, k) ([1, 1] scalars stay put)
+  * rhs       — the [K, N] weight, streamed (k, 0)
+  * epilogue  — the usual ``bulk``/``param``/``rep``/``tile`` row views,
+                blocked over rows only (the k axis revisits them)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+from repro.kernels.fused_elementwise import _largest_divisor_leq
+
+
+# VMEM budget for the f32 accumulator (and, symmetrically, the rhs
+# block): wide-N dots shrink their row/k blocks to stay on-chip instead
+# of failing to compile.
+_ACC_VMEM_BYTES = 4 * 1024 * 1024
+
+
+def _block_budget(block: int, n_dim: int) -> int:
+    """Clamp a row/k block extent so block x n_dim f32 fits the budget."""
+    return max(min(block, _ACC_VMEM_BYTES // (4 * max(n_dim, 1))), 8)
+
+
+def _row_block(rows: int, epi_specs: Sequence[tuple[str, int, int]],
+               rows_block: int, n_dim: int) -> int:
+    """Row-block extent: the largest divisor of the rep/tile gcd (or of
+    ``rows``) that fits the (VMEM-clamped) block budget — exact tiling,
+    so donation aliases always hold."""
+    limit = max(min(_block_budget(rows_block, n_dim), rows), 1)
+    g = 0   # rows_block must divide every rep repeat factor/tile period
+    for role, op_rows, _ in epi_specs:
+        if role == "rep":
+            g = math.gcd(g, rows // op_rows)
+        elif role == "tile":
+            g = math.gcd(g, op_rows)
+    return _largest_divisor_leq(g if g else rows, limit)
+
+
+def matmul_row_blocks(rows: int, epi_specs: Sequence[tuple[str, int, int]],
+                      n_dim: int, rows_block: int = 512) -> int:
+    """Number of row blocks the anchored kernel launches.  The [K, N]
+    rhs weight is re-streamed once per row block; the offload planner's
+    traffic accounting uses this same computation so the modeled bytes
+    match what the kernel actually reads."""
+    return rows // _row_block(rows, epi_specs, rows_block, n_dim)
+
+
+def _mm_kernel(*refs, pro_fn: Callable, epi_fn: Callable, n_lhs: int,
+               n_epi: int, acc_dtype):
+    acc_ref = refs[-1]
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lhs = pro_fn(*[r[...] for r in refs[:n_lhs]])
+    rhs = refs[n_lhs][...]
+    acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        h = acc_ref[...].astype(acc_dtype)
+        epi_vals = [r[...] for r in refs[n_lhs + 1:n_lhs + 1 + n_epi]]
+        outs = epi_fn(h, *epi_vals)
+        for o_ref, o in zip(refs[n_lhs + 1 + n_epi:-1], outs):
+            o_ref[...] = o.astype(o_ref.dtype)
+
+
+def fused_matmul_segment(
+    pro_fn: Callable,
+    epi_fn: Callable,
+    lhs_operands: Sequence[jnp.ndarray],
+    lhs_specs: Sequence[tuple[str, int, int]],
+    rhs: jnp.ndarray,
+    epi_operands: Sequence[jnp.ndarray],
+    epi_specs: Sequence[tuple[str, int, int]],
+    *,
+    rows: int,
+    k_dim: int,
+    n_dim: int,
+    acc_dtype,
+    out_cols: Sequence[int],
+    out_dtypes: Sequence,
+    donate: Sequence[tuple[int, int]] = (),
+    rows_block: int = 512,
+    k_block: int = 512,
+    interpret: bool = False,
+) -> tuple:
+    """One fused launch for an anchored segment.
+
+    ``pro_fn(*lhs_tiles, block_rows)`` maps the lhs-side tiles to one
+    [rows_block, k_block] tile; ``epi_fn(acc, *epi_blocks, block_rows)``
+    maps the [rows_block, N] accumulator (+ external epilogue blocks) to
+    one [rows_block, out_cols[j]] block per output.  ``donate`` pairs
+    index into ``epi_operands`` and become Pallas
+    ``input_output_aliases`` (offset past the lhs/rhs inputs).
+    """
+    rb = _row_block(rows, epi_specs, rows_block, n_dim)
+    rk = _largest_divisor_leq(
+        k_dim, max(min(_block_budget(k_block, n_dim), k_dim), 1))
+    grid = (rows // rb, k_dim // rk)
+
+    ops2, in_specs = [], []
+    for (role, _, c), v in zip(lhs_specs, lhs_operands):
+        v = jnp.asarray(v)
+        if role == "param_k":
+            ops2.append(v.reshape(1, c))
+            if c == k_dim:
+                in_specs.append(pl.BlockSpec((1, rk), lambda i, k: (0, k)))
+            else:               # [1, 1] scalar param
+                in_specs.append(pl.BlockSpec((1, c), lambda i, k: (0, 0)))
+        else:                   # bulk_k
+            ops2.append(v.reshape(rows, k_dim))
+            in_specs.append(pl.BlockSpec((rb, rk), lambda i, k: (i, k)))
+    ops2.append(jnp.asarray(rhs).reshape(k_dim, n_dim))
+    in_specs.append(pl.BlockSpec((rk, n_dim), lambda i, k: (k, 0)))
+    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+        v = jnp.asarray(v)
+        if role == "param":
+            ops2.append(v.reshape(1, c))
+            in_specs.append(pl.BlockSpec((1, c), lambda i, k: (0, 0)))
+        elif role == "bulk":
+            ops2.append(v.reshape(rows, c))
+            in_specs.append(pl.BlockSpec((rb, c), lambda i, k: (i, 0)))
+        elif role == "rep":
+            q = (rows // op_rows) // rb   # rb divides the repeat factor
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(
+                pl.BlockSpec((1, c), lambda i, k, q=q: (i // q, 0)))
+        else:                             # tile: rb divides the period
+            p = op_rows // rb
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(
+                pl.BlockSpec((rb, c), lambda i, k, p=p: (i % p, 0)))
+
+    out_shape = [jax.ShapeDtypeStruct((rows, c), dt)
+                 for c, dt in zip(out_cols, out_dtypes)]
+    out_specs = [pl.BlockSpec((rb, c), lambda i, k: (i, 0))
+                 for c in out_cols]
+    aliases = {len(lhs_operands) + 1 + bi: oi for bi, oi in donate}
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _mm_kernel,
+            pro_fn=functools.partial(pro_fn, block_rows=rb),
+            epi_fn=functools.partial(epi_fn, block_rows=rb),
+            n_lhs=len(lhs_operands),
+            n_epi=len(epi_operands),
+            acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((rb, n_dim), jnp.float32)],
+        input_output_aliases=aliases,
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*ops2)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return tuple(outs)

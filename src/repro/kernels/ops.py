@@ -23,6 +23,9 @@ from repro.kernels.fused_elementwise import fused_segment as _fused_seg_pallas
 from repro.kernels.fused_elementwise import (
     fused_segment_grid as _fused_seg_grid_pallas,
 )
+from repro.kernels.fused_matmul import (
+    fused_matmul_segment as _fused_mm_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rotary import rotary as _rotary_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -153,3 +156,40 @@ def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
                                   out_cols=out_cols, out_dtypes=out_dtypes,
                                   donate=donate,
                                   interpret=(impl == "interpret"), **kw)
+
+
+def fused_matmul_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+                         epi_operands, epi_specs, *, rows, k_dim, n_dim,
+                         acc_dtype, out_cols, out_dtypes, donate=(),
+                         impl: Impl = "auto", **kw):
+    """Matmul-anchored near-bank segment (fused GEMM prologue/epilogue —
+    what the offload rewriter emits for dot_general-anchored segments).
+    The "ref" path materializes the block views and runs prologue ->
+    contraction -> epilogue as full-array jnp (one XLA dot; donation is
+    XLA's problem there)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        lhs_full = [jnp.asarray(v).reshape(
+            (1, c) if role == "param_k" else (rows, k_dim))
+            for (role, _, c), v in zip(lhs_specs, lhs_operands)]
+        lhs = pro_fn(*lhs_full, block_rows=rows)
+        h = jnp.dot(lhs, jnp.asarray(rhs).reshape(k_dim, n_dim),
+                    preferred_element_type=jnp.float32).astype(acc_dtype)
+        full = [h]
+        for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+            v2 = jnp.asarray(v).reshape(
+                (1, c) if role == "param" else (op_rows, c)
+                if role in ("rep", "tile") else (rows, c))
+            if role == "rep":
+                v2 = jnp.repeat(v2, rows // op_rows, axis=0)
+            elif role == "tile":
+                v2 = jnp.tile(v2, (rows // op_rows, 1))
+            full.append(v2)
+        outs = epi_fn(*full, block_rows=rows)
+        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+    return _fused_mm_pallas(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+                            epi_operands, epi_specs, rows=rows, k_dim=k_dim,
+                            n_dim=n_dim, acc_dtype=acc_dtype,
+                            out_cols=out_cols, out_dtypes=out_dtypes,
+                            donate=donate,
+                            interpret=(impl == "interpret"), **kw)

@@ -104,11 +104,11 @@ def jaxpr_cost(closed, *, with_fusion: bool = True,
             wrapper = closed if hasattr(closed, "jaxpr") else \
                 jexc.ClosedJaxpr(jaxpr, [])
             plan = plan_offload(wrapper, min_segment=2)
-            seg_eqns = {i for s in plan.segments for i in s.eqn_idx}
+            seg_eqns = {i for s in plan.segments for i in s.all_eqn_idx}
             for s in plan.segments:
-                seg_io[s.eqn_idx[0]] = float(sum(
-                    _aval_bytes(v.aval)
-                    for v in (*s.bulk_inputs, *s.param_inputs, *s.outputs)))
+                # Segment.io_bytes is the same accounting plan_offload
+                # uses (anchored rhs counted once per row block)
+                seg_io[s.all_eqn_idx[0]] = float(s.io_bytes())
         except Exception:
             seg_eqns, seg_io = set(), {}
 

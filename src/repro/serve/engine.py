@@ -59,6 +59,10 @@ class Engine:
         # the hot path: with offload=True the decode step goes through the
         # compile-time near-bank rewriter; the plan is built once for the
         # pool's decode signature and the result still jits + donates.
+        # Projection matmuls anchor fused segments (their bias/activation
+        # epilogues run on the accumulator) and rmsnorm/softmax row stats
+        # fuse as lane reductions, so decode value chains stay near-bank
+        # end to end.
         decode_fn = self.model.decode_step
         if offload:
             from repro.core.offload import mpu_offload
@@ -82,7 +86,8 @@ class Engine:
         ``traces``/``plan_misses`` would mean the decode signature is
         unstable and the step is being re-planned; growing ``evictions``
         means the signature churn exceeds the ``offload_max_plans`` LRU
-        bound and plans are being recompiled."""
+        bound and plans are being recompiled.  ``hit_rate`` summarizes
+        cache health as one fraction (see ``OffloadStats.hit_rate``)."""
         if self._decode_offload is None:
             return None
         return self._decode_offload.stats.as_dict()

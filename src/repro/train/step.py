@@ -10,8 +10,12 @@ With ``offload=True`` (or ``tcfg.offload``) the whole step is passed
 through the compile-time near-bank rewriter (repro.core.offload): the
 step's elementwise value chains — activation epilogues, residual adds,
 the AdamW update math — execute as single-pass fused kernels inside one
-jitted executable.  The rewrite happens once per batch signature and is
-cached; wrapping in ``jax.jit`` on top composes (the loop does).
+jitted executable.  Forward-pass projection matmuls anchor their own
+fused segments (epilogue applied to the accumulator, product never in
+HBM) and lane-axis reductions (rmsnorm/softmax row stats) fuse into
+their chains; the transposed grad-time contractions stay far.  The
+rewrite happens once per batch signature and is cached; wrapping in
+``jax.jit`` on top composes (the loop does).
 """
 from __future__ import annotations
 

@@ -134,6 +134,67 @@ def test_workload_register_breakdown_matches_paper_trend():
     assert mean["B"] < 0.15
 
 
+def _known_primitive_names() -> set[str]:
+    """Every primitive name registered in the running jax: scanned from
+    the public extension registry plus the lax/control-flow/prng/pjit
+    modules (some primitives are only reachable there)."""
+    import importlib
+
+    from jax.extend import core as jcore
+
+    names: set[str] = set()
+    modules = [
+        "jax.extend.core.primitives", "jax.lax", "jax._src.lax.lax",
+        "jax._src.lax.control_flow", "jax._src.lax.slicing",
+        "jax._src.lax.parallel", "jax._src.lax.ann",
+        "jax._src.lax.convolution", "jax._src.lax.windowed_reductions",
+        "jax._src.prng", "jax._src.pjit", "jax._src.custom_derivatives",
+        "jax._src.ad_checkpoint", "jax._src.core",
+    ]
+    for m in modules:
+        try:
+            mod = importlib.import_module(m)
+        except ImportError:
+            continue
+        for v in vars(mod).values():
+            if isinstance(v, jcore.Primitive):
+                names.add(v.name)
+    return names
+
+
+def test_far_prims_are_real_primitive_names():
+    """Every opcode-set entry must name a primitive that actually exists
+    (guards dead strings like the old "scatter_add" — the real jax name
+    is the hyphenated "scatter-add" — and "remat" vs "remat2")."""
+    from repro.core.locator import (
+        ANCHOR_PRIMS,
+        ELEMENTWISE_PRIMS,
+        FAR_PRIMS,
+        LAYOUT_PRIMS,
+        REDUCE_LANE_PRIMS,
+        _INDEX_OPERANDS,
+    )
+
+    known = _known_primitive_names()
+    assert len(known) > 100          # the scan found the real registry
+    for tier in (FAR_PRIMS, ANCHOR_PRIMS, REDUCE_LANE_PRIMS, LAYOUT_PRIMS,
+                 ELEMENTWISE_PRIMS, set(_INDEX_OPERANDS)):
+        missing = tier - known
+        assert not missing, f"dead primitive names: {sorted(missing)}"
+
+
+def test_eqn_tier_classification():
+    from repro.core.locator import eqn_tier
+
+    assert eqn_tier("add") == "near"
+    assert eqn_tier("broadcast_in_dim") == "layout"
+    assert eqn_tier("dot_general") == "anchor"
+    assert eqn_tier("reduce_sum") == "reduce"
+    assert eqn_tier("reduce_max") == "reduce"
+    assert eqn_tier("gather") == "far"
+    assert eqn_tier("definitely_not_a_prim") == "far"   # far is the fallback
+
+
 def test_jaxpr_annotation_separates_chains():
     """jaxpr frontend: value chain (on bulk fp data) near; the gather
     index chain far."""

@@ -68,10 +68,10 @@ def test_traffic_reduction_at_least_one(ops):
         assert plan.traffic_reduction >= 1.0
 
 
-def test_offload_with_params_and_matmul_boundary():
+def test_offload_with_params_and_matmul_anchor():
     def fn(x, w, b, s):
-        h = x @ w                       # far (MXU)
-        h = jax.nn.gelu(h * s + b)      # near chain
+        h = x @ w                       # MXU anchor: opens the segment
+        h = jax.nn.gelu(h * s + b)      # near epilogue chain
         h = h * jax.nn.sigmoid(h)
         return h + x
 
@@ -81,13 +81,15 @@ def test_offload_with_params_and_matmul_boundary():
     b = jax.random.normal(jax.random.fold_in(k, 2), (64,))
     s = jnp.ones((64,)) * 1.1
     plan = offload_report(fn, x, w, b, s, bulk_threshold=64)
-    # the matmul must NOT be inside any segment
+    # the matmul anchors the segment: the dot eqn is inside the fused
+    # kernel (all_eqn_idx) and the whole chain is one segment
     closed = jax.make_jaxpr(fn)(x, w, b, s)
-    dot_idx = [i for i, e in enumerate(closed.jaxpr.eqns)
-               if e.primitive.name == "dot_general"]
-    seg_members = {i for seg in plan.segments for i in seg.eqn_idx}
-    assert not (set(dot_idx) & seg_members)
-    assert len(plan.segments) >= 1
+    dot_idx = {i for i, e in enumerate(closed.jaxpr.eqns)
+               if e.primitive.name == "dot_general"}
+    seg_members = {i for seg in plan.segments for i in seg.all_eqn_idx}
+    assert dot_idx <= seg_members
+    assert len(plan.segments) == 1
+    assert plan.segments[0].matmul is not None
     got = mpu_offload(fn, bulk_threshold=64, impl="interpret")(x, w, b, s)
     np.testing.assert_allclose(got, fn(x, w, b, s), rtol=1e-4, atol=1e-4)
 

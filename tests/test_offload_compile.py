@@ -267,18 +267,19 @@ def test_rank1_bulk_broadcast_fuses():
 # segment-boundary donation
 # ---------------------------------------------------------------------------
 
-def _two_seg(x, y, w):
+def _two_seg(x, y):
     h = jnp.tanh(x) * 2.0 + y
-    h2 = h @ w
+    h2 = jax.lax.sort(h, dimension=1)       # far: hard segment boundary
     return jax.nn.silu(h2) * 0.5 + 1.0
 
 
 def test_two_segment_chain_shows_input_output_aliases():
-    """A segment input that dies at the segment (here the matmul output
-    feeding the second segment) is donated: the fused pallas_call in the
-    rewritten jaxpr carries a non-empty ``input_output_aliases``."""
-    x, y, w = _rand((64, 32)), _rand((64, 32), 1), _rand((32, 32), 2) * 0.1
-    closed = jax.make_jaxpr(_two_seg)(x, y, w)
+    """A segment input that dies at the segment (here the sort output
+    feeding the second segment — sort is far and not anchorable) is
+    donated: the fused pallas_call in the rewritten jaxpr carries a
+    non-empty ``input_output_aliases``."""
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    closed = jax.make_jaxpr(_two_seg)(x, y)
     rewritten, plan = rewrite_offload(closed, bulk_threshold=64,
                                       impl="interpret")
     assert len(plan.segments) == 2
@@ -288,11 +289,35 @@ def test_two_segment_chain_shows_input_output_aliases():
                if e.primitive.name == "pallas_call"]
     assert len(aliases) == 2
     assert any(a for a in aliases), aliases   # at least one real alias
-    out = jax.core.eval_jaxpr(rewritten.jaxpr, rewritten.consts, x, y, w)
+    out = jax.core.eval_jaxpr(rewritten.jaxpr, rewritten.consts, x, y)
     np.testing.assert_allclose(np.asarray(out[0]),
-                               np.asarray(_two_seg(x, y, w)),
+                               np.asarray(_two_seg(x, y)),
                                rtol=1e-5, atol=1e-5)
     assert plan.effective_hbm_bytes < plan.fused_hbm_bytes
+
+
+def test_matmul_chain_fuses_to_single_anchored_kernel():
+    """The PR-2 shape of this chain was two segments around a far
+    matmul; the anchored planner now absorbs the prologue AND epilogue
+    into one kernel around the dot — one pallas_call, less traffic."""
+    def chain(x, y, w):
+        h = jnp.tanh(x) * 2.0 + y
+        h2 = h @ w
+        return jax.nn.silu(h2) * 0.5 + 1.0
+
+    x, y, w = _rand((64, 32)), _rand((64, 32), 1), _rand((32, 32), 2) * 0.1
+    closed = jax.make_jaxpr(chain)(x, y, w)
+    rewritten, plan = rewrite_offload(closed, bulk_threshold=64,
+                                      impl="interpret")
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and seg.matmul.pro_eqns
+    names = [e.primitive.name for e in rewritten.jaxpr.eqns]
+    assert names == ["pallas_call"], names
+    out = jax.core.eval_jaxpr(rewritten.jaxpr, rewritten.consts, x, y, w)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(chain(x, y, w)),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_donated_invar_not_read_after_write():
@@ -321,6 +346,20 @@ def test_donated_invar_not_read_after_write():
 # ---------------------------------------------------------------------------
 # LRU plan cache
 # ---------------------------------------------------------------------------
+
+def test_stats_hit_rate_and_repr():
+    fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    assert fn.stats.hit_rate == 0.0          # no calls yet
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    fn(x, y)
+    assert fn.stats.hit_rate == 0.0          # one miss
+    fn(x, y)
+    fn(x, y)
+    assert abs(fn.stats.hit_rate - 2 / 3) < 1e-9
+    assert fn.stats.as_dict()["hit_rate"] == fn.stats.hit_rate
+    r = repr(fn.stats)
+    assert "plan_evictions=0" in r and "hit_rate=0.667" in r
+
 
 def test_plan_cache_lru_eviction_accounting():
     fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret",

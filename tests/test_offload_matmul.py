@@ -1,0 +1,333 @@
+"""Matmul-anchored segments + lane-axis reduction fusion.
+
+The PR-3 acceptance contract:
+  * a qualifying ``dot_general`` OPENS a near segment: its elementwise
+    epilogue (bias+gelu, swiglu lane-split gate, residual add, dtype
+    cast) and broadcast-compatible prologue fuse into one
+    ``fused_matmul_segment`` kernel (K-reduction grid + accumulator
+    scratch), so the product tensor never round-trips HBM
+  * disqualified contractions (batch dims, transposed layouts, rank>2
+    rhs) stay far — correctness never depends on anchoring
+  * lane-axis ``reduce_sum``/``reduce_max`` fuse INTO segments as
+    (rows, 1) row statistics, so rmsnorm- and softmax-shaped chains are
+    a single segment end to end
+  * segment-boundary donation keeps working across anchored segments
+    (epilogue operands that die at the segment become Pallas
+    ``input_output_aliases``)
+  * interior broadcasts ([B,1,S,1,D]) still conservatively split — the
+    ROADMAP limitation is guarded, not silently miscompiled
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    mpu_offload,
+    offload_report,
+    plan_offload,
+    rewrite_offload,
+)
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _check(fn, *args, bulk_threshold=64, rtol=1e-5, atol=1e-5):
+    got = mpu_offload(fn, bulk_threshold=bulk_threshold,
+                      impl="interpret")(*args)
+    want = fn(*args)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# anchoring: epilogues and prologues
+# ---------------------------------------------------------------------------
+
+def test_gemm_bias_gelu_single_anchored_segment():
+    def fn(x, w, b, y):
+        h = x @ w
+        return jax.nn.gelu(h + b) + y
+
+    x, w = _rand((8, 64, 32)), _rand((32, 48), 1) * 0.1
+    b, y = _rand((48,), 2), _rand((8, 64, 48), 3)
+    plan = offload_report(fn, x, w, b, y, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None
+    assert seg.matmul.k == 32 and seg.matmul.n == 48
+    assert plan.traffic_reduction > 1.5
+    _check(fn, x, w, b, y)
+
+
+def test_gemm_swiglu_lane_split_epilogue_fuses():
+    """The fused gate+up projection: [R,2C] product lane-split into the
+    silu gate and the linear half inside the anchored kernel."""
+    def fn(x, wgu):
+        hw = x @ wgu
+        a, g = hw[:, :48], hw[:, 48:]
+        return jax.nn.silu(a) * g
+
+    x, wgu = _rand((512, 32)), _rand((32, 96), 1) * 0.1
+    plan = offload_report(fn, x, wgu, bulk_threshold=64)
+    assert len(plan.segments) == 1 and plan.segments[0].matmul is not None
+    assert plan.traffic_reduction > 1.5
+    assert plan.segments[0].out_cols == [48]     # store only the gated half
+    _check(fn, x, wgu)
+
+
+def test_gemm_prologue_cast_and_scale_absorbed():
+    """A bf16->f32 cast + scale chain feeding the lhs is applied per
+    [rows_block, k_block] tile inside the kernel, not materialized."""
+    def fn(xb, w, y):
+        l = xb.astype(jnp.float32) * 0.5
+        h = l @ w
+        return jnp.tanh(h) + y
+
+    xb = _rand((512, 32)).astype(jnp.bfloat16)
+    w, y = _rand((32, 96), 1) * 0.1, _rand((512, 96), 2)
+    plan = offload_report(fn, xb, w, y, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and len(seg.matmul.pro_eqns) == 2
+    _check(fn, xb, w, y, rtol=5e-3, atol=5e-3)
+
+
+def test_gemm_epilogue_bf16_numerics():
+    def fn(x, w, b):
+        h = x @ w
+        return (jax.nn.gelu(h + b)).astype(jnp.bfloat16)
+
+    x, w, b = _rand((128, 64)), _rand((64, 64), 1) * 0.1, _rand((64,), 2)
+    plan = offload_report(fn, x, w, b, bulk_threshold=64)
+    assert len(plan.segments) == 1 and plan.segments[0].matmul is not None
+    _check(fn, x, w, b, rtol=5e-2, atol=5e-2)
+
+
+def test_bare_matmul_is_not_anchored():
+    """No fused ALU work around the dot -> nothing to win; the matmul
+    re-binds far exactly as before."""
+    def fn(x, w):
+        return x @ w
+
+    x, w = _rand((128, 64)), _rand((64, 64), 1)
+    plan = offload_report(fn, x, w, bulk_threshold=64)
+    assert len(plan.segments) == 0
+    _check(fn, x, w)
+
+
+def test_batched_and_transposed_dots_stay_far():
+    """Batch dims / non-standard contraction layouts (the grad-time
+    xT @ g and g @ wT forms) are not anchorable and stay far."""
+    def batched(q, k):
+        return jnp.einsum("bsh,bth->bst", q, k) * 2.0
+
+    q, k = _rand((4, 16, 32)), _rand((4, 16, 32), 1)
+    plan = offload_report(batched, q, k, bulk_threshold=64)
+    assert all(s.matmul is None for s in plan.segments)
+    _check(batched, q, k)
+
+    def transposed(x, g):
+        # the grad-time xT @ g contraction: lhs contracts dim 0
+        wg = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())))
+        return wg * 0.5 + 1.0
+
+    x, g = _rand((128, 64)), _rand((128, 64), 1)
+    plan = offload_report(transposed, x, g, bulk_threshold=64)
+    assert all(s.matmul is None for s in plan.segments)
+    _check(transposed, x, g)
+
+
+def test_anchored_segment_epilogue_donation():
+    """A residual buffer that dies at the anchored segment is donated:
+    the rewritten pallas_call carries input_output_aliases and donated
+    execution stays correct call over call."""
+    def fn(x, w, y):
+        h = x @ w
+        return jax.nn.gelu(h) + y
+
+    x, w, y = _rand((128, 64)), _rand((64, 64), 1) * 0.1, _rand((128, 64), 2)
+    closed = jax.make_jaxpr(fn)(x, w, y)
+    rewritten, plan = rewrite_offload(closed, bulk_threshold=64,
+                                      impl="interpret", donate_argnums=(2,))
+    assert len(plan.segments) == 1 and plan.segments[0].matmul is not None
+    assert plan.donated_hbm_bytes > 0
+    aliases = [e.params.get("input_output_aliases", ())
+               for e in rewritten.jaxpr.eqns
+               if e.primitive.name == "pallas_call"]
+    assert aliases and any(a for a in aliases), aliases
+
+    wrapped = mpu_offload(fn, bulk_threshold=64, impl="interpret",
+                          donate_argnums=(2,))
+    want = np.asarray(fn(x, w, y))       # before y's buffer is donated
+    np.testing.assert_allclose(np.asarray(wrapped(x, w, y)), want,
+                               rtol=1e-5, atol=1e-5)
+    y2 = _rand((128, 64), 5)
+    want2 = np.asarray(fn(x, w, y2))
+    np.testing.assert_allclose(np.asarray(wrapped(x, w, y2)), want2,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_two_anchored_mlp_layers_two_segments():
+    """Back-to-back projections: each dot anchors its own segment and
+    the boundary activation flows between them."""
+    def fn(x, w1, b1, w2, y):
+        h = jax.nn.gelu(x @ w1 + b1)
+        return (h @ w2) * 0.5 + y
+
+    x = _rand((256, 32))
+    w1, b1 = _rand((32, 64), 1) * 0.1, _rand((64,), 2)
+    w2, y = _rand((64, 32), 3) * 0.1, _rand((256, 32), 4)
+    plan = offload_report(fn, x, w1, b1, w2, y, bulk_threshold=64)
+    anchored = [s for s in plan.segments if s.matmul is not None]
+    assert len(anchored) == 2
+    _check(fn, x, w1, b1, w2, y)
+
+
+def test_f64_dot_not_anchored():
+    """The anchored kernel accumulates in f32; f64 dots must stay on the
+    (exact) unfused XLA path rather than silently losing precision."""
+    def fn(x, w, b):
+        return jax.nn.gelu(x @ w + b)
+
+    with jax.experimental.enable_x64():
+        closed = jax.make_jaxpr(fn)(
+            jax.ShapeDtypeStruct((128, 64), jnp.float64),
+            jax.ShapeDtypeStruct((64, 64), jnp.float64),
+            jax.ShapeDtypeStruct((64,), jnp.float64))
+        plan = plan_offload(closed, bulk_threshold=64)
+    assert all(s.matmul is None for s in plan.segments)
+
+
+def test_rhs_buffer_never_donated():
+    """An epilogue operand that is ALSO the anchored rhs must not be
+    donated: rhs blocks walk the k axis over all rows, so aliasing the
+    output into that buffer would clobber rows later row-blocks still
+    read (invisible under interpret mode — guarded at plan level)."""
+    def fn(x, w):
+        wq = jax.lax.sort(w, dimension=1)
+        h = x @ wq
+        return jax.nn.gelu(h) + wq
+
+    x, w = _rand((64, 64)), _rand((64, 64), 1) * 0.1
+    plan = offload_report(fn, x, w, bulk_threshold=64)
+    seg = next(s for s in plan.segments if s.matmul is not None)
+    donated_vars = {seg.operand_specs[bi].var for bi, _ in seg.donations}
+    assert seg.matmul.rhs not in donated_vars
+    _check(fn, x, w)
+
+
+def test_wide_n_row_blocks_shrink_for_vmem():
+    """Wide-N dots shrink their row/k blocks so the f32 accumulator
+    scratch stays within the VMEM budget instead of failing to
+    compile; the planner's traffic accounting follows the same math."""
+    from repro.kernels.fused_matmul import (
+        _ACC_VMEM_BYTES,
+        _row_block,
+        matmul_row_blocks,
+    )
+
+    assert _row_block(4096, [], 512, 256) == 512      # narrow: full block
+    rb = _row_block(4096, [], 512, 16384)
+    assert rb < 512 and rb * 16384 * 4 <= _ACC_VMEM_BYTES
+    assert matmul_row_blocks(4096, [], 16384) == 4096 // rb
+
+
+# ---------------------------------------------------------------------------
+# lane-axis reductions
+# ---------------------------------------------------------------------------
+
+def test_softmax_chain_single_segment():
+    def fn(x):
+        return jax.nn.softmax(x * 0.125, axis=-1)
+
+    x = _rand((8, 64, 32))
+    plan = offload_report(fn, x, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    assert plan.traffic_reduction > 1.5
+    _check(fn, x, atol=1e-6)
+
+
+def test_rmsnorm_chain_single_segment():
+    def fn(x, s):
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-5) * s
+
+    x, s = _rand((8, 64, 32)), jnp.ones((32,)) * 1.1
+    plan = offload_report(fn, x, s, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    assert plan.traffic_reduction > 1.5
+    _check(fn, x, s, atol=1e-6)
+
+
+def test_gemm_softmax_epilogue_fuses_reduction():
+    """A row softmax directly on the matmul product — the anchored
+    epilogue admits the lane reductions too."""
+    def fn(x, w):
+        return jax.nn.softmax(x @ w, axis=-1)
+
+    x, w = _rand((256, 32)), _rand((32, 64), 1) * 0.2
+    plan = offload_report(fn, x, w, bulk_threshold=64)
+    assert len(plan.segments) == 1 and plan.segments[0].matmul is not None
+    _check(fn, x, w, atol=1e-6)
+
+
+def test_non_lane_reduction_still_splits():
+    """Reductions over a non-lane axis are not near-admissible; the
+    chain splits and results stay exact."""
+    def fn(x):
+        m = jnp.sum(x, axis=0)               # row-axis reduce: far
+        return jnp.tanh(x) * 2.0 + m
+
+    x = _rand((64, 32))
+    plan = offload_report(fn, x, bulk_threshold=64)
+    closed = jax.make_jaxpr(fn)(x)
+    red_idx = {i for i, e in enumerate(closed.jaxpr.eqns)
+               if e.primitive.name == "reduce_sum"}
+    seg_members = {i for s in plan.segments for i in s.all_eqn_idx}
+    assert not (red_idx & seg_members)
+    _check(fn, x)
+
+
+def test_reduced_stat_as_segment_output():
+    """A row statistic that escapes the segment is stored as a (rows, 1)
+    column and reshaped back to its rank-reduced aval."""
+    def fn(x):
+        e = jnp.exp(x * 0.5)
+        return e / jnp.sum(e, axis=-1, keepdims=True), jnp.sum(e, axis=-1)
+
+    x = _rand((64, 32))
+    plan = offload_report(fn, x, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    _check(fn, x, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# interior broadcasts: the guarded ROADMAP limitation
+# ---------------------------------------------------------------------------
+
+def test_interior_broadcast_conservatively_splits():
+    """[B,1,S,1,D] against [B,T,S,U,D] has two non-adjacent broadcast
+    dims — not expressible as one 2-D block index map.  The planner must
+    refuse to fuse the eqn (split, don't miscompile) and the offloaded
+    result must match the reference exactly."""
+    def fn(a, m):
+        return jnp.tanh(a) * m + a * 0.5
+
+    a = _rand((2, 3, 8, 5, 16))
+    m = _rand((2, 1, 8, 1, 16), 1)
+    plan = offload_report(fn, a, m, bulk_threshold=64)
+    closed = jax.make_jaxpr(fn)(a, m)
+    mul_idx = {i for i, e in enumerate(closed.jaxpr.eqns)
+               if e.primitive.name == "mul"
+               and any(getattr(v, "aval", None) is not None
+                       and tuple(v.aval.shape) == (2, 1, 8, 1, 16)
+                       for v in e.invars)}
+    assert mul_idx, "expected an interior-broadcast mul in the jaxpr"
+    seg_members = {i for s in plan.segments for i in s.all_eqn_idx}
+    assert not (mul_idx & seg_members), \
+        "interior-broadcast operand must end the segment"
+    _check(fn, a, m)
