@@ -23,16 +23,25 @@ matmul-anchored GEMM epilogues and lane-reduction chains), report:
    regardless of call count.
 
 3. **Regression guard**: every chain in ``MUST_FUSE`` carries its
-   committed (segment count, traffic floor): reporting a different
-   segment count (an anchored chain splitting back to >= 2 segments or
-   losing fusion entirely) or a traffic_reduction below the floor makes
-   the process exit non-zero — independent of the artifact, so CI fails
-   on fresh checkouts too.  The committed ``BENCH_offload.json`` adds a
-   second, tighter ratchet against the last recorded numbers.
+   committed (segment count, traffic floor, anchored-backward floor):
+   reporting a different segment count (an anchored chain splitting
+   back to >= 2 segments or losing fusion entirely), a
+   traffic_reduction below the floor, or fewer anchored BACKWARD
+   (dlhs/drhs) segments than committed makes the process exit non-zero
+   — independent of the artifact, so CI fails on fresh checkouts too.
+   The committed ``BENCH_offload.json`` adds a second, tighter ratchet
+   against the last recorded numbers.
+
+The ``*_BWD`` / ``MLP_GRAD`` / ``TRAIN_STEP`` chains exercise the
+grad-time contraction kernels: the handwritten GEMM backward anchors
+both dGRAD forms, MLP_GRAD plans a real ``jax.grad`` trace, and
+TRAIN_STEP plans loss -> grads -> momentum update as one program.
 
 Writes a versioned ``BENCH_offload.json`` artifact at the repo root.
 ``--smoke`` runs a reduced rep count for per-push CI freshness;
-``--csv`` emits the rows table as CSV for quick diffing.
+``--csv`` emits the rows table as CSV for quick diffing; under GitHub
+Actions the geomean one-liner (and any regression) is appended to the
+job summary via ``$GITHUB_STEP_SUMMARY``.
 """
 from __future__ import annotations
 
@@ -50,24 +59,29 @@ from repro.core.machine import V5E
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # Committed fusion contract: chain -> (segments, traffic_reduction
-# floor).  A later segmenter change that reports a different segment
-# count (e.g. an anchored GEMM chain splitting back into >= 2 segments)
-# or a traffic_reduction below the floor is a coverage regression and
+# floor, anchored-backward-segment floor).  A later segmenter change
+# that reports a different segment count (e.g. an anchored GEMM chain
+# splitting back into >= 2 segments), a traffic_reduction below the
+# floor, or fewer anchored BACKWARD segments (dlhs/drhs forms — the
+# grad-time contractions) than committed is a coverage regression and
 # fails CI even without a baseline artifact.
 MUST_FUSE = {
-    "AXPY": (1, 1.3),
-    "BIAS_GELU_RES": (1, 2.0),
-    "SWIGLU_EPI": (1, 2.5),
-    "RMS_SCALE_RES": (1, 2.9),
-    "ADAM_CHAIN": (1, 3.0),
-    "MLP_RESIDUAL": (1, 2.5),
-    "GEMM_BIAS_GELU": (1, 1.5),
-    "GEMM_SWIGLU": (1, 1.5),
-    "RMSNORM_CHAIN": (1, 1.5),
-    "SOFTMAX_CHAIN": (1, 1.5),
+    "AXPY": (1, 1.3, 0),
+    "BIAS_GELU_RES": (1, 2.0, 0),
+    "SWIGLU_EPI": (1, 2.5, 0),
+    "RMS_SCALE_RES": (1, 2.9, 0),
+    "ADAM_CHAIN": (1, 3.0, 0),
+    "MLP_RESIDUAL": (1, 2.5, 0),
+    "GEMM_BIAS_GELU": (1, 1.5, 0),
+    "GEMM_SWIGLU": (1, 1.5, 0),
+    "RMSNORM_CHAIN": (1, 1.5, 0),
+    "SOFTMAX_CHAIN": (1, 1.5, 0),
+    "GEMM_BWD": (2, 2.3, 2),
+    "MLP_GRAD": (4, 3.0, 1),
+    "TRAIN_STEP": (5, 3.0, 1),
 }
 
 
@@ -124,6 +138,56 @@ def _cases():
     def softmax_chain(x):
         return jax.nn.softmax(x * 0.125, axis=-1)
 
+    # --- backward chains (the grad-time contraction forms) ------------
+    g = jax.random.normal(jax.random.fold_in(k, 5), (n // 256, 256))
+
+    def gemm_bwd(g, x, w):
+        # handwritten backward of a projection: the activation gradient
+        # anchors the dlhs kernel (weight read column-major, activation
+        # backward as epilogue) and the weight gradient anchors the
+        # drhs kernel (M-innermost accumulation, weight-decay epilogue)
+        dx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())))
+        dx = jnp.tanh(dx) * 0.5 + x * 0.1
+        dw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())))
+        dw = dw + 0.01 * w
+        return dx, dw
+
+    xg = jax.random.normal(jax.random.fold_in(k, 6), (2048, 256))
+    w1g = jax.random.normal(jax.random.fold_in(k, 7), (256, 512)) * 0.05
+    b1g = jax.random.normal(jax.random.fold_in(k, 8), (512,))
+    w2g = jax.random.normal(jax.random.fold_in(k, 9), (512, 256)) * 0.05
+    yg = jax.random.normal(jax.random.fold_in(k, 10), (2048, 256))
+
+    def mlp_grad(x, w1, b1, w2, y):
+        # the realistic post-grad trace: jax.grad emits the transposed
+        # contractions, and the activation gradient (dlhs) fuses with
+        # the previous layer's activation-backward chain
+        def loss(w1, b1, w2, x):
+            h = jax.nn.gelu(x @ w1 + b1)
+            o = h @ w2 + y
+            return jnp.sum(o * o)
+        return jax.grad(loss, argnums=(0, 1, 2))(w1, b1, w2, x)
+
+    m1g = jnp.zeros_like(w1g)
+    m2g = jnp.zeros_like(w2g)
+
+    def train_step(x, w1, b1, w2, m1, m2):
+        # loss -> grads -> momentum-SGD update in ONE planned program:
+        # forward anchors, a dlhs activation-gradient anchor, a drhs
+        # weight-gradient anchor feeding the update math, and the
+        # optimizer elementwise chains all fuse
+        def loss(w1, b1, w2):
+            h = jax.nn.gelu(x @ w1 + b1)
+            return jnp.sum((h @ w2) ** 2)
+        _, grads = jax.value_and_grad(loss, argnums=(0, 1, 2))(w1, b1, w2)
+        g1, gb, g2 = grads
+        m1n = 0.9 * m1 + g1
+        w1n = w1 - 1e-3 * m1n - 1e-4 * w1
+        m2n = 0.9 * m2 + g2
+        w2n = w2 - 1e-3 * m2n - 1e-4 * w2
+        b1n = b1 - 1e-3 * gb
+        return w1n, w2n, b1n, m1n, m2n
+
     # donate_argnums: the optimizer update overwrites the parameter
     # buffer in place (the classic near-bank in-place update)
     return [
@@ -137,6 +201,9 @@ def _cases():
         ("GEMM_SWIGLU", gemm_swiglu, (x, wgu), ()),
         ("RMSNORM_CHAIN", rmsnorm_chain, (x, s), ()),
         ("SOFTMAX_CHAIN", softmax_chain, (x,), ()),
+        ("GEMM_BWD", gemm_bwd, (g, x, w), ()),
+        ("MLP_GRAD", mlp_grad, (xg, w1g, b1g, w2g, yg), ()),
+        ("TRAIN_STEP", train_step, (xg, w1g, b1g, w2g, m1g, m2g), ()),
     ]
 
 
@@ -178,6 +245,9 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
             "segments": len(plan.segments),
             "anchored": sum(1 for s in plan.segments
                             if s.matmul is not None),
+            "anchored_bwd": sum(1 for s in plan.segments
+                                if s.matmul is not None
+                                and s.matmul.form in ("dlhs", "drhs")),
             "naive_mb": plan.naive_hbm_bytes / 1e6,
             "fused_mb": plan.fused_hbm_bytes / 1e6,
             "donated_mb": plan.donated_hbm_bytes / 1e6,
@@ -198,6 +268,7 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
     mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
     summary = {
         "schema_version": SCHEMA_VERSION,
+        "anchored_bwd_total": sum(r["anchored_bwd"] for r in rows),
         "mean_traffic_reduction": mean_traffic,
         "geomean_traffic_reduction": _geomean(
             [r["traffic_reduction"] for r in rows]),
@@ -217,9 +288,10 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
 
 
 def check_regressions(rows, baseline: dict | None = None) -> list[str]:
-    """Chains violating their committed (segments, traffic floor)
-    contract, plus chains whose (deterministic, plan-derived)
-    traffic_reduction dropped vs the committed artifact."""
+    """Chains violating their committed (segments, traffic floor,
+    anchored-backward floor) contract, plus chains whose
+    (deterministic, plan-derived) traffic_reduction dropped vs the
+    committed artifact."""
     bad = []
     missing = set(MUST_FUSE) - {r["chain"] for r in rows}
     if missing:        # a contracted chain vanished from the suite
@@ -228,13 +300,16 @@ def check_regressions(rows, baseline: dict | None = None) -> list[str]:
         contract = MUST_FUSE.get(r["chain"])
         if contract is None:
             continue
-        want_segments, floor = contract
+        want_segments, floor, bwd_floor = contract
         if r["segments"] != want_segments:
             bad.append(f"{r['chain']} fuses {r['segments']} segments"
                        f" (committed: {want_segments})")
         if r["traffic_reduction"] < floor:
             bad.append(f"{r['chain']} traffic {r['traffic_reduction']:.2f}x"
                        f" < committed floor {floor:.2f}x")
+        if r["anchored_bwd"] < bwd_floor:
+            bad.append(f"{r['chain']} anchors {r['anchored_bwd']} backward"
+                       f" segments (committed: >= {bwd_floor})")
     base = {r["chain"]: r for r in (baseline or {}).get("rows", [])}
     for r in rows:
         b = base.get(r["chain"])
@@ -254,7 +329,8 @@ def _load_baseline() -> dict | None:
     return prev if prev.get("schema_version") == SCHEMA_VERSION else None
 
 
-_CSV_COLS = ["chain", "segments", "anchored", "naive_mb", "fused_mb",
+_CSV_COLS = ["chain", "segments", "anchored", "anchored_bwd",
+             "naive_mb", "fused_mb",
              "donated_mb", "effective_mb", "traffic_reduction",
              "naive_us_v5e", "fused_us_v5e", "interpreted_us",
              "compiled_us", "compiled_speedup", "retraces", "plan_hits",
@@ -269,6 +345,37 @@ def _print_csv(rows):
             for c in _CSV_COLS))
 
 
+def _geomean_line(summary) -> str:
+    return (f"geomean: traffic_reduction="
+            f"{summary['geomean_traffic_reduction']:.2f}x "
+            f"compiled_speedup={summary['geomean_compiled_speedup']:.1f}x "
+            f"(modeled {summary['geomean_fused_mb']:.2f}MB fused / "
+            f"{summary['geomean_effective_mb']:.2f}MB after donation, "
+            f"{summary['anchored_bwd_total']} anchored bwd segments, "
+            f"artifact: {ARTIFACT.name})")
+
+
+def _write_step_summary(summary, regressed) -> None:
+    """Append the geomean one-liner to the GitHub job summary (no-op
+    outside Actions).  Failures land there too so a red PR check shows
+    WHICH chain regressed without opening the log."""
+    import os
+
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["### offload bench", "", f"`{_geomean_line(summary)}`", ""]
+    if regressed:
+        lines += ["**FUSION REGRESSION**", ""]
+        lines += [f"- {r}" for r in regressed]
+        lines.append("")
+    try:
+        with open(path, "a") as fh:
+            fh.write("\n".join(lines) + "\n")
+    except OSError:
+        pass
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
@@ -280,22 +387,20 @@ if __name__ == "__main__":
         _print_csv(rows)
     else:
         for r in rows:
-            print(f"{r['chain']:14s} segs={r['segments']}"
-                  f"{'*' if r['anchored'] else ' '} "
+            mark = "*" if r["anchored"] else " "
+            mark = "+" if r["anchored_bwd"] else mark
+            print(f"{r['chain']:14s} segs={r['segments']}{mark} "
                   f"traffic={r['traffic_reduction']:.2f}x "
                   f"donated={r['donated_mb']:6.2f}MB "
                   f"interp={r['interpreted_us']:9.1f}us "
                   f"compiled={r['compiled_us']:8.1f}us "
                   f"speedup={r['compiled_speedup']:7.1f}x "
                   f"retraces={r['retraces']}")
-        print("(* = matmul-anchored segment)")
-    print(f"geomean: traffic_reduction="
-          f"{summary['geomean_traffic_reduction']:.2f}x "
-          f"compiled_speedup={summary['geomean_compiled_speedup']:.1f}x "
-          f"(modeled {summary['geomean_fused_mb']:.2f}MB fused / "
-          f"{summary['geomean_effective_mb']:.2f}MB after donation, "
-          f"artifact: {ARTIFACT.name})")
+        print("(* = matmul-anchored segment, + = anchored backward "
+              "segment)")
+    print(_geomean_line(summary))
     regressed = check_regressions(rows, baseline)
+    _write_step_summary(summary, regressed)
     if regressed:
         print("FUSION REGRESSION: " + "; ".join(regressed), file=sys.stderr)
         sys.exit(1)

@@ -5,9 +5,16 @@ on the synthetic packed-document corpus, with checkpoints + restart.
 
 The config is the assigned architecture's family scaled to ~100M params
 (the full configs are exercised via the dry-run; this runs REAL steps).
+
+``--offload`` routes every step through the near-bank rewriter: the
+UN-differentiated loss is wrapped, so the whole training dataflow —
+forward projections, the grad-time contractions (dx = g @ wT and
+dw = xT @ g anchor their own backward kernels), and the optimizer
+update — runs as fused single-pass segments.
 """
 import argparse
 import dataclasses
+import math
 
 from repro.configs import TrainConfig, get_config
 from repro.configs.base import ShapeConfig
@@ -21,7 +28,9 @@ def scale_to_100m(arch: str):
         num_layers=min(cfg.num_layers, 8),
         d_model=768,
         num_heads=12,
-        num_kv_heads=min(12, cfg.num_kv_heads),
+        # kv heads must divide the scaled head count (GQA groups)
+        num_kv_heads=math.gcd(12, cfg.num_kv_heads) if cfg.num_kv_heads
+        else 12,
         head_dim=64,
         d_ff=2048,
         vocab_size=32000,
@@ -46,6 +55,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--offload", action="store_true",
+                    help="run each step through the near-bank offload "
+                         "rewriter (fused forward AND backward segments)")
     args = ap.parse_args()
 
     cfg = scale_to_100m(args.arch)
@@ -54,7 +66,8 @@ def main():
     shape = ShapeConfig("train_small", args.seq, args.batch, "train")
     tcfg = TrainConfig(total_steps=args.steps, warmup_steps=20,
                        learning_rate=3e-4, checkpoint_every=100,
-                       checkpoint_dir=args.ckpt_dir)
+                       checkpoint_dir=args.ckpt_dir,
+                       offload=args.offload)
     state, hist = train(cfg, shape, tcfg, log_every=10)
     first = sum(h["loss"] for h in hist[:10]) / max(len(hist[:10]), 1)
     last = sum(h["loss"] for h in hist[-10:]) / max(len(hist[-10:]), 1)

@@ -13,6 +13,9 @@ from repro.core.offload import (
     OffloadPlan,
     OffloadStats,
     Segment,
+    bwd_plan_stats,
+    bwd_plans,
+    clear_bwd_plans,
     mpu_offload,
     mpu_offload_interpreted,
     offload_report,
@@ -26,6 +29,7 @@ __all__ = [
     "apply_policy", "location_stats", "JaxprAnnotation", "annotate_fn",
     "annotate_jaxpr", "MatmulAnchor", "OffloadPlan", "OffloadStats",
     "Segment",
+    "bwd_plan_stats", "bwd_plans", "clear_bwd_plans",
     "mpu_offload", "mpu_offload_interpreted", "offload_report",
     "plan_offload", "rewrite_offload", "SimConfig", "SimResult",
     "end_to_end_time", "simulate",

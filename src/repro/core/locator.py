@@ -28,9 +28,12 @@ from jax.extend import core as jcore
 
 from repro.core.isa import Loc
 
-# elementwise near-bank-capable primitives (value-chain ALU/SFU ops)
+# elementwise near-bank-capable primitives (value-chain ALU/SFU ops).
+# "add_any" is AD's cotangent-accumulation primitive (add_jaxvals_p) —
+# backward traces are stitched together with it, so leaving it far would
+# cut every grad-time value chain in half.
 ELEMENTWISE_PRIMS = {
-    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "sign",
+    "add", "add_any", "sub", "mul", "div", "max", "min", "neg", "abs",
     "exp", "log", "log1p", "expm1", "tanh", "sqrt", "rsqrt", "cbrt",
     "logistic", "sin", "cos", "tan", "erf", "erfc", "erf_inv",
     "integer_pow", "pow", "floor", "ceil", "round", "square",
@@ -59,6 +62,13 @@ LAYOUT_PRIMS = {
 # the contraction so the product tensor never round-trips HBM (the
 # fused-GEMM-epilogue pattern).  Sits between near and far: the eqn's
 # own location stays F, yet its segment is emitted as one near kernel.
+# Three contraction forms qualify (repro.core.offload.try_admit_anchor):
+#   fwd   x[M,K] @ w[K,N]        — lhs contracts its lane axis, rc=(0,)
+#   dlhs  g[M,N] @ wT            — the grad-time dx: rc=(1,), the [K,N]
+#                                  weight read column-major in-kernel
+#   drhs  xT[K,M] @ g[M,N]       — the grad-time dw: both operands
+#                                  contract ALL their leading (row) dims,
+#                                  per-bank f32 accumulation over M
 ANCHOR_PRIMS = {"dot_general"}
 
 # lane-axis reductions the planner may admit INTO a near segment: with

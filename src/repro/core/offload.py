@@ -23,13 +23,18 @@ compiled program.  This module mirrors that architecture for JAX:
                 ``concatenate``, see locator.LAYOUT_PRIMS) are absorbed
                 instead of ending the segment.  Segments are also
                 *matmul-anchored*: a qualifying ``dot_general``
-                (locator.ANCHOR_PRIMS — no batch dims, lhs contracts
-                its lane axis, rank-2 rhs) OPENS a segment rather than
-                ending it, absorbing its elementwise lhs prologue and
-                its whole epilogue around an in-kernel K-reduction
-                (``MatmulAnchor``), and lane-axis reductions
-                (locator.REDUCE_LANE_PRIMS) fuse as (rows, 1) row
-                statistics so softmax/rmsnorm chains stay whole.
+                (locator.ANCHOR_PRIMS) OPENS a segment rather than
+                ending it, absorbing its elementwise lhs prologue, a
+                weight-side dequant-cast prologue, and its whole
+                epilogue around an in-kernel contraction
+                (``MatmulAnchor``).  THREE forms anchor — the forward
+                x[M,K] @ w[K,N] and the grad-time dx = g @ wT
+                (``dlhs``, weight read column-major) and dw = xT @ g
+                (``drhs``, M-innermost into a [Kb,Nb] accumulator) —
+                so backward passes fuse instead of falling far.
+                Lane-axis reductions (locator.REDUCE_LANE_PRIMS) fuse
+                as (rows, 1) row statistics so softmax/rmsnorm chains
+                stay whole.
                 Segment inputs that die at the segment are donated: the
                 fused kernel is emitted with Pallas
                 ``input_output_aliases`` so boundary buffers between
@@ -38,22 +43,36 @@ compiled program.  This module mirrors that architecture for JAX:
   rewrite once  ``_build_runner`` bakes every decision into a list of
                 step closures — each near segment becomes ONE fused
                 Pallas launch (repro.kernels.ops.fused_segment_grid for
-                elementwise segments, repro.kernels.ops.
-                fused_matmul_segment for anchored ones: one HBM read
-                per operand — the rank-2 rhs weight streams once per
-                row block — one write per output, intermediates and
-                the matmul accumulator in VMEM), far eqns re-bind
-                unchanged,
+                elementwise segments; fused_matmul_segment /
+                fused_matmul_dlhs_segment / fused_matmul_drhs_segment
+                for anchored ones: one HBM read per operand, one write
+                per output, intermediates and the matmul accumulator in
+                VMEM), far eqns re-bind unchanged,
                 ``scan``/``closed_call`` bodies are rewritten
-                recursively *at rewrite time*, and non-trivial ``pjit``
-                eqns are re-emitted as ``jax.jit`` calls so their
-                fully-specified ``in_shardings``/``out_shardings`` and
+                recursively *at rewrite time* (scan CARRIES that die at
+                a body segment are donated into the body's kernel
+                aliases), and non-trivial ``pjit`` eqns are re-emitted
+                as ``jax.jit`` calls so their fully-specified
+                ``in_shardings``/``out_shardings`` and
                 ``donated_invars`` survive the rewrite (partially
                 specified sharding tuples are dropped — see ROADMAP)
   execute fast  the runner is staged through ``jax.jit`` — after the
                 first call the near/far split lives inside one compiled
                 XLA executable; no Python interpretation remains on the
                 hot path
+  grad ready    every fused-segment call carries a ``jax.custom_vjp``:
+                ``grad(mpu_offload(f))`` differentiates THROUGH the
+                rewritten program, and each segment's backward
+                re-plans its cotangent jaxpr with this same rewriter
+                (remat-style: residuals are the segment inputs, the
+                recomputed forward re-anchors, and the grad-time
+                contractions hit the dlhs/drhs kernels).  Backward
+                plans cache under "bwd"-tagged keys — see
+                ``bwd_plan_stats``/``bwd_plans`` — and never collide
+                with the "fwd"-tagged plan cache.  The VJP forward
+                path drops donation aliases (its residuals are the
+                buffers donation would overwrite); the primal path
+                keeps them.
 
 ``mpu_offload(fn)`` returns a drop-in replacement for ``fn`` that caches
 compiled runners keyed by the hashable aval signature of the arguments.
@@ -150,22 +169,41 @@ class MatmulAnchor:
     """The dot_general a matmul-anchored segment is built around.
 
     The contraction itself runs on the MXU inside the fused kernel
-    (K-reduction grid + f32 accumulator scratch); ``pro_eqns`` is the
+    (contraction grid + f32 accumulator scratch); ``pro_eqns`` is the
     elementwise prologue chain producing the dot's lhs (applied per
-    [rows_block, k_block] tile before each partial product), and the
-    segment's ordinary ``eqn_idx`` holds the epilogue applied to the
-    accumulator in-registers before the single store.
+    [rows_block, k_block] tile before each partial product),
+    ``rhs_pro_eqns`` the weight-side prologue (a bf16/int8 dequant cast
+    applied per [k_block, N] weight block instead of materializing the
+    cast tensor), and the segment's ordinary ``eqn_idx`` holds the
+    epilogue applied to the accumulator in-registers before the single
+    store.
+
+    ``form`` selects the contraction layout (see locator.ANCHOR_PRIMS):
+      * ``fwd``  — x[M,K] @ w[K,N]; rhs streamed once per row block
+      * ``dlhs`` — dx = g[M,N] @ w[K,N]^T; the [K,N] weight read
+                   column-major via its block index map (rhs avals are
+                   [n, k] here — n output lanes, k contraction)
+      * ``drhs`` — dw = x[M,K]^T @ g[M,N]; both operands stream
+                   contraction-major, M innermost into a [Kb, Nb]
+                   scratch.  ``lhs_specs[0]`` is the row-source
+                   (``bulk_m``), ``rhs`` the column-source; an adjacent
+                   ``transpose`` of the product (jax's grad emission
+                   order) is absorbed via ``extra_eqns``.
     """
 
     eqn_idx: int                  # the dot_general eqn
     lhs_var: Any                  # the (possibly prologue-produced) lhs
     lhs_specs: list[OperandSpec]  # prologue inputs: roles bulk_k/param_k
-    rhs: Any                      # [K, N] weight operand, read as-is
-    pro_eqns: list[int]           # prologue chain (inside the kernel)
+    rhs: Any                      # the var feeding the dot's rhs
+    pro_eqns: list[int]           # lhs prologue chain (inside the kernel)
     k: int                        # contraction extent
-    n: int                        # lane width of the dot output
+    n: int                        # lane width of the segment product
     out_var: Any                  # the product var (kernel accumulator)
     out_dtype: Any
+    form: str = "fwd"             # "fwd" | "dlhs" | "drhs"
+    rhs_specs: list[OperandSpec] = field(default_factory=list)
+    rhs_pro_eqns: list[int] = field(default_factory=list)
+    extra_eqns: list[int] = field(default_factory=list)
 
 
 @dataclass
@@ -192,10 +230,11 @@ class Segment:
     @property
     def all_eqn_idx(self) -> list[int]:
         """Every eqn the fused kernel absorbs, including the anchor
-        contraction and its prologue chain."""
+        contraction, its prologue chains, and any absorbed transpose."""
         if self.matmul is None:
             return list(self.eqn_idx)
-        return sorted({*self.matmul.pro_eqns, self.matmul.eqn_idx,
+        return sorted({*self.matmul.pro_eqns, *self.matmul.rhs_pro_eqns,
+                       *self.matmul.extra_eqns, self.matmul.eqn_idx,
                        *self.eqn_idx})
 
     @property
@@ -204,7 +243,8 @@ class Segment:
         if self.matmul is not None:
             bulk += [s.var for s in self.matmul.lhs_specs
                      if s.role != "param_k"]
-            bulk.append(self.matmul.rhs)
+            bulk += [s.var for s in self.matmul.rhs_specs
+                     if s.role != "param_w"]
         return bulk
 
     @property
@@ -213,24 +253,38 @@ class Segment:
         if self.matmul is not None:
             params += [s.var for s in self.matmul.lhs_specs
                        if s.role == "param_k"]
+            params += [s.var for s in self.matmul.rhs_specs
+                       if s.role == "param_w"]
         return params
 
     def io_bytes(self) -> int:
         """Fused HBM bytes this segment moves: one read per operand —
-        the anchored rhs weight once per row block, matching the
-        kernel's actual re-streaming — and one write per output.  The
-        single source of truth for both the plan's traffic accounting
-        and the roofline model."""
+        with the contraction re-streaming accounted per form (fwd/dlhs:
+        the weight once per row block; drhs: the activation once per
+        lane block and the cotangent once per row block, matching the
+        (k_rows, n_blocks, m_blocks) grid) — and one write per output.
+        The single source of truth for both the plan's traffic
+        accounting and the roofline model."""
         from repro.kernels.fused_matmul import matmul_row_blocks
+        from repro.kernels.fused_matmul_bwd import drhs_grid_blocks
 
         total = sum(_dtype_size(sp.var.aval) for sp in self.operand_specs)
         total += sum(_dtype_size(v.aval) for v in self.outputs)
         if self.matmul is not None:
-            total += sum(_dtype_size(sp.var.aval)
-                         for sp in self.matmul.lhs_specs)
-            total += _dtype_size(self.matmul.rhs.aval) * matmul_row_blocks(
-                self.rows, [sp.meta for sp in self.operand_specs],
-                self.matmul.n)
+            mm = self.matmul
+            lhs_b = sum(_dtype_size(sp.var.aval) for sp in mm.lhs_specs)
+            rhs_bulk = sum(_dtype_size(sp.var.aval) for sp in mm.rhs_specs
+                           if sp.role != "param_w")
+            rhs_par = sum(_dtype_size(sp.var.aval) for sp in mm.rhs_specs
+                          if sp.role == "param_w")
+            if mm.form == "drhs":
+                row_blocks, n_blocks = drhs_grid_blocks(self.rows, mm.n)
+                total += lhs_b * n_blocks + rhs_bulk * row_blocks + rhs_par
+            else:
+                total += lhs_b + rhs_par
+                total += rhs_bulk * matmul_row_blocks(
+                    self.rows, [sp.meta for sp in self.operand_specs],
+                    mm.n)
         return total
 
 
@@ -488,6 +542,33 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
             return False
         oshape = tuple(out.aval.shape)
 
+        if mm is not None and mm["form"] == "drhs":
+            # drhs epilogues run on [Kb, Nb] lane-blocked tiles, so only
+            # pure elementwise eqns that keep the full output width are
+            # admissible, over full-width / column / param operands (no
+            # rep/tile remaps, no row statistics)
+            if any(v in reduced_vars for v in nonlit):
+                return False
+            r_out, c_out = _bulk_view(oshape)
+            if r_out != cur_rows or c_out != mm["n"]:
+                return False
+            new_specs: dict[Any, tuple[str, int, int]] = {}
+            for v in nonlit:
+                if v in produced:
+                    continue
+                cls = _classify_operand(tuple(v.aval.shape), oshape,
+                                        cur_rows)
+                if cls is None or cls[0] not in ("bulk", "param") or \
+                        cls[2] not in (1, mm["n"]):
+                    return False
+                if not _merge_spec(new_specs, v, cls):
+                    return False
+            specs.update(new_specs)
+            produced[out] = ("bulk", c_out)
+            current.append(i)
+            n_compute += 1
+            return True
+
         if any(v in reduced_vars for v in nonlit):
             # reduced space: rank-reduced row statistics ([B,S] against a
             # [B,S,D] segment) — every value is one element per row, so
@@ -550,6 +631,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         nonlocal cur_rows, n_compute, anchor
         if len(eqn.outvars) != 1:
             return False
+        if mm is not None and mm["form"] == "drhs":
+            return False     # lane extent is blocked: no row statistics
         v = eqn.invars[0]
         if isinstance(v, jcore.Literal) or v in reduced_vars:
             return False
@@ -594,6 +677,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
 
     def try_admit_layout(i, eqn) -> bool:
         nonlocal cur_rows, n_compute, anchor
+        if mm is not None and mm["form"] == "drhs":
+            return False     # lane-blocked tiles: no block-column remaps
         name = eqn.primitive.name
         out = eqn.outvars[0]
         if not jnp.issubdtype(out.aval.dtype, jnp.floating):
@@ -795,45 +880,191 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                     return None          # rep/tile prologues stay split
         return list(current), lhs_specs
 
+    def _rhs_prologue_convertible(anchor_i, rhs_v, k_dim, n_cols):
+        """Whether the open elementwise run can be absorbed as the dot's
+        WEIGHT-side prologue (a bf16/int8 dequant cast applied per
+        [k_block, N] weight block inside the kernel).  Returns
+        (rhs_pro_eqns, rhs_specs) or None."""
+        if rhs_v not in produced or reduced_vars:
+            return None
+        cur_set = set(current)
+        for j in current:
+            e = eqns[j]
+            name = e.primitive.name
+            ov = e.outvars[0]
+            oshape = tuple(ov.aval.shape)
+            param_view = _is_param_shape(oshape) and \
+                _lane(oshape) in (1, n_cols)
+            if name == "broadcast_in_dim":
+                # a [N]/scalar per-channel scale lifted to a [1, N]
+                # param view (jax's trace of `w * s`): replayed as a
+                # [1, lane] block in the kernel — jnp broadcasting
+                # against the [k_block, N] weight block does the rest.
+                # It cannot itself BE the dot's rhs.
+                v = e.invars[0]
+                if isinstance(v, jcore.Literal) or v in produced or \
+                        ov is rhs_v:
+                    return None
+                ishape = tuple(v.aval.shape)
+                bdims = tuple(e.params["broadcast_dimensions"])
+                if not _is_param_shape(ishape):
+                    return None
+                if _lane(ishape) > 1 and (
+                        not bdims or bdims[-1] != len(oshape) - 1
+                        or oshape[-1] != ishape[-1]):
+                    return None
+            elif name not in ELEMENTWISE_PRIMS:
+                return None
+            if not param_view and \
+                    _bulk_view(oshape) != (k_dim, n_cols):
+                return None
+            if param_view and ov is rhs_v:
+                return None              # the dot's rhs must be [K, N]
+            if ov in outvar_set:
+                return None
+            cons = consumers.get(ov, [])
+            if any(c not in cur_set and c != anchor_i for c in cons):
+                return None              # chain value escapes: keep split
+            if ov is not rhs_v and anchor_i in cons:
+                return None              # only the rhs may feed the dot
+        seen: set[Any] = set()
+        rhs_specs: list[OperandSpec] = []
+        for j in current:
+            for v in eqns[j].invars:
+                if isinstance(v, jcore.Literal) or v in produced or \
+                        v in seen:
+                    continue
+                seen.add(v)
+                cls = specs.get(v)
+                if cls is None:
+                    return None
+                role, r, c = cls
+                if role == "bulk" and (r, c) == (k_dim, n_cols):
+                    rhs_specs.append(
+                        OperandSpec(v, "bulk_w", k_dim, n_cols))
+                elif role == "param" and c in (1, n_cols):
+                    rhs_specs.append(OperandSpec(v, "param_w", 1, c))
+                else:
+                    return None
+        return list(current), rhs_specs
+
+    def _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape):
+        """dw = xT @ g: both operands contract all their leading (row)
+        dims, M runs innermost in the kernel into a [Kb, Nb] f32
+        scratch.  jax's transpose rule emits this as
+        ``dot_general(g, x, contract-rows)`` followed by a rank-2
+        ``transpose`` — when that transpose is the product's only
+        consumer and directly adjacent, it is absorbed (the kernel
+        writes the [K, N] layout directly, no transposed copy)."""
+        nonlocal mm, cur_rows, n_compute, anchor, current, specs, produced
+        if current or lhs_v in produced or rhs_v in produced:
+            return False     # a shared cotangent chain escapes: split
+        if lshape[:-1] != rshape[:-1]:
+            return False
+        out = eqn.outvars[0]
+        m_ext = 1
+        for d in lshape[:-1]:
+            m_ext *= d
+        prod_var = out
+        row_src, col_src = lhs_v, rhs_v
+        extra: list[int] = []
+        cons = consumers.get(out, [])
+        if out not in outvar_set and cons == [i + 1]:
+            nxt = eqns[cons[0]]
+            if nxt.primitive.name == "transpose" and \
+                    tuple(nxt.params["permutation"]) == (1, 0):
+                prod_var = nxt.outvars[0]
+                row_src, col_src = rhs_v, lhs_v
+                extra = [cons[0]]
+        p_rows = tuple(row_src.aval.shape)[-1]
+        n_cols = tuple(col_src.aval.shape)[-1]
+        mm = dict(form="drhs", eqn_idx=i, lhs_var=row_src,
+                  lhs_specs=[OperandSpec(row_src, "bulk_m", m_ext, p_rows)],
+                  rhs=col_src,
+                  rhs_specs=[OperandSpec(col_src, "bulk_w", m_ext, n_cols)],
+                  pro_eqns=[], rhs_pro_eqns=[], extra_eqns=extra,
+                  k=m_ext, n=n_cols, out_var=prod_var,
+                  out_dtype=prod_var.aval.dtype, span_start=i)
+        current, specs = [], {}
+        produced = {prod_var: ("bulk", n_cols)}
+        cur_rows, n_compute = p_rows, 0
+        anchor = tuple(prod_var.aval.shape)
+        return True
+
     def try_admit_anchor(i, eqn) -> bool:
         """A qualifying dot_general OPENS a matmul-anchored segment: the
-        contraction runs inside the fused kernel (K-grid + accumulator
-        scratch) and subsequent elementwise/layout/reduce eqns fuse as
-        its epilogue, so the product never round-trips HBM."""
-        nonlocal mm, cur_rows, n_compute, anchor, current, specs, produced
+        contraction runs inside the fused kernel (contraction grid +
+        accumulator scratch) and subsequent elementwise/layout/reduce
+        eqns fuse as its epilogue, so the product never round-trips HBM.
+        Three forms qualify — the forward x[M,K] @ w[K,N] and the two
+        grad-time layouts dx = g @ wT (``dlhs``) and dw = xT @ g
+        (``drhs``); see locator.ANCHOR_PRIMS."""
+        nonlocal mm, cur_rows, n_compute, anchor, current, specs, \
+            produced, param_out_set
         if mm is not None:
             return False                 # one anchor per segment
         (lc, rc), (lbatch, rbatch) = eqn.params["dimension_numbers"]
         lhs_v, rhs_v = eqn.invars
         if isinstance(lhs_v, jcore.Literal) or isinstance(rhs_v, jcore.Literal):
             return False
+        if tuple(lbatch) or tuple(rbatch):
+            return False                 # batched contractions stay far
         lshape = tuple(lhs_v.aval.shape)
         rshape = tuple(rhs_v.aval.shape)
         out = eqn.outvars[0]
         oshape = tuple(out.aval.shape)
-        # plain [*, K] x [K, N] contraction only: no batch dims, lhs
-        # contracts its lane axis, rhs is a rank-2 weight
-        if tuple(lbatch) or tuple(rbatch) or len(rshape) != 2 \
-                or len(lshape) < 2:
-            return False
-        if tuple(lc) != (len(lshape) - 1,) or tuple(rc) != (0,):
-            return False
         if not jnp.issubdtype(out.aval.dtype, jnp.floating):
             return False
-        # the kernel accumulates in f32: wider dtypes (f64 under x64)
+        # the kernels accumulate in f32: wider dtypes (f64 under x64)
         # would silently lose precision vs the unfused XLA dot
         if any(jnp.dtype(v.aval.dtype).itemsize > 4
                for v in (lhs_v, rhs_v, out)):
             return False
         if out.aval.size < bulk_threshold:
             return False
-        if rhs_v in produced:
+        form = None
+        if len(rshape) == 2 and len(lshape) >= 2 \
+                and tuple(lc) == (len(lshape) - 1,):
+            if tuple(rc) == (0,):
+                form = "fwd"             # x[M,K] @ w[K,N]
+            elif tuple(rc) == (1,):
+                form = "dlhs"            # g[M,N] @ w[K,N]^T
+        if form is None and len(lshape) == len(rshape) >= 2 \
+                and tuple(lc) == tuple(range(len(lshape) - 1)) \
+                and tuple(rc) == tuple(range(len(rshape) - 1)):
+            form = "drhs"                # xT[K,M] @ g[M,N]
+        if form is None:
             return False
+        if form == "drhs":
+            return _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape)
+
         m_rows, n_cols = _bulk_view(oshape)
         k_dim = lshape[-1]
         if _bulk_view(lshape) != (m_rows, k_dim):
             return False
-        if current:
+        want_rshape = (k_dim, n_cols) if form == "fwd" else (n_cols, k_dim)
+        if rshape != want_rshape:
+            return False
+        rhs_pro_eqns: list[int] = []
+        rhs_specs = [OperandSpec(rhs_v, "bulk_w", *rshape)]
+        if rhs_v in produced:
+            # weight-side prologue (fwd only): the open run must be a
+            # dequant-cast chain producing the rhs; the dlhs kernel
+            # reads its weight column-major, where a per-block prologue
+            # would re-apply per (i, k) step in a different layout
+            if form != "fwd" or lhs_v in produced:
+                return False
+            conv = _rhs_prologue_convertible(i, rhs_v, k_dim, n_cols)
+            if conv is None:
+                return False
+            rhs_pro_eqns, rhs_specs = conv
+            pro_eqns = []
+            lhs_specs = [OperandSpec(lhs_v, "bulk_k", m_rows, k_dim)]
+            span0, n_pro = current[0], n_compute
+            # param-view scale lifts ([N] -> [1, N]) ride inside the
+            # weight prologue — they must not be ejected at flush
+            param_out_set = set()
+        elif current:
             conv = _prologue_convertible(i, lhs_v, m_rows, k_dim)
             if conv is None:
                 return False
@@ -843,8 +1074,10 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
             pro_eqns = []
             lhs_specs = [OperandSpec(lhs_v, "bulk_k", m_rows, k_dim)]
             span0, n_pro = i, 0
-        mm = dict(eqn_idx=i, lhs_var=lhs_v, lhs_specs=lhs_specs,
-                  rhs=rhs_v, pro_eqns=pro_eqns, k=k_dim, n=n_cols,
+        mm = dict(form=form, eqn_idx=i, lhs_var=lhs_v, lhs_specs=lhs_specs,
+                  rhs=rhs_v, rhs_specs=rhs_specs,
+                  rhs_pro_eqns=rhs_pro_eqns, extra_eqns=[],
+                  pro_eqns=pro_eqns, k=k_dim, n=n_cols,
                   out_var=out, out_dtype=out.aval.dtype, span_start=span0)
         # fresh elementwise state for the epilogue; the product is the
         # segment's root value
@@ -854,6 +1087,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         return True
 
     def try_admit(i, eqn) -> bool:
+        if mm is not None and i in mm["extra_eqns"]:
+            return True      # already absorbed at anchor admission
         tier = eqn_tier(eqn.primitive.name)
         if tier == "near":
             return try_admit_elementwise(i, eqn)
@@ -879,8 +1114,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
             span_start, span_end = seg_idx[0], seg_idx[-1]
         else:
             span_start = mm["span_start"]
-            span_end = max([mm["eqn_idx"], *seg_idx]) if seg_idx \
-                else mm["eqn_idx"]
+            span_end = max([mm["eqn_idx"], *mm["extra_eqns"], *seg_idx])
 
         # eject param-out layout eqns whose output escapes the segment:
         # they run unfused just ahead of the kernel (their operands are
@@ -923,6 +1157,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         if mm is not None:
             member_set.add(mm["eqn_idx"])
             member_set.update(mm["pro_eqns"])
+            member_set.update(mm["rhs_pro_eqns"])
+            member_set.update(mm["extra_eqns"])
         outputs, out_cols = [], []
         for v in out_candidates:
             if v in outvar_set or any(ci not in member_set
@@ -943,7 +1179,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         # step still reads (lhs excluded too, conservatively).
         mm_vars: set[Any] = set()
         if mm is not None:
-            mm_vars = {mm["rhs"], *(sp.var for sp in mm["lhs_specs"])}
+            mm_vars = {mm["rhs"], *(sp.var for sp in mm["lhs_specs"]),
+                       *(sp.var for sp in mm["rhs_specs"])}
         donations: list[tuple[int, int]] = []
         taken: set[int] = set()
         for bi, sp in enumerate(operand_specs):
@@ -969,7 +1206,10 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                 eqn_idx=mm["eqn_idx"], lhs_var=mm["lhs_var"],
                 lhs_specs=mm["lhs_specs"], rhs=mm["rhs"],
                 pro_eqns=mm["pro_eqns"], k=mm["k"], n=mm["n"],
-                out_var=mm["out_var"], out_dtype=mm["out_dtype"])
+                out_var=mm["out_var"], out_dtype=mm["out_dtype"],
+                form=mm["form"], rhs_specs=mm["rhs_specs"],
+                rhs_pro_eqns=mm["rhs_pro_eqns"],
+                extra_eqns=mm["extra_eqns"])
         segments.append(Segment(
             eqn_idx=seg_idx, rows=cur_rows, bulk_shape=anchor,
             operand_specs=operand_specs, outputs=outputs, out_cols=out_cols,
@@ -1099,28 +1339,201 @@ def _prologue_fn(eqns: Sequence, mm: MatmulAnchor) -> Callable:
     return fn
 
 
-def _segment_call(eqns: Sequence, seg: Segment, read, *, impl: str,
-                  donate: bool = True):
-    """Dispatch one planned segment to its fused kernel (shared by the
-    compile-time runner and the legacy interpreter).  Returns one
-    [rows, out_cols[j]] array per segment output."""
+def _rhs_prologue_fn(eqns: Sequence, mm: MatmulAnchor) -> Callable:
+    """The anchored segment's weight-side prologue: a dequant-cast chain
+    applied per [k_block, N] rhs block (bf16/int8 -> f32, scales) so the
+    cast weight is never materialized in HBM."""
+    in_vars = [s.var for s in mm.rhs_specs]
+    if not mm.rhs_pro_eqns:
+        return lambda v, *, block_rows: v
+
+    def fn(*vals, block_rows: int):
+        env: dict[Any, Any] = dict(zip(in_vars, vals))
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for i in mm.rhs_pro_eqns:
+            eqn = eqns[i]
+            if eqn.primitive.name == "broadcast_in_dim":
+                # per-channel scale broadcast: keep the [1, lane] param
+                # view and let jnp broadcasting meet the weight block
+                out = jnp.asarray(read(eqn.invars[0])).reshape(1, -1)
+            else:
+                out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                         **eqn.params)
+                if eqn.primitive.multiple_results:
+                    out = out[0]
+            env[eqn.outvars[0]] = out
+        return env[mm.rhs]
+
+    return fn
+
+
+def _segment_arg_vars(seg: Segment) -> list[Any]:
+    """The segment's inputs in the canonical positional order the
+    dispatch (and its custom VJP) uses: matmul lhs-side, matmul
+    rhs-side, then the epilogue operands."""
+    arg_vars: list[Any] = []
+    if seg.matmul is not None:
+        arg_vars += [s.var for s in seg.matmul.lhs_specs]
+        arg_vars += [s.var for s in seg.matmul.rhs_specs]
+    arg_vars += [s.var for s in seg.operand_specs]
+    return arg_vars
+
+
+def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
+                      impl: str, donate: Sequence[tuple[int, int]] = ()):
+    """Dispatch one planned segment to its fused kernel, routing by
+    anchor form (elementwise grid / fwd GEMM / dlhs / drhs).  ``vals``
+    follow ``_segment_arg_vars`` order; returns one [rows, out_cols[j]]
+    array per segment output."""
     epi_meta = tuple(s.meta for s in seg.operand_specs)
     out_dtypes = [v.aval.dtype for v in seg.outputs]
-    aliases = tuple(seg.donations) if donate else ()
-    if seg.matmul is None:
-        return kops.fused_segment_grid(
-            _segment_fn(eqns, seg), [read(s.var) for s in seg.operand_specs],
-            epi_meta, rows=seg.rows, out_cols=seg.out_cols,
-            out_dtypes=out_dtypes, donate=aliases, impl=impl)
     mm = seg.matmul
+    if mm is None:
+        return kops.fused_segment_grid(
+            _segment_fn(eqns, seg), list(vals), epi_meta, rows=seg.rows,
+            out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=donate,
+            impl=impl)
+    n_lhs, n_rhs = len(mm.lhs_specs), len(mm.rhs_specs)
+    lhs_vals = list(vals[:n_lhs])
+    rhs_vals = list(vals[n_lhs:n_lhs + n_rhs])
+    epi_vals = list(vals[n_lhs + n_rhs:])
+    if mm.form == "drhs":
+        return kops.fused_matmul_drhs_segment(
+            _segment_fn(eqns, seg), lhs_vals[0], rhs_vals[0], epi_vals,
+            epi_meta, m_dim=mm.k, rows=seg.rows, n_dim=mm.n,
+            acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
+            out_dtypes=out_dtypes, donate=donate, impl=impl)
+    if mm.form == "dlhs":
+        return kops.fused_matmul_dlhs_segment(
+            _prologue_fn(eqns, mm), _segment_fn(eqns, seg), lhs_vals,
+            tuple(s.meta for s in mm.lhs_specs), rhs_vals[0], epi_vals,
+            epi_meta, rows=seg.rows, k_dim=mm.k, n_dim=mm.n,
+            acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
+            out_dtypes=out_dtypes, donate=donate, impl=impl)
     return kops.fused_matmul_segment(
-        _prologue_fn(eqns, mm), _segment_fn(eqns, seg),
-        [read(s.var) for s in mm.lhs_specs],
-        tuple(s.meta for s in mm.lhs_specs), read(mm.rhs),
-        [read(s.var) for s in seg.operand_specs], epi_meta,
+        _prologue_fn(eqns, mm), _rhs_prologue_fn(eqns, mm),
+        _segment_fn(eqns, seg), lhs_vals,
+        tuple(s.meta for s in mm.lhs_specs), rhs_vals,
+        tuple(s.meta for s in mm.rhs_specs), epi_vals, epi_meta,
         rows=seg.rows, k_dim=mm.k, n_dim=mm.n, acc_dtype=mm.out_dtype,
-        out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=aliases,
+        out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=donate,
         impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Grad-through-offload: a custom VJP on the fused-segment call.
+#
+# The fused kernels have no JVP/transpose rules, so differentiating a
+# rewritten program would fall over (pallas path) or fall back to
+# whatever XLA's AD makes of the ref math (losing the near-bank plan).
+# Instead each segment call carries a jax.custom_vjp whose backward
+# re-plans the segment's cotangent jaxpr THROUGH THE SAME REWRITER:
+# epilogue cotangents fuse as elementwise segments or as anchored
+# epilogues/prologues of the dlhs/drhs backward kernels.  Backward
+# plans live in a per-segment cache whose keys carry a "bwd" direction
+# tag — they can never collide with the forward plan cache (whose keys
+# are tagged "fwd" in ``mpu_offload``); module-level counters expose
+# their health for tests and benchmarks.
+# ---------------------------------------------------------------------------
+
+_BWD_STATS = OffloadStats()
+_BWD_PLANS: list[OffloadPlan] = []
+_BWD_PLANS_KEEP = 256     # registry ring: bounded introspection window
+
+
+def bwd_plan_stats() -> OffloadStats:
+    """Plan-cache counters for segment cotangent (backward) planning."""
+    return _BWD_STATS
+
+
+def bwd_plans() -> list[OffloadPlan]:
+    """Recently compiled backward plans (most recent last)."""
+    return list(_BWD_PLANS)
+
+
+def clear_bwd_plans() -> None:
+    _BWD_PLANS.clear()
+    _BWD_STATS.reset()
+
+
+def _segment_bwd_runner(eqns: Sequence, seg: Segment, *, impl: str,
+                        bulk_threshold: int, min_segment: int) -> Callable:
+    """(primals, cotangents) -> operand cotangents, with the cotangent
+    jaxpr planned through ``_build_runner`` once per aval signature and
+    cached on the segment ("bwd"-tagged keys, separate from every
+    forward plan cache)."""
+
+    def ref_fn(*vals):
+        return _segment_dispatch(eqns, seg, vals, impl="ref", donate=())
+
+    def ct_fn(primals, cts):
+        _, vjp_fn = jax.vjp(ref_fn, *primals)
+        return tuple(vjp_fn(tuple(cts)))
+
+    cache: dict = seg.__dict__.setdefault("_bwd_plan_cache", {})
+
+    def run_bwd(primals, cts):
+        key = ("bwd",
+               tuple(_leaf_signature(v) for v in primals),
+               tuple(_leaf_signature(v) for v in cts))
+        entry = cache.get(key)
+        if entry is None:
+            _BWD_STATS.plan_misses += 1
+            _BWD_STATS.traces += 1
+            closed = jax.make_jaxpr(ct_fn)(tuple(primals), tuple(cts))
+            run, plan, flat = _build_runner(
+                closed, bulk_threshold=bulk_threshold,
+                min_segment=min_segment, impl=impl)
+            entry = cache[key] = (run, tuple(flat.consts))
+            _BWD_PLANS.append(plan)
+            del _BWD_PLANS[:-_BWD_PLANS_KEEP]
+        else:
+            _BWD_STATS.plan_hits += 1
+        run, consts = entry
+        return tuple(run(consts, [*primals, *cts]))
+
+    return run_bwd
+
+
+def _segment_vjp(eqns: Sequence, seg: Segment, *, impl: str,
+                 donate: Sequence[tuple[int, int]],
+                 bulk_threshold: int, min_segment: int) -> Callable:
+    """The differentiable fused-segment call.  The primal path keeps its
+    donation aliases; the VJP forward path drops them (its residuals ARE
+    the input buffers the kernel would otherwise overwrite) and the
+    backward re-plans the cotangent program through the rewriter."""
+
+    @jax.custom_vjp
+    def call(*vals):
+        return _segment_dispatch(eqns, seg, vals, impl=impl, donate=donate)
+
+    def fwd(*vals):
+        outs = _segment_dispatch(eqns, seg, vals, impl=impl, donate=())
+        return outs, vals
+
+    bwd_runner = _segment_bwd_runner(
+        eqns, seg, impl=impl, bulk_threshold=bulk_threshold,
+        min_segment=min_segment)
+
+    def bwd(res, cts):
+        return bwd_runner(res, tuple(cts))
+
+    call.defvjp(fwd, bwd)
+    return call
+
+
+def _segment_call(eqns: Sequence, seg: Segment, read, *, impl: str,
+                  donate: bool = True):
+    """Dispatch one planned segment to its fused kernel (the legacy
+    interpreter's non-differentiable entry point; the compile-time
+    runner goes through ``_segment_vjp``).  Returns one
+    [rows, out_cols[j]] array per segment output."""
+    vals = [read(v) for v in _segment_arg_vars(seg)]
+    aliases = tuple(seg.donations) if donate else ()
+    return _segment_dispatch(eqns, seg, vals, impl=impl, donate=aliases)
 
 
 # ---------------------------------------------------------------------------
@@ -1150,26 +1563,40 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
     eqns = jaxpr.eqns
     seg_by_start = {s.span_start: s for s in plan.segments}
 
-    def recurse(inner: jcore.ClosedJaxpr) -> tuple[Callable, tuple]:
+    def recurse(inner: jcore.ClosedJaxpr, donate_inner: Sequence[int] = ()
+                ) -> tuple[Callable, tuple]:
         inner_run, inner_plan, inner_flat = _build_runner(
             inner, bulk_threshold=bulk_threshold,
-            min_segment=min_segment, impl=impl)
+            min_segment=min_segment, impl=impl,
+            donate_leaves=donate_inner)
         plan.inner_plans.append(inner_plan)
         return inner_run, tuple(inner_flat.consts)
 
     def make_seg_step(seg: Segment) -> Callable:
         out_shapes = [tuple(v.aval.shape) for v in seg.outputs]
+        arg_vars = _segment_arg_vars(seg)
+        call = _segment_vjp(eqns, seg, impl=impl,
+                            donate=tuple(seg.donations),
+                            bulk_threshold=bulk_threshold,
+                            min_segment=min_segment)
 
         def step(env, read):
-            outs = _segment_call(eqns, seg, read, impl=impl)
+            outs = call(*[read(v) for v in arg_vars])
             for var, val, shp in zip(seg.outputs, outs, out_shapes):
                 env[var] = val.reshape(shp)
         return step
 
     def make_scan_step(eqn) -> Callable:
         p = eqn.params
-        inner_run, inner_consts = recurse(p["jaxpr"])
         n_consts, n_carry = p["num_consts"], p["num_carry"]
+        # scan carries are donation candidates inside the rewritten
+        # body: a carry whose value dies at a body segment shares its
+        # buffer with a matching segment output (lax.scan double-buffers
+        # carries, so in-place reuse within one iteration is safe; the
+        # planner still verifies the value is dead past the segment)
+        inner_run, inner_consts = recurse(
+            p["jaxpr"], donate_inner=tuple(
+                range(n_consts, n_consts + n_carry)))
 
         def step(env, read):
             invals = [read(v) for v in eqn.invars]
@@ -1407,7 +1834,10 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
         insertion, no eviction, no recency bump) or the health counters —
         probing a novel shape must not evict a hot compiled plan."""
         leaves, in_tree = jax.tree.flatten(args)
-        key = (in_tree, tuple(_leaf_signature(l) for l in leaves))
+        # direction-tagged: backward (cotangent) plans live in their own
+        # "bwd"-keyed caches (see _segment_bwd_runner) and can never
+        # collide with or evict a forward plan
+        key = ("fwd", in_tree, tuple(_leaf_signature(l) for l in leaves))
         entry = cache.get(key)
         if entry is None:
             if not count:

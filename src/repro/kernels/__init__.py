@@ -8,6 +8,8 @@ from repro.kernels.ops import (
     decode_attention,
     flash_attention,
     fused_elementwise,
+    fused_matmul_dlhs_segment,
+    fused_matmul_drhs_segment,
     fused_matmul_segment,
     fused_segment,
     fused_segment_grid,
@@ -26,6 +28,8 @@ __all__ = [
     "decode_attention",
     "flash_attention",
     "fused_elementwise",
+    "fused_matmul_dlhs_segment",
+    "fused_matmul_drhs_segment",
     "fused_matmul_segment",
     "fused_segment",
     "fused_segment_grid",

@@ -19,9 +19,16 @@ epilogue operands) always holds.
 Operand roles (see repro.core.offload.OperandSpec):
   * lhs side  — ``bulk_k`` [rows, K] tiles walk (i, k); ``param_k``
                 [1, K] vectors walk (0, k) ([1, 1] scalars stay put)
-  * rhs       — the [K, N] weight, streamed (k, 0)
+  * rhs side  — ``bulk_w`` [K, N] weight-side operands, streamed (k, 0)
+                in their RAW dtype with the weight prologue (bf16/int8
+                dequant cast, scales) applied per block in VMEM;
+                ``param_w`` scalars stay put
   * epilogue  — the usual ``bulk``/``param``/``rep``/``tile`` row views,
                 blocked over rows only (the k axis revisits them)
+
+The two grad-time contraction forms (dx = g @ wT, dw = xT @ g) live in
+``repro.kernels.fused_matmul_bwd`` and share this module's VMEM
+accumulator budget and block-extent math.
 """
 from __future__ import annotations
 
@@ -73,8 +80,8 @@ def matmul_row_blocks(rows: int, epi_specs: Sequence[tuple[str, int, int]],
     return rows // _row_block(rows, epi_specs, rows_block, n_dim)
 
 
-def _mm_kernel(*refs, pro_fn: Callable, epi_fn: Callable, n_lhs: int,
-               n_epi: int, acc_dtype):
+def _mm_kernel(*refs, pro_fn: Callable, rhs_pro_fn: Callable, n_lhs: int,
+               n_rhs: int, epi_fn: Callable, n_epi: int, acc_dtype):
     acc_ref = refs[-1]
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -84,24 +91,26 @@ def _mm_kernel(*refs, pro_fn: Callable, epi_fn: Callable, n_lhs: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     lhs = pro_fn(*[r[...] for r in refs[:n_lhs]])
-    rhs = refs[n_lhs][...]
+    rhs = rhs_pro_fn(*[r[...] for r in refs[n_lhs:n_lhs + n_rhs]])
     acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
 
     @pl.when(ki == nk - 1)
     def _store():
         h = acc_ref[...].astype(acc_dtype)
-        epi_vals = [r[...] for r in refs[n_lhs + 1:n_lhs + 1 + n_epi]]
+        epi_vals = [r[...] for r in refs[n_lhs + n_rhs:n_lhs + n_rhs + n_epi]]
         outs = epi_fn(h, *epi_vals)
-        for o_ref, o in zip(refs[n_lhs + 1 + n_epi:-1], outs):
+        for o_ref, o in zip(refs[n_lhs + n_rhs + n_epi:-1], outs):
             o_ref[...] = o.astype(o_ref.dtype)
 
 
 def fused_matmul_segment(
     pro_fn: Callable,
+    rhs_pro_fn: Callable,
     epi_fn: Callable,
     lhs_operands: Sequence[jnp.ndarray],
     lhs_specs: Sequence[tuple[str, int, int]],
-    rhs: jnp.ndarray,
+    rhs_operands: Sequence[jnp.ndarray],
+    rhs_specs: Sequence[tuple[str, int, int]],
     epi_operands: Sequence[jnp.ndarray],
     epi_specs: Sequence[tuple[str, int, int]],
     *,
@@ -119,11 +128,16 @@ def fused_matmul_segment(
     """One fused launch for an anchored segment.
 
     ``pro_fn(*lhs_tiles, block_rows)`` maps the lhs-side tiles to one
-    [rows_block, k_block] tile; ``epi_fn(acc, *epi_blocks, block_rows)``
-    maps the [rows_block, N] accumulator (+ external epilogue blocks) to
-    one [rows_block, out_cols[j]] block per output.  ``donate`` pairs
-    index into ``epi_operands`` and become Pallas
-    ``input_output_aliases`` (offset past the lhs/rhs inputs).
+    [rows_block, k_block] tile; ``rhs_pro_fn(*rhs_blocks, block_rows)``
+    maps the weight-side blocks (``bulk_w`` [K, N] operands streamed
+    once per row block in their RAW dtype, plus ``param_w`` scalars) to
+    one [k_block, N] f32 block — a bf16/int8 dequant cast fused into the
+    kernel instead of materializing the cast weight;
+    ``epi_fn(acc, *epi_blocks, block_rows)`` maps the [rows_block, N]
+    accumulator (+ external epilogue blocks) to one
+    [rows_block, out_cols[j]] block per output.  ``donate`` pairs index
+    into ``epi_operands`` and become Pallas ``input_output_aliases``
+    (offset past the lhs/rhs inputs).
     """
     rb = _row_block(rows, epi_specs, rows_block, n_dim)
     rk = _largest_divisor_leq(
@@ -142,8 +156,14 @@ def fused_matmul_segment(
         else:                   # bulk_k
             ops2.append(v.reshape(rows, k_dim))
             in_specs.append(pl.BlockSpec((rb, rk), lambda i, k: (i, k)))
-    ops2.append(jnp.asarray(rhs).reshape(k_dim, n_dim))
-    in_specs.append(pl.BlockSpec((rk, n_dim), lambda i, k: (k, 0)))
+    for (role, _, c), v in zip(rhs_specs, rhs_operands):
+        v = jnp.asarray(v)
+        if role == "param_w":
+            ops2.append(v.reshape(1, c))
+            in_specs.append(pl.BlockSpec((1, c), lambda i, k: (0, 0)))
+        else:                   # bulk_w: a raw [K, N] weight-side operand
+            ops2.append(v.reshape(k_dim, n_dim))
+            in_specs.append(pl.BlockSpec((rk, n_dim), lambda i, k: (k, 0)))
     for (role, op_rows, c), v in zip(epi_specs, epi_operands):
         v = jnp.asarray(v)
         if role == "param":
@@ -167,14 +187,17 @@ def fused_matmul_segment(
                  for c, dt in zip(out_cols, out_dtypes)]
     out_specs = [pl.BlockSpec((rb, c), lambda i, k: (i, 0))
                  for c in out_cols]
-    aliases = {len(lhs_operands) + 1 + bi: oi for bi, oi in donate}
+    n_mm = len(lhs_operands) + len(rhs_operands)
+    aliases = {n_mm + bi: oi for bi, oi in donate}
 
     outs = pl.pallas_call(
         functools.partial(
             _mm_kernel,
             pro_fn=functools.partial(pro_fn, block_rows=rb),
-            epi_fn=functools.partial(epi_fn, block_rows=rb),
+            rhs_pro_fn=functools.partial(rhs_pro_fn, block_rows=rb),
             n_lhs=len(lhs_operands),
+            n_rhs=len(rhs_operands),
+            epi_fn=functools.partial(epi_fn, block_rows=rb),
             n_epi=len(epi_operands),
             acc_dtype=acc_dtype),
         grid=grid,

@@ -26,6 +26,12 @@ from repro.kernels.fused_elementwise import (
 from repro.kernels.fused_matmul import (
     fused_matmul_segment as _fused_mm_pallas,
 )
+from repro.kernels.fused_matmul_bwd import (
+    fused_matmul_dlhs_segment as _fused_dlhs_pallas,
+)
+from repro.kernels.fused_matmul_bwd import (
+    fused_matmul_drhs_segment as _fused_drhs_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rotary import rotary as _rotary_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -158,7 +164,23 @@ def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
                                   interpret=(impl == "interpret"), **kw)
 
 
-def fused_matmul_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+def _epi_full_views(epi_specs, epi_operands, rows):
+    """Materialize the epilogue operands' broadcast views for ref paths."""
+    full = []
+    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+        v2 = jnp.asarray(v).reshape(
+            (1, c) if role == "param" else (op_rows, c)
+            if role in ("rep", "tile") else (rows, c))
+        if role == "rep":
+            v2 = jnp.repeat(v2, rows // op_rows, axis=0)
+        elif role == "tile":
+            v2 = jnp.tile(v2, (rows // op_rows, 1))
+        full.append(v2)
+    return full
+
+
+def fused_matmul_segment(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
+                         lhs_specs, rhs_operands, rhs_specs,
                          epi_operands, epi_specs, *, rows, k_dim, n_dim,
                          acc_dtype, out_cols, out_dtypes, donate=(),
                          impl: Impl = "auto", **kw):
@@ -173,23 +195,71 @@ def fused_matmul_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
             (1, c) if role == "param_k" else (rows, k_dim))
             for (role, _, c), v in zip(lhs_specs, lhs_operands)]
         lhs = pro_fn(*lhs_full, block_rows=rows)
-        h = jnp.dot(lhs, jnp.asarray(rhs).reshape(k_dim, n_dim),
+        rhs_full = [jnp.asarray(v).reshape(
+            (1, c) if role == "param_w" else (k_dim, n_dim))
+            for (role, _, c), v in zip(rhs_specs, rhs_operands)]
+        rhs = rhs_pro_fn(*rhs_full, block_rows=rows)
+        h = jnp.dot(lhs, rhs,
                     preferred_element_type=jnp.float32).astype(acc_dtype)
-        full = [h]
-        for (role, op_rows, c), v in zip(epi_specs, epi_operands):
-            v2 = jnp.asarray(v).reshape(
-                (1, c) if role == "param" else (op_rows, c)
-                if role in ("rep", "tile") else (rows, c))
-            if role == "rep":
-                v2 = jnp.repeat(v2, rows // op_rows, axis=0)
-            elif role == "tile":
-                v2 = jnp.tile(v2, (rows // op_rows, 1))
-            full.append(v2)
+        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
         outs = epi_fn(*full, block_rows=rows)
         return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
-    return _fused_mm_pallas(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+    return _fused_mm_pallas(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
+                            lhs_specs, rhs_operands, rhs_specs,
                             epi_operands, epi_specs, rows=rows, k_dim=k_dim,
                             n_dim=n_dim, acc_dtype=acc_dtype,
                             out_cols=out_cols, out_dtypes=out_dtypes,
                             donate=donate,
                             interpret=(impl == "interpret"), **kw)
+
+
+def fused_matmul_dlhs_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+                              epi_operands, epi_specs, *, rows, k_dim,
+                              n_dim, acc_dtype, out_cols, out_dtypes,
+                              donate=(), impl: Impl = "auto", **kw):
+    """dGRAD_LHS-anchored segment: dx[rows, n] = g[rows, k] @ w[n, k]^T
+    with the [n, k] forward weight read column-major in-kernel.  The
+    "ref" path runs one XLA dot_general contracting both lane axes."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        lhs_full = [jnp.asarray(v).reshape(
+            (1, c) if role == "param_k" else (rows, k_dim))
+            for (role, _, c), v in zip(lhs_specs, lhs_operands)]
+        g = pro_fn(*lhs_full, block_rows=rows)
+        h = jax.lax.dot_general(
+            g, jnp.asarray(rhs).reshape(n_dim, k_dim),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(acc_dtype)
+        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
+        outs = epi_fn(*full, block_rows=rows)
+        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+    return _fused_dlhs_pallas(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
+                              epi_operands, epi_specs, rows=rows,
+                              k_dim=k_dim, n_dim=n_dim, acc_dtype=acc_dtype,
+                              out_cols=out_cols, out_dtypes=out_dtypes,
+                              donate=donate,
+                              interpret=(impl == "interpret"), **kw)
+
+
+def fused_matmul_drhs_segment(epi_fn, lhs, rhs, epi_operands, epi_specs, *,
+                              m_dim, rows, n_dim, acc_dtype, out_cols,
+                              out_dtypes, donate=(), impl: Impl = "auto",
+                              **kw):
+    """dGRAD_RHS-anchored segment: dw[rows, n] = x[m, rows]^T @ g[m, n]
+    accumulated over the row (M) axis into an f32 [Kb, Nb] scratch.  The
+    "ref" path runs one XLA dot_general contracting both row axes."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        h = jax.lax.dot_general(
+            jnp.asarray(lhs).reshape(m_dim, rows),
+            jnp.asarray(rhs).reshape(m_dim, n_dim),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(acc_dtype)
+        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
+        outs = epi_fn(*full, block_rows=rows)
+        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+    return _fused_drhs_pallas(epi_fn, lhs, rhs, epi_operands, epi_specs,
+                              m_dim=m_dim, rows=rows, n_dim=n_dim,
+                              acc_dtype=acc_dtype, out_cols=out_cols,
+                              out_dtypes=out_dtypes, donate=donate,
+                              interpret=(impl == "interpret"), **kw)

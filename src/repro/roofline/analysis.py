@@ -8,7 +8,13 @@ scan-over-layers / scan-over-blocks models:
   * ``jaxpr_cost``       exact FLOPs + naive/fused HBM bytes by walking the
                          jaxpr with scan-length multipliers (fused bytes
                          use the Algorithm-1 offload segments — the paper's
-                         technique applied to the byte accounting).
+                         technique applied to the byte accounting).  The
+                         segment bytes come from ``Segment.io_bytes``, so
+                         matmul-anchored segments — including the
+                         grad-time dlhs/drhs backward forms on train
+                         traces — model the kernels' actual re-streaming
+                         (fwd/dlhs: weight once per row block; drhs: both
+                         operands once per crossing grid block).
   * ``analytic_bytes``   the kernel-aware HBM-traffic floor (params,
                          optimizer, activation streams, caches) — what the
                          Pallas/TPU execution actually streams.

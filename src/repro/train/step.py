@@ -6,16 +6,20 @@ partial-sum carry rides through the scan, so XLA schedules the
 reduce-scatter of one step against the matmuls of the next — the
 standard compute/comm overlap trick at 1000-node scale).
 
-With ``offload=True`` (or ``tcfg.offload``) the whole step is passed
-through the compile-time near-bank rewriter (repro.core.offload): the
-step's elementwise value chains — activation epilogues, residual adds,
-the AdamW update math — execute as single-pass fused kernels inside one
-jitted executable.  Forward-pass projection matmuls anchor their own
-fused segments (epilogue applied to the accumulator, product never in
-HBM) and lane-axis reductions (rmsnorm/softmax row stats) fuse into
-their chains; the transposed grad-time contractions stay far.  The
-rewrite happens once per batch signature and is cached; wrapping in
-``jax.jit`` on top composes (the loop does).
+With ``offload=True`` (or ``tcfg.offload``) the step runs through the
+compile-time near-bank rewriter (repro.core.offload) on BOTH sides of
+the grad: the *un-differentiated* loss is wrapped, so the backward pass
+flows through the fused segments' custom VJPs — each segment's
+cotangent program is re-planned by the same rewriter, and the grad-time
+contractions (dx = g @ wT, dw = xT @ g) anchor their own backward
+kernels (repro.kernels.fused_matmul_bwd) instead of falling to the far
+path.  Forward projection matmuls anchor fused segments (epilogue on
+the accumulator, product never in HBM), lane-axis reductions
+(rmsnorm/softmax row stats) fuse into their chains, and the optimizer
+update (clip + AdamW elementwise math) is offloaded as its own
+rewritten program.  Forward and backward plans are cached under
+direction-tagged keys; wrapping in ``jax.jit`` on top composes (the
+loop does).
 """
 from __future__ import annotations
 
@@ -61,11 +65,23 @@ def make_train_step(model: Model, tcfg: TrainConfig, *,
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``offload`` (default: ``tcfg.offload``) routes the step through the
-    near-bank offload rewriter — same signature, jit-compatible."""
+    near-bank offload rewriter — same signature, jit-compatible.  The
+    rewriter wraps the UN-differentiated loss, so ``value_and_grad``
+    differentiates *through* the fused segments (their custom VJPs
+    re-plan each cotangent program, anchoring the grad-time
+    contractions near-bank) rather than rewriting an already-transposed
+    trace; the optimizer update is offloaded separately."""
+    use_offload = tcfg.offload if offload is None else offload
 
     def loss_fn(params, batch):
         loss, metrics = model.loss_fn(params, batch, remat=tcfg.remat)
         return loss, metrics
+
+    if use_offload:
+        from repro.core.offload import mpu_offload
+        loss_fn = mpu_offload(loss_fn,
+                              bulk_threshold=tcfg.offload_bulk_threshold,
+                              max_plans=tcfg.offload_max_plans)
 
     def compute_grads(params, batch):
         if tcfg.microbatches <= 1:
@@ -94,16 +110,31 @@ def make_train_step(model: Model, tcfg: TrainConfig, *,
     def model_params_ref(params):
         return params
 
+    def update_fn(params, grads, opt):
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = warmup_cosine(tcfg, opt.step)
+        params, opt = apply_updates(params, grads, opt, tcfg, lr)
+        return params, opt, gnorm, lr
+
+    if use_offload:
+        from repro.core.offload import mpu_offload
+        update_fn = mpu_offload(update_fn,
+                                bulk_threshold=tcfg.offload_bulk_threshold,
+                                max_plans=tcfg.offload_max_plans)
+
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
         loss, metrics, grads = compute_grads(state.params, batch)
-        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
-        lr = warmup_cosine(tcfg, state.opt.step)
-        params, opt = apply_updates(state.params, grads, state.opt, tcfg, lr)
+        params, opt, gnorm, lr = update_fn(state.params, grads, state.opt)
         metrics = {**metrics, "grad_norm": gnorm, "lr": lr,
                    "loss": metrics.get("loss", loss)}
         return TrainState(params, opt), metrics
 
-    return _maybe_offload(train_step, tcfg, offload)
+    if use_offload:
+        # observability parity with the old whole-step wrapper: the
+        # loss wrapper's counters (the dominant plan) plus the update's
+        train_step.stats = loss_fn.stats
+        train_step.update_stats = update_fn.stats
+    return train_step
 
 
 def make_eval_step(model: Model, tcfg: TrainConfig, *,

@@ -1,13 +1,17 @@
 """Matmul-anchored segments + lane-axis reduction fusion.
 
-The PR-3 acceptance contract:
+The PR-3 acceptance contract, extended by the backward-anchoring PR:
   * a qualifying ``dot_general`` OPENS a near segment: its elementwise
     epilogue (bias+gelu, swiglu lane-split gate, residual add, dtype
     cast) and broadcast-compatible prologue fuse into one
     ``fused_matmul_segment`` kernel (K-reduction grid + accumulator
     scratch), so the product tensor never round-trips HBM
-  * disqualified contractions (batch dims, transposed layouts, rank>2
-    rhs) stay far — correctness never depends on anchoring
+  * the grad-time contraction forms anchor too: dx = g @ wT (dlhs,
+    weight read column-major) and dw = xT @ g (drhs, M-innermost
+    accumulation; jax's adjacent transpose absorbed), with a
+    weight-side dequant-cast prologue on the forward form
+  * disqualified contractions (batch dims, rank>2 rhs) stay far —
+    correctness never depends on anchoring
   * lane-axis ``reduce_sum``/``reduce_max`` fuse INTO segments as
     (rows, 1) row statistics, so rmsnorm- and softmax-shaped chains are
     a single segment end to end
@@ -96,6 +100,70 @@ def test_gemm_prologue_cast_and_scale_absorbed():
     _check(fn, xb, w, y, rtol=5e-3, atol=5e-3)
 
 
+def test_rhs_dequant_cast_prologue_absorbed():
+    """A bf16->f32 cast feeding the WEIGHT side fuses into the anchored
+    kernel (applied per [k_block, N] block): the cast tensor is never
+    materialized and the raw bf16 bytes are what stream per row block."""
+    def fn(x, wb, b):
+        w = wb.astype(jnp.float32)
+        return jax.nn.gelu(x @ w + b)
+
+    x = _rand((128, 64))
+    wb = (_rand((64, 48), 1) * 0.1).astype(jnp.bfloat16)
+    b = _rand((48,), 2)
+    plan = offload_report(fn, x, wb, b, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and seg.matmul.rhs_pro_eqns
+    assert [sp.role for sp in seg.matmul.rhs_specs] == ["bulk_w"]
+    assert seg.matmul.rhs_specs[0].var.aval.dtype == jnp.bfloat16
+    _check(fn, x, wb, b, rtol=5e-3, atol=5e-3)
+
+
+def test_rhs_int8_dequant_scale_prologue_absorbed():
+    """int8 weight + scalar scale: the whole dequant chain (cast + mul)
+    rides the weight side of the kernel."""
+    def fn(x, wq, s, b):
+        w = wq.astype(jnp.float32) * s
+        return jnp.tanh(x @ w) + b
+
+    import numpy as np
+    x = _rand((128, 64))
+    wq = jnp.asarray(np.random.RandomState(0)
+                     .randint(-127, 127, (64, 48)).astype(np.int8))
+    s, b = jnp.float32(0.01), _rand((48,), 2)
+    plan = offload_report(fn, x, wq, s, b, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and len(seg.matmul.rhs_pro_eqns) == 2
+    _check(fn, x, wq, s, b, rtol=1e-4, atol=1e-4)
+
+
+def test_rhs_per_channel_dequant_scale_prologue_absorbed():
+    """int8 weight + PER-CHANNEL [N] scale: the scale's [1, N] param
+    lift (jax traces `w * s` as broadcast_in_dim + mul) rides the
+    weight prologue as a ``param_w`` block; only the raw int8 weight
+    and the [N] scale stream — the f32 weight never exists in HBM."""
+    def fn(x, wq, s, b):
+        w = wq.astype(jnp.float32) * s
+        return jnp.tanh(x @ w) + b
+
+    import numpy as np
+    x = _rand((128, 64))
+    wq = jnp.asarray(np.random.RandomState(0)
+                     .randint(-127, 127, (64, 48)).astype(np.int8))
+    s = jnp.abs(_rand((48,), 3)) * 0.01 + 0.001
+    b = _rand((48,), 2)
+    plan = offload_report(fn, x, wq, s, b, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and len(seg.matmul.rhs_pro_eqns) == 3
+    roles = sorted(sp.role for sp in seg.matmul.rhs_specs)
+    assert roles == ["bulk_w", "param_w"]
+    assert seg.matmul.rhs_specs[0].var.aval.dtype == jnp.int8
+    _check(fn, x, wq, s, b, rtol=1e-4, atol=1e-4)
+
+
 def test_gemm_epilogue_bf16_numerics():
     def fn(x, w, b):
         h = x @ w
@@ -119,9 +187,10 @@ def test_bare_matmul_is_not_anchored():
     _check(fn, x, w)
 
 
-def test_batched_and_transposed_dots_stay_far():
-    """Batch dims / non-standard contraction layouts (the grad-time
-    xT @ g and g @ wT forms) are not anchorable and stay far."""
+def test_batched_dots_stay_far():
+    """Batch dims are not anchorable and stay far; the transposed
+    grad-time forms ANCHOR since the backward-anchoring PR (see the
+    dGRAD tests below)."""
     def batched(q, k):
         return jnp.einsum("bsh,bth->bst", q, k) * 2.0
 
@@ -130,15 +199,106 @@ def test_batched_and_transposed_dots_stay_far():
     assert all(s.matmul is None for s in plan.segments)
     _check(batched, q, k)
 
-    def transposed(x, g):
-        # the grad-time xT @ g contraction: lhs contracts dim 0
-        wg = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())))
-        return wg * 0.5 + 1.0
 
-    x, g = _rand((128, 64)), _rand((128, 64), 1)
-    plan = offload_report(transposed, x, g, bulk_threshold=64)
-    assert all(s.matmul is None for s in plan.segments)
-    _check(transposed, x, g)
+# ---------------------------------------------------------------------------
+# grad-time anchor forms: dGRAD_LHS (g @ wT) and dGRAD_RHS (xT @ g)
+# ---------------------------------------------------------------------------
+
+def test_dlhs_grad_contraction_anchors_with_epilogue():
+    """dx = g @ wT (rhs contracting its lane axis — the activation
+    gradient) anchors; the [K,N] weight is read column-major in-kernel
+    and the trailing elementwise chain is the fused epilogue."""
+    def fn(g, w, y):
+        dx = jax.lax.dot_general(g, w, (((1,), (1,)), ((), ())))
+        return jnp.tanh(dx) * 0.5 + y
+
+    g, w = _rand((128, 48)), _rand((64, 48), 1) * 0.1
+    y = _rand((128, 64), 2)
+    plan = offload_report(fn, g, w, y, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and seg.matmul.form == "dlhs"
+    assert seg.matmul.k == 48 and seg.matmul.n == 64
+    _check(fn, g, w, y)
+
+
+def test_drhs_grad_contraction_anchors_with_epilogue():
+    """dw = xT @ g (both operands contracting their row dims — the
+    weight gradient) anchors with M innermost into the [Kb, Nb]
+    accumulator; the weight-decay epilogue fuses."""
+    def fn(x, g, w):
+        dw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())))
+        return dw + 0.01 * w
+
+    x, g = _rand((128, 64)), _rand((128, 48), 1)
+    w = _rand((64, 48), 2)
+    plan = offload_report(fn, x, g, w, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and seg.matmul.form == "drhs"
+    assert seg.matmul.k == 128 and seg.matmul.n == 48
+    _check(fn, x, g, w, rtol=1e-4, atol=1e-4)
+
+
+def test_drhs_absorbs_adjacent_transpose():
+    """jax's transpose rule emits dw as ``dot_general(g, h,
+    contract-rows)`` followed by a rank-2 transpose; the planner absorbs
+    the pair so the kernel writes the [K, N] layout directly."""
+    def fn(g, h, w):
+        dwt = jax.lax.dot_general(g, h, (((0,), (0,)), ((), ())))
+        return dwt.T * 0.9 + 0.01 * w
+
+    g, h = _rand((128, 32)), _rand((128, 48), 1)
+    w = _rand((48, 32), 2)
+    plan = offload_report(fn, g, h, w, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    seg = plan.segments[0]
+    assert seg.matmul is not None and seg.matmul.form == "drhs"
+    assert seg.matmul.extra_eqns, "the transpose must be absorbed"
+    _check(fn, g, h, w, rtol=1e-4, atol=1e-4)
+
+
+def test_drhs_epilogue_rejects_row_stats_and_layouts():
+    """drhs epilogues are lane-blocked: a row softmax on the weight
+    gradient cannot fuse (the lane extent is not resident) — the
+    segment must split rather than miscompile."""
+    def fn(x, g):
+        dw = jax.lax.dot_general(x, g, (((0,), (0,)), ((), ())))
+        return jax.nn.softmax(dw * 0.5, axis=-1)
+
+    x, g = _rand((128, 64)), _rand((128, 48), 1)
+    plan = offload_report(fn, x, g, bulk_threshold=64)
+    closed = jax.make_jaxpr(fn)(x, g)
+    red_idx = {i for i, e in enumerate(closed.jaxpr.eqns)
+               if e.primitive.name in ("reduce_sum", "reduce_max")}
+    # the softmax may still fuse as a plain elementwise segment over the
+    # materialized dw — it just must not ride inside the drhs kernel
+    for s in plan.segments:
+        if s.matmul is not None and s.matmul.form == "drhs":
+            assert not (red_idx & set(s.all_eqn_idx)), \
+                "row stats must not fuse into a drhs epilogue"
+    _check(fn, x, g, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_grad_trace_anchors_backward_segment():
+    """The realistic post-grad trace: jax.grad of a 2-layer MLP loss
+    plans with BOTH forward anchors and at least one anchored backward
+    (dlhs) segment — the activation gradient fused with the previous
+    layer's activation-backward chain."""
+    def loss(x, w1, b1, w2):
+        h = jax.nn.gelu(x @ w1 + b1)
+        o = h @ w2
+        return jnp.sum(o * o)
+
+    x = _rand((128, 64))
+    w1, b1 = _rand((64, 48), 1) * 0.1, _rand((48,), 2)
+    w2 = _rand((48, 32), 3) * 0.1
+    gfn = jax.grad(loss, argnums=(1, 2, 3))
+    plan = offload_report(gfn, x, w1, b1, w2, bulk_threshold=64)
+    forms = [s.matmul.form for s in plan.segments if s.matmul is not None]
+    assert "fwd" in forms
+    assert any(f in ("dlhs", "drhs") for f in forms), forms
+    _check(gfn, x, w1, b1, w2, rtol=1e-4, atol=1e-4)
 
 
 def test_anchored_segment_epilogue_donation():
@@ -155,9 +315,9 @@ def test_anchored_segment_epilogue_donation():
                                       impl="interpret", donate_argnums=(2,))
     assert len(plan.segments) == 1 and plan.segments[0].matmul is not None
     assert plan.donated_hbm_bytes > 0
+    from test_offload_compile import _pallas_calls
     aliases = [e.params.get("input_output_aliases", ())
-               for e in rewritten.jaxpr.eqns
-               if e.primitive.name == "pallas_call"]
+               for e in _pallas_calls(rewritten.jaxpr)]
     assert aliases and any(a for a in aliases), aliases
 
     wrapped = mpu_offload(fn, bulk_threshold=64, impl="interpret",
