@@ -37,11 +37,22 @@ grad-time contraction kernels: the handwritten GEMM backward anchors
 both dGRAD forms, MLP_GRAD plans a real ``jax.grad`` trace, and
 TRAIN_STEP plans loss -> grads -> momentum update as one program.
 
-Writes a versioned ``BENCH_offload.json`` artifact at the repo root.
-``--smoke`` runs a reduced rep count for per-push CI freshness;
-``--csv`` emits the rows table as CSV for quick diffing; under GitHub
-Actions the geomean one-liner (and any regression) is appended to the
-job summary via ``$GITHUB_STEP_SUMMARY``.
+4. **Decision accounting** (the §IV-B1 policy view): every run plans
+   under an ``OffloadPolicy`` (``--policy {greedy,cost,all_near,
+   all_far}``, default greedy) and reports per chain how many candidate
+   segments the policy *declined* plus the modeled near/far time ratio
+   across all candidates.  The greedy run additionally re-plans every
+   chain under ``cost`` and asserts the cost backend's decision-modeled
+   bytes (each candidate at its chosen side's price) never exceed
+   greedy's — cost picks the cheaper side per candidate, so a violation
+   means the decision backend and the pricing have drifted apart.
+
+Writes a versioned ``BENCH_offload.json`` artifact at the repo root
+(greedy runs only — non-default policies must not clobber the ratchet
+baseline).  ``--smoke`` runs a reduced rep count for per-push CI
+freshness; ``--csv`` emits the rows table as CSV for quick diffing;
+under GitHub Actions the geomean one-liner (and any regression) is
+appended to the job summary via ``$GITHUB_STEP_SUMMARY``.
 """
 from __future__ import annotations
 
@@ -53,13 +64,18 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import mpu_offload, mpu_offload_interpreted, offload_report
+from repro.core import (
+    OffloadPolicy,
+    mpu_offload,
+    mpu_offload_interpreted,
+    offload_report,
+)
 from repro.core.machine import V5E
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 # Committed fusion contract: chain -> (segments, traffic_reduction
 # floor, anchored-backward-segment floor).  A later segmenter change
@@ -224,25 +240,31 @@ def _geomean(vals):
     return g ** (1.0 / len(vals))
 
 
-def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
+def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5,
+        policy_mode: str = "greedy"):
+    policy = OffloadPolicy(mode=policy_mode, bulk_threshold=4096)
     rows = []
     bw = V5E.hbm_gbps * 1e9
     for name, fn, args, donate in _cases():
         # the modeled-traffic plan includes invar donation; the timed
         # executable does NOT donate (the timing loop reuses its inputs)
-        plan = offload_report(fn, *args, bulk_threshold=4096,
+        plan = offload_report(fn, *args, policy=policy,
                               donate_argnums=donate)
 
-        compiled = mpu_offload(fn, bulk_threshold=4096)
-        interpreted = mpu_offload_interpreted(fn, bulk_threshold=4096)
+        compiled = mpu_offload(fn, policy=policy)
+        interpreted = mpu_offload_interpreted(fn, policy=policy)
 
         compiled_us = _time_us(compiled, args, reps)
         interp_us = _time_us(interpreted, args, interp_reps)
         st = compiled.stats.as_dict()
+        near_us = sum(d.near_us for d in plan.decisions)
+        far_us = sum(d.far_us for d in plan.decisions)
 
         rows.append({
             "chain": name,
             "segments": len(plan.segments),
+            "declined": sum(1 for d in plan.decisions if not d.fused),
+            "near_far_ratio": near_us / far_us if far_us else 0.0,
             "anchored": sum(1 for s in plan.segments
                             if s.matmul is not None),
             "anchored_bwd": sum(1 for s in plan.segments
@@ -268,6 +290,8 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
     mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
     summary = {
         "schema_version": SCHEMA_VERSION,
+        "policy": policy_mode,
+        "segments_declined_total": sum(r["declined"] for r in rows),
         "anchored_bwd_total": sum(r["anchored_bwd"] for r in rows),
         "mean_traffic_reduction": mean_traffic,
         "geomean_traffic_reduction": _geomean(
@@ -280,11 +304,47 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5):
         "backend": jax.default_backend(),
     }
 
-    if write_artifact:
+    # the committed artifact is the greedy ratchet baseline: a run under
+    # a different policy reports but never overwrites it
+    if write_artifact and policy_mode == "greedy":
         ARTIFACT.write_text(json.dumps(
             {"schema_version": SCHEMA_VERSION, "rows": rows,
              "summary": summary}, indent=2))
     return rows, summary
+
+
+def _decision_bytes(plan) -> int:
+    """The plan's traffic under the DECISION model: each candidate at
+    its chosen side's price (fused -> near bytes, declined -> modeled
+    far bytes).  This is the objective the cost backend minimizes
+    per-candidate, so cost <= greedy holds exactly — unlike the plan's
+    naive traffic accounting, which prices unfused eqns at per-eqn
+    round-trips and can legitimately report a correct cost-mode decline
+    as a traffic increase."""
+    return sum(d.near_bytes if d.fused else d.far_bytes
+               for d in plan.decisions)
+
+
+def check_cost_vs_greedy() -> tuple[list[str], float]:
+    """The cost-backend invariant: ``cost`` picks, per candidate, the
+    side the model prices cheaper, so its decision-modeled bytes can
+    never exceed greedy's on any chain.  Returns (violations, cost
+    geomean traffic reduction) — planning only, no execution."""
+    greedy_policy = OffloadPolicy(bulk_threshold=4096)
+    cost_policy = OffloadPolicy(mode="cost", bulk_threshold=4096)
+    bad, reductions = [], []
+    for name, fn, args, donate in _cases():
+        pg = offload_report(fn, *args, policy=greedy_policy,
+                            donate_argnums=donate)
+        pc = offload_report(fn, *args, policy=cost_policy,
+                            donate_argnums=donate)
+        reductions.append(pc.traffic_reduction)
+        bg, bc = _decision_bytes(pg), _decision_bytes(pc)
+        if bc > bg:
+            bad.append(f"{name}: cost-mode decision bytes {bc} > greedy "
+                       f"{bg}: the cost model fused something it prices "
+                       f"as unprofitable")
+    return bad, _geomean(reductions)
 
 
 def check_regressions(rows, baseline: dict | None = None) -> list[str]:
@@ -329,7 +389,8 @@ def _load_baseline() -> dict | None:
     return prev if prev.get("schema_version") == SCHEMA_VERSION else None
 
 
-_CSV_COLS = ["chain", "segments", "anchored", "anchored_bwd",
+_CSV_COLS = ["chain", "segments", "declined", "near_far_ratio",
+             "anchored", "anchored_bwd",
              "naive_mb", "fused_mb",
              "donated_mb", "effective_mb", "traffic_reduction",
              "naive_us_v5e", "fused_us_v5e", "interpreted_us",
@@ -380,9 +441,13 @@ if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     csv = "--csv" in argv
+    policy_mode = "greedy"
+    if "--policy" in argv:
+        policy_mode = argv[argv.index("--policy") + 1]
     baseline = _load_baseline()      # before run() overwrites the artifact
     rows, summary = run(reps=5 if smoke else 30,
-                        interp_reps=2 if smoke else 5)
+                        interp_reps=2 if smoke else 5,
+                        policy_mode=policy_mode)
     if csv:
         _print_csv(rows)
     else:
@@ -390,6 +455,8 @@ if __name__ == "__main__":
             mark = "*" if r["anchored"] else " "
             mark = "+" if r["anchored_bwd"] else mark
             print(f"{r['chain']:14s} segs={r['segments']}{mark} "
+                  f"declined={r['declined']} "
+                  f"nf={r['near_far_ratio']:.2f} "
                   f"traffic={r['traffic_reduction']:.2f}x "
                   f"donated={r['donated_mb']:6.2f}MB "
                   f"interp={r['interpreted_us']:9.1f}us "
@@ -397,9 +464,19 @@ if __name__ == "__main__":
                   f"speedup={r['compiled_speedup']:7.1f}x "
                   f"retraces={r['retraces']}")
         print("(* = matmul-anchored segment, + = anchored backward "
-              "segment)")
+              "segment; nf = modeled near/far time ratio over all "
+              "candidate segments)")
     print(_geomean_line(summary))
-    regressed = check_regressions(rows, baseline)
+    regressed = []
+    if policy_mode == "greedy":
+        # the MUST_FUSE contract and the artifact ratchet are committed
+        # for the default greedy policy; other policies report only
+        regressed = check_regressions(rows, baseline)
+        cost_bad, g_cost = check_cost_vs_greedy()
+        regressed += cost_bad
+        print(f"cost-mode geomean traffic_reduction={g_cost:.2f}x "
+              f"(decision-modeled bytes <= greedy on every chain: "
+              f"{'ok' if not cost_bad else 'VIOLATED'})")
     _write_step_summary(summary, regressed)
     if regressed:
         print("FUSION REGRESSION: " + "; ".join(regressed), file=sys.stderr)

@@ -61,6 +61,18 @@ def main():
           f"{len(rewritten.jaxpr.eqns)} "
           f"({[e.primitive.name for e in rewritten.jaxpr.eqns]})")
 
+    print("\n== the offload decision, inspectable (OffloadPolicy) ==")
+    # the §IV-B1 near-vs-far call is a policy: 'cost' prices every
+    # candidate segment at the machine model's bandwidths and declines
+    # unprofitable fusions; explain() shows each verdict + rationale
+    # (see examples/offload_explain.py for a full train-step table)
+    from repro.core import OffloadPolicy
+
+    report = mpu_offload(
+        gelu_mlp_epilogue,
+        policy=OffloadPolicy(mode="cost")).explain(x, w, b, res)
+    print(report)
+
     print("\n== Fig. 14 breakdown on the paper's SIMT programs ==")
     for name in ("AXPY", "GEMV", "HIST", "TTRANS"):
         st = location_stats(annotate_locations(PROGRAMS[name]())[0])

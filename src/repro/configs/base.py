@@ -8,8 +8,11 @@ static args to jitted builders and as keys in the dry-run result table.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Literal, Sequence
+
+from repro.core.policy import OffloadPolicy
 
 BlockKind = Literal["attention", "mamba2", "rwkv6", "shared_attention"]
 ModelKind = Literal["decoder", "encoder_decoder"]
@@ -255,10 +258,19 @@ class TrainConfig:
     microbatches: int = 1  # gradient accumulation factor
     remat: bool = True
     seed: int = 0
-    # near-bank instruction offload (compile-time jaxpr rewrite, §IV-B1)
+    # near-bank instruction offload (compile-time jaxpr rewrite, §IV-B1):
+    # ``offload`` switches the rewriter on; ``offload_policy`` (a
+    # repro.core.policy.OffloadPolicy) selects the decision backend and
+    # planner knobs — None leaves the wrapper unpinned, resolving the
+    # active ``with offload_policy(...):`` scope (else the default
+    # greedy policy) at call time.
     offload: bool = False
-    offload_bulk_threshold: int = 1024
-    offload_max_plans: int = 128  # LRU bound on cached offload plans
+    offload_policy: "OffloadPolicy | None" = None
+    # DEPRECATED: pre-policy knobs, folded into offload_policy by
+    # train/step.py with a DeprecationWarning — set
+    # offload_policy=OffloadPolicy(bulk_threshold=..., max_plans=...)
+    offload_bulk_threshold: int | None = None
+    offload_max_plans: int | None = None
     # distributed-optimization knobs
     zero3: bool = True  # shard params/opt-state over the data axis
     grad_compression: Literal["none", "int8"] = "none"
@@ -268,6 +280,26 @@ class TrainConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     keep_checkpoints: int = 3
     step_deadline_s: float = 0.0  # 0 = disabled straggler deadline
+
+    def __post_init__(self):
+        if self.offload_bulk_threshold is not None or \
+                self.offload_max_plans is not None:
+            warnings.warn(
+                "TrainConfig.offload_bulk_threshold/offload_max_plans are "
+                "deprecated: set offload_policy=OffloadPolicy("
+                "bulk_threshold=..., max_plans=...) instead",
+                DeprecationWarning, stacklevel=3)
+
+    def resolved_offload_policy(self) -> OffloadPolicy | None:
+        """The policy the train step should pin: ``offload_policy`` with
+        any deprecated knobs folded on top, or None to leave the wrapper
+        unpinned (scoped ``offload_policy(...)`` overrides / default)."""
+        legacy = {k: v for k, v in (
+            ("bulk_threshold", self.offload_bulk_threshold),
+            ("max_plans", self.offload_max_plans)) if v is not None}
+        if not legacy:
+            return self.offload_policy
+        return (self.offload_policy or OffloadPolicy()).replace(**legacy)
 
 
 def reduced(config: ModelConfig, **overrides) -> ModelConfig:

@@ -18,9 +18,23 @@ from repro.core.offload import (
     clear_bwd_plans,
     mpu_offload,
     mpu_offload_interpreted,
+    offload_explain,
     offload_report,
     plan_offload,
     rewrite_offload,
+)
+from repro.core.policy import (
+    DEFAULT_POLICY,
+    OFFLOAD_MODES,
+    PLANNER_MODES,
+    SIMULATOR_MODES,
+    DecisionReport,
+    OffloadPolicy,
+    SegmentDecision,
+    current_policy,
+    offload_policy,
+    resolve_policy,
+    simulator_mode,
 )
 from repro.core.simulator import SimConfig, SimResult, end_to_end_time, simulate
 
@@ -30,7 +44,10 @@ __all__ = [
     "annotate_jaxpr", "MatmulAnchor", "OffloadPlan", "OffloadStats",
     "Segment",
     "bwd_plan_stats", "bwd_plans", "clear_bwd_plans",
-    "mpu_offload", "mpu_offload_interpreted", "offload_report",
-    "plan_offload", "rewrite_offload", "SimConfig", "SimResult",
-    "end_to_end_time", "simulate",
+    "mpu_offload", "mpu_offload_interpreted", "offload_explain",
+    "offload_report", "plan_offload", "rewrite_offload",
+    "DEFAULT_POLICY", "OFFLOAD_MODES", "PLANNER_MODES", "SIMULATOR_MODES",
+    "DecisionReport", "OffloadPolicy", "SegmentDecision",
+    "current_policy", "offload_policy", "resolve_policy", "simulator_mode",
+    "SimConfig", "SimResult", "end_to_end_time", "simulate",
 ]

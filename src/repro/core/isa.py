@@ -181,9 +181,17 @@ def location_stats(regs: dict[str, Loc]) -> dict[str, float]:
     return {k: v / n for k, v in cnt.items()}
 
 
-def apply_policy(program: Program, policy: str,
+def apply_policy(program: Program, policy,
                  smem_near: bool = True) -> dict[int, Loc]:
     """Instruction-location policies of Fig. 15.
+
+    ``policy`` is any name from the shared mode registry in
+    ``repro.core.policy`` (or an ``OffloadPolicy`` object, whose mode is
+    projected onto the simulator vocabulary via ``simulator_mode`` —
+    the jaxpr planner's ``greedy``/``cost`` backends both execute as
+    Algorithm-1 ``annotated`` locations here).  Unknown names raise
+    ``ValueError`` up front, so the simulator and the planner cannot
+    drift apart on vocabulary.
 
     annotated   Algorithm 1 (the paper's compiler optimization)
     hw_default  no compiler hints: offload only when the register track
@@ -193,6 +201,9 @@ def apply_policy(program: Program, policy: str,
     all_near    offload every offloadable instruction
     all_far     never offload (PonB-like execution of compute)
     """
+    from repro.core.policy import simulator_mode
+
+    policy = simulator_mode(policy)
     if policy == "annotated":
         return annotate_locations(program, smem_near=smem_near)[1]
     out: dict[int, Loc] = {}

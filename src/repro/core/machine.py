@@ -61,6 +61,19 @@ class MPUMachine:
         return (self.tsv_bits_per_core / 8) * self.f_tsv_ghz
 
     @property
+    def offload_near_gbps(self) -> float:
+        """Aggregate near-bank stream bandwidth (all cores reading their
+        local banks) — what a fused near segment's bytes move at."""
+        return self.core_bank_gbps * self.cores * self.processors
+
+    @property
+    def offload_far_gbps(self) -> float:
+        """Aggregate far-path bandwidth: far-bank execution streams every
+        operand through the TSVs, the §IV-B1 bottleneck the offload
+        decision weighs fused near traffic against."""
+        return self.tsv_gbps_per_core * self.cores * self.processors
+
+    @property
     def total_area_mm2(self) -> float:
         return 926.0
 
@@ -84,6 +97,16 @@ class GPUMachine:
     e_alu_op: float = 18.0e-12
     total_area_mm2: float = 1199.0   # die + 4 HBM stacks
 
+    @property
+    def offload_near_gbps(self) -> float:
+        """No near-bank path: fused kernels still stream HBM — the win
+        is moving fewer bytes, not a faster wire."""
+        return self.hbm_gbps
+
+    @property
+    def offload_far_gbps(self) -> float:
+        return self.hbm_gbps
+
 
 @dataclass(frozen=True)
 class TPUv5e:
@@ -95,6 +118,16 @@ class TPUv5e:
     ici_links: int = 4                   # 2D torus, 4 links/chip
     vmem_bytes: int = 128 * 1024 * 1024
     hbm_bytes: int = 16 * 1024 * 1024 * 1024
+
+    @property
+    def offload_near_gbps(self) -> float:
+        """Fused segments and the far pipeline both stream the same HBM
+        on TPU; the cost decision reduces to a pure byte count."""
+        return self.hbm_gbps
+
+    @property
+    def offload_far_gbps(self) -> float:
+        return self.hbm_gbps
 
 
 MPU = MPUMachine()

@@ -74,13 +74,25 @@ compiled program.  This module mirrors that architecture for JAX:
                 buffers donation would overwrite); the primal path
                 keeps them.
 
-``mpu_offload(fn)`` returns a drop-in replacement for ``fn`` that caches
-compiled runners keyed by the hashable aval signature of the arguments.
-The cache is an LRU bounded by ``max_plans`` (serving with many shapes
-stays bounded); hits, misses, evictions and traces are observable via
-``wrapped.stats``.  ``donate_argnums`` marks positional arguments whose
-buffers may be reused by fused segments (same contract as ``jax.jit``
-donation: pass fresh buffers on subsequent calls).
+Every fuse-or-decline verdict is an ``OffloadPolicy`` decision
+(repro.core.policy): the planner finds candidate segments the same way
+under every mode, then the policy's backend — ``greedy`` (default,
+today's heuristics), ``cost`` (the paper's §IV-B1 modeled near-vs-far
+time from ``Segment.io_bytes`` and the machine model's bandwidths),
+``all_near``, or ``all_far`` — fuses or declines each candidate, and
+both verdicts are recorded on the plan (``OffloadPlan.decisions``,
+rendered by ``wrapped.explain(*args)`` / ``offload_explain``).
+
+``mpu_offload(fn, policy=...)`` returns a drop-in replacement for ``fn``
+that caches compiled runners keyed by (policy, aval signature) — the
+same avals under a different policy (e.g. inside a
+``with offload_policy(p):`` scope) compile a fresh plan rather than
+hitting a stale one.  The cache is an LRU bounded by the policy's
+``max_plans`` (serving with many shapes stays bounded); hits, misses,
+evictions and traces are observable via ``wrapped.stats``.
+``donate_argnums`` marks positional arguments whose buffers may be
+reused by fused segments (same contract as ``jax.jit`` donation: pass
+fresh buffers on subsequent calls).
 
 ``rewrite_offload`` exposes the rewritten ``ClosedJaxpr`` itself — the
 compile-time artefact in which each near segment appears as a single
@@ -111,6 +123,14 @@ from repro.core.locator import (
     JaxprAnnotation,
     annotate_jaxpr,
     eqn_tier,
+)
+from repro.core.policy import (
+    DecisionReport,
+    OffloadPolicy,
+    SegmentDecision,
+    active_policy_override,
+    fold_legacy_kwargs,
+    resolve_policy,
 )
 from repro.kernels import ops as kops
 
@@ -222,6 +242,7 @@ class Segment:
     span_start: int
     span_end: int
     matmul: MatmulAnchor | None = None   # set for matmul-anchored segments
+    vmem_bytes: int | None = None        # OffloadPolicy.vmem_budget
 
     @property
     def n_eqns(self) -> int:
@@ -278,13 +299,14 @@ class Segment:
             rhs_par = sum(_dtype_size(sp.var.aval) for sp in mm.rhs_specs
                           if sp.role == "param_w")
             if mm.form == "drhs":
-                row_blocks, n_blocks = drhs_grid_blocks(self.rows, mm.n)
+                row_blocks, n_blocks = drhs_grid_blocks(
+                    self.rows, mm.n, vmem_bytes=self.vmem_bytes)
                 total += lhs_b * n_blocks + rhs_bulk * row_blocks + rhs_par
             else:
                 total += lhs_b + rhs_par
                 total += rhs_bulk * matmul_row_blocks(
                     self.rows, [sp.meta for sp in self.operand_specs],
-                    mm.n)
+                    mm.n, vmem_bytes=self.vmem_bytes)
         return total
 
 
@@ -296,6 +318,23 @@ class OffloadPlan:
     fused_hbm_bytes: int
     donated_hbm_bytes: int = 0
     inner_plans: list["OffloadPlan"] = field(default_factory=list)
+    # every candidate's §IV-B1 verdict (fused AND declined), in program
+    # order — what explain() renders; the policy the planner decided
+    # under rides along so a plan is self-describing.
+    decisions: list[SegmentDecision] = field(default_factory=list)
+    policy: OffloadPolicy | None = None
+
+    def report(self) -> DecisionReport:
+        """The per-segment decision report (see ``DecisionReport``),
+        nested reports covering scan/pjit bodies."""
+        from repro.core.policy import DEFAULT_POLICY
+
+        return DecisionReport(
+            policy=self.policy or DEFAULT_POLICY,
+            decisions=list(self.decisions),
+            naive_bytes=self.naive_hbm_bytes,
+            fused_bytes=self.fused_hbm_bytes,
+            inner=[p.report() for p in self.inner_plans])
 
     @property
     def traffic_reduction(self) -> float:
@@ -347,6 +386,50 @@ class OffloadStats:
 
 def _dtype_size(aval) -> int:
     return aval.size * aval.dtype.itemsize
+
+
+def _eqn_io_bytes(eqn) -> int:
+    """One eqn's naive HBM round-trip: every operand read, every output
+    written (the paper's TSV-style per-eqn traffic accounting)."""
+    return sum(_dtype_size(v.aval) for v in (*eqn.invars, *eqn.outvars)
+               if not isinstance(v, jcore.Literal))
+
+
+# eqns XLA executes as free layout folds on the far pipeline: they move
+# no bytes of their own (a transpose after a dot is an output-layout
+# choice, a broadcast/reshape feeds its consumer's read), so the cost
+# decision must not credit a fusion for "eliminating" them.
+_FAR_FREE_PRIMS = frozenset(LAYOUT_PRIMS) | {"transpose", "squeeze"}
+
+
+def _far_decision_bytes(eqns: Sequence, idxs: Sequence[int]) -> int:
+    """The far side of the §IV-B1 cost decision: what these eqns would
+    actually stream on the far pipeline.  Tighter than the naive
+    accounting — layout eqns are free (XLA folds them), a value read
+    through a fold streams its *source* bytes (a scalar broadcast to
+    [R, C] streams one scalar, not R*C), and an operand read twice by
+    one eqn streams once — so the decision never credits fusion for
+    savings XLA would realize anyway."""
+    folded: dict[Any, int] = {}   # layout output -> folded source bytes
+
+    def read_bytes(v) -> int:
+        return folded.get(v, _dtype_size(v.aval))
+
+    total = 0
+    for j in idxs:
+        eqn = eqns[j]
+        if eqn.primitive.name in _FAR_FREE_PRIMS:
+            folded[eqn.outvars[0]] = sum(
+                read_bytes(v) for v in eqn.invars
+                if not isinstance(v, jcore.Literal))
+            continue
+        seen: set[int] = set()
+        for v in (*eqn.invars, *eqn.outvars):
+            if isinstance(v, jcore.Literal) or id(v) in seen:
+                continue
+            seen.add(id(v))
+            total += read_bytes(v)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -478,16 +561,29 @@ def _classify_operand(shape: tuple[int, ...], out_shape: tuple[int, ...],
     return None
 
 
-def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
-                 min_segment: int = 2,
+def plan_offload(closed: jcore.ClosedJaxpr, *,
+                 policy: OffloadPolicy | None = None,
+                 bulk_threshold: int | None = None,
+                 min_segment: int | None = None,
                  donate_invars: frozenset = frozenset()) -> OffloadPlan:
-    """Algorithm-1 annotation + maximal cross-shape segment extraction.
+    """Algorithm-1 annotation + maximal cross-shape segment extraction,
+    gated by the policy's decision backend (§IV-B1).
 
     Pure planning on the given (already-flattened) jaxpr: no execution,
-    no recursion into call bodies.  ``donate_invars`` marks jaxpr invars
-    whose buffers may be aliased into segment outputs (from the
-    wrapper's ``donate_argnums``); intermediates that die at a segment
-    are always donation candidates."""
+    no recursion into call bodies.  Candidate segments are found the
+    same way under every mode; each candidate is then priced and either
+    fused or declined by ``policy.decide`` — both verdicts land in
+    ``OffloadPlan.decisions``.  ``policy`` defaults to the active
+    ``offload_policy(...)`` scope (else ``DEFAULT_POLICY``);
+    ``bulk_threshold``/``min_segment`` are legacy per-call overrides
+    folded into it.  ``donate_invars`` marks jaxpr invars whose buffers
+    may be aliased into segment outputs (from the wrapper's
+    ``donate_argnums``); intermediates that die at a segment are always
+    donation candidates."""
+    policy = resolve_policy(policy, bulk_threshold=bulk_threshold,
+                            min_segment=min_segment)
+    bulk_threshold = policy.bulk_threshold
+    min_segment = policy.min_segment
     ann = annotate_jaxpr(closed, bulk_threshold=bulk_threshold)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
@@ -502,6 +598,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
     invar_set = set(jaxpr.invars)
 
     segments: list[Segment] = []
+    decisions: list[SegmentDecision] = []
     # mutable run state
     current: list[int] = []
     cur_rows: int | None = None
@@ -1101,12 +1198,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         return False
 
     def flush():
-        if mm is None:
-            if n_compute < min_segment:
-                reset()
-                return
-        elif n_compute < 1:
-            reset()                  # bare matmul: no fused ALU work
+        if mm is None and n_compute < 1:
+            reset()                  # no ALU work at all: not a candidate
             return
         seg_idx = list(current)
         seg_set = set(seg_idx)
@@ -1210,11 +1303,33 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
                 form=mm["form"], rhs_specs=mm["rhs_specs"],
                 rhs_pro_eqns=mm["rhs_pro_eqns"],
                 extra_eqns=mm["extra_eqns"])
-        segments.append(Segment(
+        seg = Segment(
             eqn_idx=seg_idx, rows=cur_rows, bulk_shape=anchor,
             operand_specs=operand_specs, outputs=outputs, out_cols=out_cols,
             donations=donations, pre_eqns=pre, n_compute=n_compute,
-            span_start=span_start, span_end=span_end, matmul=anchor_spec))
+            span_start=span_start, span_end=span_end, matmul=anchor_spec,
+            vmem_bytes=policy.vmem_budget)
+
+        # the §IV-B1 decision: price the candidate both ways and let the
+        # policy's backend fuse or decline it (the verdict is recorded
+        # either way — explain() shows declines with their rationale)
+        far_b = _far_decision_bytes(eqns, seg.all_eqn_idx)
+        roles = [f"{sp.role}[{sp.rows}x{sp.cols}]"
+                 for sp in seg.operand_specs]
+        if anchor_spec is not None:
+            roles = [f"{sp.role}[{sp.rows}x{sp.cols}]"
+                     for sp in (*anchor_spec.lhs_specs,
+                                *anchor_spec.rhs_specs)] + roles
+        decision = policy.decide(
+            tier="anchor" if anchor_spec is not None else "elementwise",
+            n_compute=n_compute, near_bytes=seg.io_bytes(),
+            far_bytes=far_b)
+        decision = decision._with(
+            form=anchor_spec.form if anchor_spec is not None else None,
+            rows=cur_rows, roles=tuple(roles))
+        decisions.append(decision)
+        if decision.fused:
+            segments.append(seg)
         reset()
 
     for i, eqn in enumerate(eqns):
@@ -1234,9 +1349,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
     seg_eqns = {i for s in segments for i in s.all_eqn_idx}
     naive = fused = donated = 0
     for i, eqn in enumerate(eqns):
-        io_bytes = sum(
-            _dtype_size(v.aval) for v in (*eqn.invars, *eqn.outvars)
-            if not isinstance(v, jcore.Literal))
+        io_bytes = _eqn_io_bytes(eqn)
         naive += io_bytes
         if i not in seg_eqns:
             fused += io_bytes
@@ -1244,7 +1357,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
         fused += s.io_bytes()
         donated += sum(_dtype_size(s.outputs[oi].aval)
                        for _, oi in s.donations)
-    return OffloadPlan(ann, segments, naive, fused, donated)
+    return OffloadPlan(ann, segments, naive, fused, donated,
+                       decisions=decisions, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -1405,14 +1519,16 @@ def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
             _segment_fn(eqns, seg), lhs_vals[0], rhs_vals[0], epi_vals,
             epi_meta, m_dim=mm.k, rows=seg.rows, n_dim=mm.n,
             acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
-            out_dtypes=out_dtypes, donate=donate, impl=impl)
+            out_dtypes=out_dtypes, donate=donate, impl=impl,
+            vmem_bytes=seg.vmem_bytes)
     if mm.form == "dlhs":
         return kops.fused_matmul_dlhs_segment(
             _prologue_fn(eqns, mm), _segment_fn(eqns, seg), lhs_vals,
             tuple(s.meta for s in mm.lhs_specs), rhs_vals[0], epi_vals,
             epi_meta, rows=seg.rows, k_dim=mm.k, n_dim=mm.n,
             acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
-            out_dtypes=out_dtypes, donate=donate, impl=impl)
+            out_dtypes=out_dtypes, donate=donate, impl=impl,
+            vmem_bytes=seg.vmem_bytes)
     return kops.fused_matmul_segment(
         _prologue_fn(eqns, mm), _rhs_prologue_fn(eqns, mm),
         _segment_fn(eqns, seg), lhs_vals,
@@ -1420,7 +1536,7 @@ def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
         tuple(s.meta for s in mm.rhs_specs), epi_vals, epi_meta,
         rows=seg.rows, k_dim=mm.k, n_dim=mm.n, acc_dtype=mm.out_dtype,
         out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=donate,
-        impl=impl)
+        impl=impl, vmem_bytes=seg.vmem_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -1459,12 +1575,12 @@ def clear_bwd_plans() -> None:
     _BWD_STATS.reset()
 
 
-def _segment_bwd_runner(eqns: Sequence, seg: Segment, *, impl: str,
-                        bulk_threshold: int, min_segment: int) -> Callable:
+def _segment_bwd_runner(eqns: Sequence, seg: Segment, *,
+                        policy: OffloadPolicy) -> Callable:
     """(primals, cotangents) -> operand cotangents, with the cotangent
-    jaxpr planned through ``_build_runner`` once per aval signature and
-    cached on the segment ("bwd"-tagged keys, separate from every
-    forward plan cache)."""
+    jaxpr planned through ``_build_runner`` once per (policy, aval)
+    signature and cached on the segment ("bwd"-tagged keys, separate
+    from every forward plan cache)."""
 
     def ref_fn(*vals):
         return _segment_dispatch(eqns, seg, vals, impl="ref", donate=())
@@ -1476,7 +1592,7 @@ def _segment_bwd_runner(eqns: Sequence, seg: Segment, *, impl: str,
     cache: dict = seg.__dict__.setdefault("_bwd_plan_cache", {})
 
     def run_bwd(primals, cts):
-        key = ("bwd",
+        key = ("bwd", policy,
                tuple(_leaf_signature(v) for v in primals),
                tuple(_leaf_signature(v) for v in cts))
         entry = cache.get(key)
@@ -1484,9 +1600,7 @@ def _segment_bwd_runner(eqns: Sequence, seg: Segment, *, impl: str,
             _BWD_STATS.plan_misses += 1
             _BWD_STATS.traces += 1
             closed = jax.make_jaxpr(ct_fn)(tuple(primals), tuple(cts))
-            run, plan, flat = _build_runner(
-                closed, bulk_threshold=bulk_threshold,
-                min_segment=min_segment, impl=impl)
+            run, plan, flat = _build_runner(closed, policy=policy)
             entry = cache[key] = (run, tuple(flat.consts))
             _BWD_PLANS.append(plan)
             del _BWD_PLANS[:-_BWD_PLANS_KEEP]
@@ -1498,13 +1612,15 @@ def _segment_bwd_runner(eqns: Sequence, seg: Segment, *, impl: str,
     return run_bwd
 
 
-def _segment_vjp(eqns: Sequence, seg: Segment, *, impl: str,
+def _segment_vjp(eqns: Sequence, seg: Segment, *,
                  donate: Sequence[tuple[int, int]],
-                 bulk_threshold: int, min_segment: int) -> Callable:
+                 policy: OffloadPolicy) -> Callable:
     """The differentiable fused-segment call.  The primal path keeps its
     donation aliases; the VJP forward path drops them (its residuals ARE
     the input buffers the kernel would otherwise overwrite) and the
-    backward re-plans the cotangent program through the rewriter."""
+    backward re-plans the cotangent program through the rewriter under
+    the same policy."""
+    impl = policy.impl
 
     @jax.custom_vjp
     def call(*vals):
@@ -1514,9 +1630,7 @@ def _segment_vjp(eqns: Sequence, seg: Segment, *, impl: str,
         outs = _segment_dispatch(eqns, seg, vals, impl=impl, donate=())
         return outs, vals
 
-    bwd_runner = _segment_bwd_runner(
-        eqns, seg, impl=impl, bulk_threshold=bulk_threshold,
-        min_segment=min_segment)
+    bwd_runner = _segment_bwd_runner(eqns, seg, policy=policy)
 
     def bwd(res, cts):
         return bwd_runner(res, tuple(cts))
@@ -1540,12 +1654,11 @@ def _segment_call(eqns: Sequence, seg: Segment, read, *, impl: str,
 # The compile-time rewriter.
 # ---------------------------------------------------------------------------
 
-def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
-                  min_segment: int, impl: str,
+def _build_runner(closed: jcore.ClosedJaxpr, *, policy: OffloadPolicy,
                   donate_leaves: Sequence[int] = ()
                   ) -> tuple[Callable, OffloadPlan, jcore.ClosedJaxpr]:
-    """The compile-time pass: flatten + plan once, then bake every
-    offload decision into a flat list of step closures.
+    """The compile-time pass: flatten + plan once under ``policy``, then
+    bake every offload decision into a flat list of step closures.
 
     Returns ``(run, plan, flat)`` where ``flat`` is the flattened
     ClosedJaxpr the plan indexes into, and ``run(consts, args)`` is a
@@ -1556,8 +1669,7 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
     everything else re-binds its primitive unchanged."""
     closed = _flatten_calls(closed)
     donate_invars = frozenset(closed.jaxpr.invars[i] for i in donate_leaves)
-    plan = plan_offload(closed, bulk_threshold=bulk_threshold,
-                        min_segment=min_segment,
+    plan = plan_offload(closed, policy=policy,
                         donate_invars=donate_invars)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
@@ -1566,19 +1678,15 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, bulk_threshold: int,
     def recurse(inner: jcore.ClosedJaxpr, donate_inner: Sequence[int] = ()
                 ) -> tuple[Callable, tuple]:
         inner_run, inner_plan, inner_flat = _build_runner(
-            inner, bulk_threshold=bulk_threshold,
-            min_segment=min_segment, impl=impl,
-            donate_leaves=donate_inner)
+            inner, policy=policy, donate_leaves=donate_inner)
         plan.inner_plans.append(inner_plan)
         return inner_run, tuple(inner_flat.consts)
 
     def make_seg_step(seg: Segment) -> Callable:
         out_shapes = [tuple(v.aval.shape) for v in seg.outputs]
         arg_vars = _segment_arg_vars(seg)
-        call = _segment_vjp(eqns, seg, impl=impl,
-                            donate=tuple(seg.donations),
-                            bulk_threshold=bulk_threshold,
-                            min_segment=min_segment)
+        call = _segment_vjp(eqns, seg, donate=tuple(seg.donations),
+                            policy=policy)
 
         def step(env, read):
             outs = call(*[read(v) for v in arg_vars])
@@ -1726,17 +1834,23 @@ def _donate_leaf_indices(args, donate: tuple[int, ...]) -> tuple[int, ...]:
     return tuple(idx)
 
 
-def rewrite_offload(closed: jcore.ClosedJaxpr, *, bulk_threshold: int = 1024,
-                    min_segment: int = 2, impl: str = "auto",
+def rewrite_offload(closed: jcore.ClosedJaxpr, *,
+                    policy: OffloadPolicy | None = None,
+                    bulk_threshold: int | None = None,
+                    min_segment: int | None = None, impl: str | None = None,
                     donate_argnums: int | Sequence[int] = ()
                     ) -> tuple[jcore.ClosedJaxpr, OffloadPlan]:
     """jaxpr -> jaxpr: re-stage the runner so each near segment appears
     as a single fused kernel eqn (carrying its ``input_output_aliases``)
-    in the returned ``ClosedJaxpr``.  ``donate_argnums`` indexes the
-    (flat) jaxpr invars whose buffers segments may alias."""
+    in the returned ``ClosedJaxpr``.  ``policy`` selects the decision
+    backend (default: the active ``offload_policy`` scope);
+    ``donate_argnums`` indexes the (flat) jaxpr invars whose buffers
+    segments may alias."""
+    policy = resolve_policy(policy, bulk_threshold=bulk_threshold,
+                            min_segment=min_segment, impl=impl)
     run, plan, flat = _build_runner(
-        closed, bulk_threshold=bulk_threshold, min_segment=min_segment,
-        impl=impl, donate_leaves=_normalize_donate(donate_argnums))
+        closed, policy=policy,
+        donate_leaves=_normalize_donate(donate_argnums))
     consts = tuple(flat.consts)
     avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
              for v in flat.jaxpr.invars]
@@ -1775,18 +1889,33 @@ class _CompiledOffload:
         return jax.make_jaxpr(lambda *a: self.run(consts, a))(*avals)
 
 
-def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
-                min_segment: int = 2, impl: str = "auto",
-                max_plans: int = 128,
-                donate_argnums: int | Sequence[int] = ()) -> Callable:
-    """Compile-time offload transform with a bounded plan cache.
+def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
+                donate_argnums: int | Sequence[int] = (),
+                bulk_threshold: int | None = None,
+                min_segment: int | None = None, impl: str | None = None,
+                max_plans: int | None = None) -> Callable:
+    """Compile-time offload transform with a bounded, policy-keyed plan
+    cache.
+
+    ``policy`` (an ``OffloadPolicy``) is the single configuration
+    object: decision mode (greedy/cost/all_near/all_far), planner
+    thresholds, kernel impl, VMEM budget, machine model and cache
+    bound.  When omitted, the wrapper is *unpinned*: each call resolves
+    the active ``with offload_policy(p):`` scope (else the default).  A
+    scoped override always wins — even over a pinned policy — for the
+    duration of the scope; because the policy is part of every
+    plan-cache key, the same avals under a different policy compile a
+    fresh plan and can never hit a stale one.  The legacy kwargs
+    (``bulk_threshold``/``min_segment``/``impl``/``max_plans``) still
+    work through a deprecation shim that builds the equivalent pinned
+    policy.
 
     Returns ``wrapped`` such that ``wrapped(*args)``:
-      1. looks up the aval signature of ``args`` in the plan cache;
+      1. looks up (effective policy, aval signature) in the plan cache;
       2. on miss, traces ``fn`` once, runs the rewriter once, and stages
          the result through ``jax.jit`` (evicting the least-recently-used
          plan beyond ``max_plans`` entries);
-      3. on hit (and on every later call with the same avals) dispatches
+      3. on hit (and on every later call with the same key) dispatches
          straight into the compiled executable — zero re-planning, zero
          re-tracing.
 
@@ -1799,23 +1928,36 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
     collapses into the outer trace), and exposes:
       * ``wrapped.stats``        — OffloadStats
                                    (plan_hits/plan_misses/traces/evictions)
+      * ``wrapped.policy``       — the pinned policy (None if unpinned)
       * ``wrapped.plan_for(*a)`` — the OffloadPlan for a signature
+      * ``wrapped.explain(*a)``  — the per-segment DecisionReport (tier,
+                                   anchor form, io bytes, modeled
+                                   near/far time, fuse/decline rationale)
       * ``wrapped.rewritten(*a)``— the rewritten ClosedJaxpr
       * ``wrapped.cache_clear()`` / ``wrapped.cache_size()``
     """
-    if max_plans < 1:
-        raise ValueError("max_plans must be >= 1")
+    policy = fold_legacy_kwargs(
+        policy, where="mpu_offload", bulk_threshold=bulk_threshold,
+        min_segment=min_segment, impl=impl, max_plans=max_plans)
     donate = _normalize_donate(donate_argnums)
     cache: OrderedDict[Any, _CompiledOffload] = OrderedDict()
     stats = OffloadStats()
+    # the LRU bound is a property of this wrapper's cache, fixed at wrap
+    # time (a scoped policy override re-keys plans but does not resize)
+    cache_bound = (policy or OffloadPolicy()).max_plans
 
-    def compile_for(args) -> _CompiledOffload:
+    def effective_policy() -> OffloadPolicy:
+        override = active_policy_override()
+        if override is not None:
+            return override
+        return policy if policy is not None else OffloadPolicy()
+
+    def compile_for(pol: OffloadPolicy, args) -> _CompiledOffload:
         # one trace serves both the jaxpr and the output tree
         closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
         donate_leaves = _donate_leaf_indices(args, donate)
         run, plan, flat = _build_runner(
-            closed, bulk_threshold=bulk_threshold, min_segment=min_segment,
-            impl=impl, donate_leaves=donate_leaves)
+            closed, policy=pol, donate_leaves=donate_leaves)
         consts = tuple(flat.consts)
         out_tree = jax.tree.structure(out_shape)
 
@@ -1829,22 +1971,27 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
                                 run, flat)
 
     def entry_for(args, count: bool = True) -> tuple[_CompiledOffload, list]:
-        """``count=False`` is the introspection path (plan_for/rewritten):
-        it may compile a transient entry, but never mutates the LRU (no
-        insertion, no eviction, no recency bump) or the health counters —
-        probing a novel shape must not evict a hot compiled plan."""
+        """``count=False`` is the introspection path (plan_for/rewritten/
+        explain): it may compile a transient entry, but never mutates the
+        LRU (no insertion, no eviction, no recency bump) or the health
+        counters — probing a novel shape must not evict a hot compiled
+        plan."""
+        pol = effective_policy()
         leaves, in_tree = jax.tree.flatten(args)
-        # direction-tagged: backward (cotangent) plans live in their own
-        # "bwd"-keyed caches (see _segment_bwd_runner) and can never
-        # collide with or evict a forward plan
-        key = ("fwd", in_tree, tuple(_leaf_signature(l) for l in leaves))
+        # policy- and direction-tagged: the same avals under a different
+        # policy are a different plan (miss, not a stale hit), and
+        # backward (cotangent) plans live in their own "bwd"-keyed caches
+        # (see _segment_bwd_runner) so they can never collide with or
+        # evict a forward plan
+        key = ("fwd", pol, in_tree,
+               tuple(_leaf_signature(l) for l in leaves))
         entry = cache.get(key)
         if entry is None:
             if not count:
-                return compile_for(args), leaves
+                return compile_for(pol, args), leaves
             stats.plan_misses += 1
-            entry = cache[key] = compile_for(args)
-            while len(cache) > max_plans:
+            entry = cache[key] = compile_for(pol, args)
+            while len(cache) > cache_bound:
                 cache.popitem(last=False)
                 stats.evictions += 1
         elif count:
@@ -1858,7 +2005,10 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
         return jax.tree.unflatten(entry.out_tree, flat)
 
     wrapped.stats = stats
+    wrapped.policy = policy
     wrapped.plan_for = lambda *args: entry_for(args, count=False)[0].plan
+    wrapped.explain = lambda *args: \
+        entry_for(args, count=False)[0].plan.report()
     wrapped.rewritten = lambda *args: \
         entry_for(args, count=False)[0].restage()
     wrapped.cache_clear = cache.clear
@@ -1866,16 +2016,32 @@ def mpu_offload(fn: Callable, *, bulk_threshold: int = 1024,
     return wrapped
 
 
-def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
-                   min_segment: int = 2,
+def offload_report(fn: Callable, *args,
+                   policy: OffloadPolicy | None = None,
+                   bulk_threshold: int | None = None,
+                   min_segment: int | None = None,
                    donate_argnums: int | Sequence[int] = ()) -> OffloadPlan:
+    """Trace + plan only (no rewrite, no execution): the OffloadPlan for
+    ``fn(*args)`` under ``policy`` — the paper's TSV-style traffic
+    accounting plus the per-candidate decision list."""
     closed = _flatten_calls(jax.make_jaxpr(fn)(*args))
     donate_leaves = _donate_leaf_indices(args, _normalize_donate(
         donate_argnums))
     donate_invars = frozenset(closed.jaxpr.invars[i] for i in donate_leaves)
-    return plan_offload(closed, bulk_threshold=bulk_threshold,
+    return plan_offload(closed, policy=policy,
+                        bulk_threshold=bulk_threshold,
                         min_segment=min_segment,
                         donate_invars=donate_invars)
+
+
+def offload_explain(fn: Callable, *args,
+                    policy: OffloadPolicy | None = None,
+                    donate_argnums: int | Sequence[int] = ()
+                    ) -> DecisionReport:
+    """The decision report for ``fn(*args)`` without wrapping: what
+    ``mpu_offload(fn, policy=...).explain(*args)`` would return."""
+    return offload_report(fn, *args, policy=policy,
+                          donate_argnums=donate_argnums).report()
 
 
 # ---------------------------------------------------------------------------
@@ -1890,12 +2056,17 @@ def offload_report(fn: Callable, *args, bulk_threshold: int = 1024,
 
 def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
                       consts: Sequence, args: Sequence, *,
-                      impl: str = "auto", bulk_threshold: int = 1024,
-                      min_segment: int = 2):
+                      policy: OffloadPolicy | None = None,
+                      impl: str | None = None,
+                      bulk_threshold: int | None = None,
+                      min_segment: int | None = None):
     """Interpret the (flattened) jaxpr, dispatching near segments to
-    fused kernels.  ``bulk_threshold``/``min_segment`` parameterize the
-    per-call planning of nested scan/call bodies (matching the top-level
-    plan)."""
+    fused kernels.  ``policy`` parameterizes the per-call planning of
+    nested scan/call bodies (matching the top-level plan)."""
+    policy = resolve_policy(policy, impl=impl,
+                            bulk_threshold=bulk_threshold,
+                            min_segment=min_segment)
+    impl = policy.impl
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
     seg_by_start = {s.span_start: s for s in plan.segments}
@@ -1931,20 +2102,15 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
         name = eqn.primitive.name
         if name == "scan":
             outs = _interpreted_scan(eqn, [read(v) for v in eqn.invars],
-                                     impl=impl,
-                                     bulk_threshold=bulk_threshold,
-                                     min_segment=min_segment)
+                                     policy=policy)
             for var, val in zip(eqn.outvars, outs):
                 env[var] = val
         elif name in _CALL_BODY_PARAM:
             inner = _flatten_calls(eqn.params[_CALL_BODY_PARAM[name]])
-            inner_plan = plan_offload(inner, bulk_threshold=bulk_threshold,
-                                      min_segment=min_segment)
+            inner_plan = plan_offload(inner, policy=policy)
             outs = execute_offloaded(inner, inner_plan, inner.consts,
                                      [read(v) for v in eqn.invars],
-                                     impl=impl,
-                                     bulk_threshold=bulk_threshold,
-                                     min_segment=min_segment)
+                                     policy=policy)
             for var, val in zip(eqn.outvars, outs):
                 env[var] = val
         else:
@@ -1953,8 +2119,7 @@ def execute_offloaded(closed: jcore.ClosedJaxpr, plan: OffloadPlan,
     return tuple(read(v) for v in jaxpr.outvars)
 
 
-def _interpreted_scan(eqn, invals: Sequence, *, impl: str,
-                      bulk_threshold: int, min_segment: int):
+def _interpreted_scan(eqn, invals: Sequence, *, policy: OffloadPolicy):
     """Per-call scan handling of the legacy interpreter: re-plans the body
     on every outer call (the cost the rewriter eliminates)."""
     params = eqn.params
@@ -1964,14 +2129,12 @@ def _interpreted_scan(eqn, invals: Sequence, *, impl: str,
     consts = list(invals[:n_consts])
     carry0 = tuple(invals[n_consts:n_consts + n_carry])
     xs = tuple(invals[n_consts + n_carry:])
-    inner_plan = plan_offload(inner, bulk_threshold=bulk_threshold,
-                              min_segment=min_segment)
+    inner_plan = plan_offload(inner, policy=policy)
 
     def body(carry, x):
         vals = [*consts, *carry, *x]
         outs = execute_offloaded(inner, inner_plan, inner.consts, vals,
-                                 impl=impl, bulk_threshold=bulk_threshold,
-                                 min_segment=min_segment)
+                                 policy=policy)
         return tuple(outs[:n_carry]), tuple(outs[n_carry:])
 
     carry, ys = jax.lax.scan(
@@ -1981,20 +2144,24 @@ def _interpreted_scan(eqn, invals: Sequence, *, impl: str,
     return (*carry, *ys)
 
 
-def mpu_offload_interpreted(fn: Callable, *, bulk_threshold: int = 1024,
-                            min_segment: int = 2,
-                            impl: str = "auto") -> Callable:
+def mpu_offload_interpreted(fn: Callable, *,
+                            policy: OffloadPolicy | None = None,
+                            bulk_threshold: int | None = None,
+                            min_segment: int | None = None,
+                            impl: str | None = None) -> Callable:
     """The pre-rewriter behaviour (trace + plan + interpret on EVERY
     call).  Benchmark baseline for ``benchmarks/offload_bench.py``."""
+    base = policy
+    overrides = dict(bulk_threshold=bulk_threshold,
+                     min_segment=min_segment, impl=impl)
 
     def wrapped(*args):
+        pol = resolve_policy(base, **overrides)
         closed = _flatten_calls(jax.make_jaxpr(fn)(*args))
-        plan = plan_offload(closed, bulk_threshold=bulk_threshold,
-                            min_segment=min_segment)
+        plan = plan_offload(closed, policy=pol)
         flat_args = jax.tree.leaves(args)  # invars are flattened leaves
         flat = execute_offloaded(closed, plan, closed.consts, flat_args,
-                                 impl=impl, bulk_threshold=bulk_threshold,
-                                 min_segment=min_segment)
+                                 policy=pol)
         out_tree = jax.tree.structure(jax.eval_shape(fn, *args))
         return jax.tree.unflatten(out_tree, flat)
 

@@ -37,7 +37,8 @@ K = OpKind
 @dataclass
 class SimConfig:
     machine: str = "mpu"            # mpu | ponb | gpu
-    policy: str = "annotated"       # annotated | hw_default | all_near | all_far
+    policy: str = "annotated"   # any repro.core.policy registry mode
+                                # (planner names map via simulator_mode)
     row_buffers: int = 4            # 1 | 2 | 4 (MASA)
     smem_near: bool = True          # near-bank vs far-bank shared memory
     warps: int = 16

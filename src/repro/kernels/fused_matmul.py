@@ -51,17 +51,23 @@ from repro.kernels.fused_elementwise import _largest_divisor_leq
 _ACC_VMEM_BYTES = 4 * 1024 * 1024
 
 
-def _block_budget(block: int, n_dim: int) -> int:
-    """Clamp a row/k block extent so block x n_dim f32 fits the budget."""
-    return max(min(block, _ACC_VMEM_BYTES // (4 * max(n_dim, 1))), 8)
+def _block_budget(block: int, n_dim: int,
+                  vmem_bytes: int | None = None) -> int:
+    """Clamp a row/k block extent so block x n_dim f32 fits the budget
+    (``vmem_bytes`` overrides the built-in budget — an
+    ``OffloadPolicy.vmem_budget``; planner and kernel pass the same
+    value so modeled and actual re-streaming agree)."""
+    budget = _ACC_VMEM_BYTES if vmem_bytes is None else vmem_bytes
+    return max(min(block, budget // (4 * max(n_dim, 1))), 8)
 
 
 def _row_block(rows: int, epi_specs: Sequence[tuple[str, int, int]],
-               rows_block: int, n_dim: int) -> int:
+               rows_block: int, n_dim: int,
+               vmem_bytes: int | None = None) -> int:
     """Row-block extent: the largest divisor of the rep/tile gcd (or of
     ``rows``) that fits the (VMEM-clamped) block budget — exact tiling,
     so donation aliases always hold."""
-    limit = max(min(_block_budget(rows_block, n_dim), rows), 1)
+    limit = max(min(_block_budget(rows_block, n_dim, vmem_bytes), rows), 1)
     g = 0   # rows_block must divide every rep repeat factor/tile period
     for role, op_rows, _ in epi_specs:
         if role == "rep":
@@ -72,12 +78,14 @@ def _row_block(rows: int, epi_specs: Sequence[tuple[str, int, int]],
 
 
 def matmul_row_blocks(rows: int, epi_specs: Sequence[tuple[str, int, int]],
-                      n_dim: int, rows_block: int = 512) -> int:
+                      n_dim: int, rows_block: int = 512,
+                      vmem_bytes: int | None = None) -> int:
     """Number of row blocks the anchored kernel launches.  The [K, N]
     rhs weight is re-streamed once per row block; the offload planner's
     traffic accounting uses this same computation so the modeled bytes
     match what the kernel actually reads."""
-    return rows // _row_block(rows, epi_specs, rows_block, n_dim)
+    return rows // _row_block(rows, epi_specs, rows_block, n_dim,
+                              vmem_bytes)
 
 
 def _mm_kernel(*refs, pro_fn: Callable, rhs_pro_fn: Callable, n_lhs: int,
@@ -123,6 +131,7 @@ def fused_matmul_segment(
     donate: Sequence[tuple[int, int]] = (),
     rows_block: int = 512,
     k_block: int = 512,
+    vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
     """One fused launch for an anchored segment.
@@ -139,9 +148,10 @@ def fused_matmul_segment(
     into ``epi_operands`` and become Pallas ``input_output_aliases``
     (offset past the lhs/rhs inputs).
     """
-    rb = _row_block(rows, epi_specs, rows_block, n_dim)
+    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes)
     rk = _largest_divisor_leq(
-        k_dim, max(min(_block_budget(k_block, n_dim), k_dim), 1))
+        k_dim, max(min(_block_budget(k_block, n_dim, vmem_bytes),
+                       k_dim), 1))
     grid = (rows // rb, k_dim // rk)
 
     ops2, in_specs = [], []

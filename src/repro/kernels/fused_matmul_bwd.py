@@ -96,6 +96,7 @@ def fused_matmul_dlhs_segment(
     donate: Sequence[tuple[int, int]] = (),
     rows_block: int = 512,
     k_block: int = 512,
+    vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
     """One fused launch for a dGRAD_LHS-anchored segment.
@@ -107,9 +108,10 @@ def fused_matmul_dlhs_segment(
     Everything else (prologue per lhs tile, epilogue on the accumulator,
     donation on dead epilogue operands) mirrors the forward kernel.
     """
-    rb = _row_block(rows, epi_specs, rows_block, n_dim)
+    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes)
     ck = _largest_divisor_leq(
-        k_dim, max(min(_block_budget(k_block, n_dim), k_dim), 1))
+        k_dim, max(min(_block_budget(k_block, n_dim, vmem_bytes),
+                       k_dim), 1))
     grid = (rows // rb, k_dim // ck)
 
     ops2, in_specs = [], []
@@ -179,23 +181,25 @@ def fused_matmul_dlhs_segment(
 # ---------------------------------------------------------------------------
 
 def drhs_blocks(rows: int, n_dim: int, rows_block: int = 512,
-                n_block: int = 512) -> tuple[int, int]:
+                n_block: int = 512,
+                vmem_bytes: int | None = None) -> tuple[int, int]:
     """(row_block, n_block) extents of the drhs kernel: the lane block is
     fixed first, then the row block shrinks so the f32 [Kb, Nb] scratch
     stays within the shared VMEM accumulator budget."""
     nb = _largest_divisor_leq(n_dim, max(min(n_block, n_dim), 1))
     pb = _largest_divisor_leq(
-        rows, max(min(_block_budget(rows_block, nb), rows), 1))
+        rows, max(min(_block_budget(rows_block, nb, vmem_bytes), rows), 1))
     return pb, nb
 
 
 def drhs_grid_blocks(rows: int, n_dim: int, rows_block: int = 512,
-                     n_block: int = 512) -> tuple[int, int]:
+                     n_block: int = 512,
+                     vmem_bytes: int | None = None) -> tuple[int, int]:
     """(row_blocks, n_blocks) of the drhs kernel grid.  The [M, K] lhs is
     re-streamed once per n block and the [M, N] rhs once per row block;
     the offload planner's ``Segment.io_bytes`` uses this same computation
     so the modeled bytes match what the kernel actually reads."""
-    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block)
+    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes)
     return rows // pb, n_dim // nb
 
 
@@ -239,6 +243,7 @@ def fused_matmul_drhs_segment(
     rows_block: int = 512,
     n_block: int = 512,
     m_block: int = 512,
+    vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
     """One fused launch for a dGRAD_RHS-anchored segment.
@@ -253,7 +258,7 @@ def fused_matmul_drhs_segment(
     drhs epilogues to pure elementwise eqns so no lane statistic is ever
     needed across an (i, j) tile boundary.
     """
-    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block)
+    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes)
     mb = _largest_divisor_leq(m_dim, max(min(m_block, m_dim), 1))
     grid = (rows // pb, n_dim // nb, m_dim // mb)
 

@@ -27,7 +27,17 @@ def main():
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--offload", action="store_true",
                     help="compile-time near-bank offload of the decode step")
+    ap.add_argument("--offload-mode", default=None,
+                    choices=["greedy", "cost", "all_near", "all_far"],
+                    help="offload decision backend (OffloadPolicy.mode); "
+                         "implies --offload")
+    ap.add_argument("--explain-offload", action="store_true",
+                    help="print the per-segment offload decision table "
+                         "for the decode step; implies --offload")
     args = ap.parse_args()
+    # asking for a mode or the decision table means offload is wanted
+    args.offload = args.offload or args.explain_offload \
+        or args.offload_mode is not None
 
     cfg = reduced(get_config(args.arch)) if args.local else get_config(
         args.arch)
@@ -35,8 +45,13 @@ def main():
     with mesh:
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        from repro.core.policy import OffloadPolicy
+
         engine = Engine(cfg, params, slots=4, max_len=128,
-                        offload=args.offload)
+                        offload=args.offload,
+                        offload_policy=OffloadPolicy(
+                            mode=args.offload_mode or "greedy")
+                        if args.offload else None)
         rng = np.random.default_rng(0)
         reqs = [Request(rng.integers(0, cfg.vocab_size, size=8),
                         max_new_tokens=8, rid=i)
@@ -48,6 +63,8 @@ def main():
             # misses == traces == 1 means: planned once, compiled once,
             # every decode step ran the staged executable
             print(f"offload compile stats: {engine.offload_stats}")
+            if args.explain_offload:
+                print(engine.explain_decode())
 
 
 if __name__ == "__main__":

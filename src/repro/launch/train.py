@@ -49,6 +49,11 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--offload", action="store_true",
                     help="compile-time near-bank offload of the train step")
+    ap.add_argument("--offload-mode", default="greedy",
+                    choices=["greedy", "cost", "all_near", "all_far"],
+                    help="offload decision backend (OffloadPolicy.mode): "
+                         "'cost' prices each candidate segment near-vs-"
+                         "far and declines unprofitable fusions")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,8 +69,12 @@ def main():
         shape_tuple = (2, 16, 16) if args.multi_pod else (16, 16)
         shape = next(s for s in shapes_for(cfg) if s.name == args.shape)
 
+    from repro.core.policy import OffloadPolicy
+
     tcfg = TrainConfig(total_steps=args.steps, checkpoint_every=50,
-                       checkpoint_dir=args.ckpt_dir, offload=args.offload)
+                       checkpoint_dir=args.ckpt_dir, offload=args.offload,
+                       offload_policy=OffloadPolicy(mode=args.offload_mode)
+                       if args.offload else None)
     model = build_model(cfg)
     train_step = make_train_step(model, tcfg)
 

@@ -40,8 +40,9 @@ class Completion:
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
                  max_len: int = 512, seed: int = 0, offload: bool = False,
-                 offload_bulk_threshold: int = 1024,
-                 offload_max_plans: int = 128):
+                 offload_policy: "OffloadPolicy | None" = None,
+                 offload_bulk_threshold: int | None = None,
+                 offload_max_plans: int | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -56,20 +57,32 @@ class Engine:
         self.rng = jax.random.PRNGKey(seed)
         self.temps = np.zeros((slots,), np.float32)
 
-        # the hot path: with offload=True the decode step goes through the
-        # compile-time near-bank rewriter; the plan is built once for the
-        # pool's decode signature and the result still jits + donates.
-        # Projection matmuls anchor fused segments (their bias/activation
-        # epilogues run on the accumulator) and rmsnorm/softmax row stats
-        # fuse as lane reductions, so decode value chains stay near-bank
-        # end to end.
+        # the hot path: with offload on, the decode step goes through
+        # the compile-time near-bank rewriter; the plan is built once
+        # for the pool's decode signature and the result still jits +
+        # donates.  ``offload_policy`` (an OffloadPolicy; implies
+        # offload) selects the decision backend and planner knobs —
+        # None leaves the wrapper unpinned, resolving the policy scope
+        # active when the decode signature first TRACES (the wrapper
+        # sits under jax.jit, so once a signature is compiled a later
+        # scoped override does not re-plan it).  Projection matmuls
+        # anchor fused segments (their bias/activation epilogues run on
+        # the accumulator) and rmsnorm/softmax row stats fuse as lane
+        # reductions, so decode value chains stay near-bank end to end.
+        offload = offload or offload_policy is not None
+        if offload_bulk_threshold is not None or \
+                offload_max_plans is not None:
+            from repro.core.policy import fold_legacy_kwargs
+            offload_policy = fold_legacy_kwargs(
+                offload_policy, where="Engine", target="offload_policy",
+                bulk_threshold=offload_bulk_threshold,
+                max_plans=offload_max_plans)
         decode_fn = self.model.decode_step
         if offload:
             from repro.core.offload import mpu_offload
-            decode_fn = mpu_offload(
-                decode_fn, bulk_threshold=offload_bulk_threshold,
-                max_plans=offload_max_plans)
+            decode_fn = mpu_offload(decode_fn, policy=offload_policy)
         self.offload = offload
+        self.offload_policy = offload_policy
         self._decode_offload = decode_fn if offload else None
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
         self._prefill1 = jax.jit(
@@ -85,12 +98,27 @@ class Engine:
         compiled executable without re-entering Python at all.  Growing
         ``traces``/``plan_misses`` would mean the decode signature is
         unstable and the step is being re-planned; growing ``evictions``
-        means the signature churn exceeds the ``offload_max_plans`` LRU
+        means the signature churn exceeds the policy's ``max_plans`` LRU
         bound and plans are being recompiled.  ``hit_rate`` summarizes
         cache health as one fraction (see ``OffloadStats.hit_rate``)."""
         if self._decode_offload is None:
             return None
         return self._decode_offload.stats.as_dict()
+
+    def explain_decode(self):
+        """Per-segment offload DecisionReport of the decode step for the
+        pool's current signature (None when offload is off): which
+        chains fused, which candidates the policy declined, and the
+        modeled near/far times behind each verdict.  Plans under the
+        policy effective NOW — if the engine is unpinned and a scoped
+        override was entered after the decode signature compiled, the
+        report describes what a fresh trace would do, not the cached
+        executable."""
+        if self._decode_offload is None:
+            return None
+        return self._decode_offload.explain(
+            self.params, self.cache,
+            jnp.asarray(self.last_token), jnp.asarray(self.pos))
 
     # -- slot management ----------------------------------------------------
     def _free_slot(self) -> int | None:

@@ -13,13 +13,17 @@ flows through the fused segments' custom VJPs — each segment's
 cotangent program is re-planned by the same rewriter, and the grad-time
 contractions (dx = g @ wT, dw = xT @ g) anchor their own backward
 kernels (repro.kernels.fused_matmul_bwd) instead of falling to the far
-path.  Forward projection matmuls anchor fused segments (epilogue on
-the accumulator, product never in HBM), lane-axis reductions
-(rmsnorm/softmax row stats) fuse into their chains, and the optimizer
-update (clip + AdamW elementwise math) is offloaded as its own
-rewritten program.  Forward and backward plans are cached under
-direction-tagged keys; wrapping in ``jax.jit`` on top composes (the
-loop does).
+path.  ``tcfg.offload_policy`` (an ``OffloadPolicy``) selects the
+decision backend — ``greedy`` fuses every admissible segment, ``cost``
+prices each candidate near-vs-far (§IV-B1) and declines unprofitable
+fusions — plus the planner thresholds; leaving it None resolves the
+active ``with offload_policy(...):`` scope at call time.  Forward
+projection matmuls anchor fused segments (epilogue on the accumulator,
+product never in HBM), lane-axis reductions (rmsnorm/softmax row stats)
+fuse into their chains, and the optimizer update (clip + AdamW
+elementwise math) is offloaded as its own rewritten program.  Forward
+and backward plans are cached under (policy, direction)-tagged keys;
+wrapping in ``jax.jit`` on top composes (the loop does).
 """
 from __future__ import annotations
 
@@ -50,8 +54,7 @@ def _maybe_offload(step_fn, tcfg: TrainConfig, offload: bool | None):
     if not use_offload:
         return step_fn
     from repro.core.offload import mpu_offload
-    return mpu_offload(step_fn, bulk_threshold=tcfg.offload_bulk_threshold,
-                       max_plans=tcfg.offload_max_plans)
+    return mpu_offload(step_fn, policy=tcfg.resolved_offload_policy())
 
 
 def init_train_state(model: Model, rng) -> TrainState:
@@ -79,9 +82,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, *,
 
     if use_offload:
         from repro.core.offload import mpu_offload
-        loss_fn = mpu_offload(loss_fn,
-                              bulk_threshold=tcfg.offload_bulk_threshold,
-                              max_plans=tcfg.offload_max_plans)
+        loss_fn = mpu_offload(loss_fn, policy=tcfg.resolved_offload_policy())
 
     def compute_grads(params, batch):
         if tcfg.microbatches <= 1:
@@ -119,8 +120,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, *,
     if use_offload:
         from repro.core.offload import mpu_offload
         update_fn = mpu_offload(update_fn,
-                                bulk_threshold=tcfg.offload_bulk_threshold,
-                                max_plans=tcfg.offload_max_plans)
+                                policy=tcfg.resolved_offload_policy())
 
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
         loss, metrics, grads = compute_grads(state.params, batch)
@@ -131,9 +131,12 @@ def make_train_step(model: Model, tcfg: TrainConfig, *,
 
     if use_offload:
         # observability parity with the old whole-step wrapper: the
-        # loss wrapper's counters (the dominant plan) plus the update's
+        # loss wrapper's counters (the dominant plan) plus the update's,
+        # and the per-segment decision reports for both programs
         train_step.stats = loss_fn.stats
         train_step.update_stats = update_fn.stats
+        train_step.explain_loss = loss_fn.explain
+        train_step.explain_update = update_fn.explain
     return train_step
 
 
