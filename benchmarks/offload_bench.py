@@ -36,6 +36,9 @@ The ``*_BWD`` / ``MLP_GRAD`` / ``TRAIN_STEP`` chains exercise the
 grad-time contraction kernels: the handwritten GEMM backward anchors
 both dGRAD forms, MLP_GRAD plans a real ``jax.grad`` trace, and
 TRAIN_STEP plans loss -> grads -> momentum update as one program.
+``ATTN_PREFILL`` commits the flash-shaped attention segment (QK^T ->
+scale -> softmax -> PV as ONE anchored launch, zero score-matrix
+bytes) and ``BATCHED_GEMM_BWD`` the batched N-D-grid backward anchors.
 
 4. **Decision accounting** (the §IV-B1 policy view): every run plans
    under an ``OffloadPolicy`` (``--policy {greedy,cost,all_near,
@@ -75,7 +78,7 @@ from repro.core.machine import V5E
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 # Committed fusion contract: chain -> (segments, traffic_reduction
 # floor, anchored-backward-segment floor).  A later segmenter change
@@ -98,6 +101,13 @@ MUST_FUSE = {
     "GEMM_BWD": (2, 2.3, 2),
     "MLP_GRAD": (4, 3.0, 1),
     "TRAIN_STEP": (5, 3.0, 1),
+    # the batched-anchor chains: ATTN_PREFILL must plan as ONE
+    # flash-shaped segment whose [S, T] score matrix never touches HBM
+    # (the >= 4x floor is the PR's acceptance criterion), and the
+    # batched GEMM backward must anchor both grad contractions with
+    # batch dims as outer grid axes
+    "ATTN_PREFILL": (1, 4.0, 0),
+    "BATCHED_GEMM_BWD": (2, 2.0, 2),
 }
 
 
@@ -204,6 +214,36 @@ def _cases():
         b1n = b1 - 1e-3 * gb
         return w1n, w2n, b1n, m1n, m2n
 
+    # --- batched-anchor chains (N-D grids, outer batch axes) ----------
+    qb = jax.random.normal(jax.random.fold_in(k, 11), (4, 8, 256, 64))
+    kb = jax.random.normal(jax.random.fold_in(k, 12), (4, 8, 256, 64))
+    vb = jax.random.normal(jax.random.fold_in(k, 13), (4, 8, 256, 64))
+
+    def attn_prefill(q, kk, vv):
+        # QK^T -> scale -> row-softmax -> PV recognized as ONE
+        # flash-shaped anchored segment: the [S, T] score matrix lives
+        # entirely in the accumulator and contributes zero HBM bytes
+        scale = jnp.sqrt(jnp.float32(q.shape[-1])).astype(q.dtype)
+        s = jnp.einsum("bhsd,bhtd->bhst", q, kk) / scale
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", p, vv)
+
+    xb = jax.random.normal(jax.random.fold_in(k, 14), (8, 256, 128))
+    wb = jax.random.normal(jax.random.fold_in(k, 15), (8, 128, 64)) * 0.1
+    gb2 = jax.random.normal(jax.random.fold_in(k, 16), (8, 256, 64))
+
+    def batched_gemm_bwd(g, x, w):
+        # handwritten backward of a BATCHED projection (the per-head
+        # attention-projection shape): both grad contractions keep the
+        # batch dim as the outer grid axis — dx anchors the batched
+        # dlhs kernel, dw the batched drhs kernel, and the update math
+        # rides each grad accumulator as an epilogue
+        dx = jax.lax.dot_general(g, w, (((2,), (2,)), ((0,), (0,))))
+        dx = jnp.tanh(dx) * 0.5 + x * 0.1
+        dw = jax.lax.dot_general(x, g, (((1,), (1,)), ((0,), (0,))))
+        dw = dw + 0.01 * w
+        return dx, dw
+
     # donate_argnums: the optimizer update overwrites the parameter
     # buffer in place (the classic near-bank in-place update)
     return [
@@ -220,6 +260,8 @@ def _cases():
         ("GEMM_BWD", gemm_bwd, (g, x, w), ()),
         ("MLP_GRAD", mlp_grad, (xg, w1g, b1g, w2g, yg), ()),
         ("TRAIN_STEP", train_step, (xg, w1g, b1g, w2g, m1g, m2g), ()),
+        ("ATTN_PREFILL", attn_prefill, (qb, kb, vb), ()),
+        ("BATCHED_GEMM_BWD", batched_gemm_bwd, (gb2, xb, wb), ()),
     ]
 
 

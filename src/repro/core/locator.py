@@ -69,6 +69,13 @@ LAYOUT_PRIMS = {
 #   drhs  xT[K,M] @ g[M,N]       — the grad-time dw: both operands
 #                                  contract ALL their leading (row) dims,
 #                                  per-bank f32 accumulation over M
+# Each form also admits matching leading batch dims on BOTH operands
+# (attention's [B,H,S,D] dots): batch dims become outer grid axes, each
+# grid step contracting its own batch slice, with k/n staying per-batch.
+# A batched dlhs whose softmaxed output feeds a second batched dot as
+# its streamed lhs upgrades to ONE flash-shaped segment (QK^T ->
+# scale/row-softmax -> PV, the score matrix never touching HBM); see
+# repro.core.offload._try_admit_flash.
 ANCHOR_PRIMS = {"dot_general"}
 
 # lane-axis reductions the planner may admit INTO a near segment: with

@@ -8,9 +8,12 @@ compiled program.  This module mirrors that architecture for JAX:
 
   flatten once  trivially-inlinable call eqns (``pjit``-wrapped
                 elementwise helpers like ``jax.nn.silu``, and
-                ``custom_jvp/vjp`` bodies, which have no generic bind
-                path) are spliced into the caller so near chains are not
-                cut at call boundaries
+                ``custom_jvp`` bodies, whose forward rule is what the
+                post-grad trace wants anyway) are spliced into the
+                caller so near chains are not cut at call boundaries.
+                ``custom_vjp`` eqns are NOT inlined: their backward
+                rules are numerically load-bearing, so they re-bind
+                unchanged (preserving the user's rule under grad)
   trace once    ``jax.make_jaxpr(fn)`` on the call's avals
   plan once     ``plan_offload`` segments the jaxpr into maximal
                 near-bank runs.  Segments are *cross-shape*: every
@@ -31,7 +34,18 @@ compiled program.  This module mirrors that architecture for JAX:
                 x[M,K] @ w[K,N] and the grad-time dx = g @ wT
                 (``dlhs``, weight read column-major) and dw = xT @ g
                 (``drhs``, M-innermost into a [Kb,Nb] accumulator) —
-                so backward passes fuse instead of falling far.
+                so backward passes fuse instead of falling far.  All
+                three forms also admit leading, aligned BATCH dims
+                ([B,H,S,D]-style contractions): the batch axes become
+                outer grid axes of the kernels and the rhs re-streams
+                per batch slice (``MatmulAnchor.batch``).  A SECOND
+                anchor may ride a batched ``dlhs`` anchor: when the
+                open run is exactly a scale/mask/row-softmax of the
+                scores and the next eqn is the batched PV dot, the
+                pair fuses as one flash-shaped segment
+                (``MatmulAnchor.flash``) dispatched to the
+                online-softmax flash kernel — the [S, T] score matrix
+                never exists in HBM.
                 Lane-axis reductions (locator.REDUCE_LANE_PRIMS) fuse
                 as (rows, 1) row statistics so softmax/rmsnorm chains
                 stay whole.
@@ -172,15 +186,29 @@ class OperandSpec:
                     times (suffix broadcast, e.g. [B,1,D] vs [B,S,D])
       * ``tile``  — [op_rows, cols]; rows cycle with period op_rows
                     (prefix broadcast, e.g. [1,S,D] vs [B,S,D])
+      * ``bcast`` — [op_rows, cols] with an INTERIOR broadcast
+                    (e.g. [B,1,S,1,D] vs [B,H,S,W,D]): no single
+                    rep/tile remap exists, so the kernel decomposes the
+                    row-block index over ``out_lead`` and strides only
+                    the non-broadcast dims of ``lead`` — each distinct
+                    operand row is still read once per visit
+
+    ``lead``/``out_lead`` are only populated for ``bcast``: the
+    operand's and the output's leading (row) dims.
     """
 
     var: Any
     role: str
     rows: int
     cols: int
+    lead: tuple = ()
+    out_lead: tuple = ()
 
     @property
-    def meta(self) -> tuple[str, int, int]:
+    def meta(self) -> tuple:
+        if self.role == "bcast":
+            return (self.role, self.rows, self.cols, self.lead,
+                    self.out_lead)
         return (self.role, self.rows, self.cols)
 
 
@@ -209,6 +237,23 @@ class MatmulAnchor:
                    (``bulk_m``), ``rhs`` the column-source; an adjacent
                    ``transpose`` of the product (jax's grad emission
                    order) is absorbed via ``extra_eqns``.
+
+    All three forms admit leading, aligned batch dims ([B,...] on both
+    operands): ``batch`` is their product (1 when unbatched),
+    ``batch_shape`` the dims themselves, ``k``/``n`` stay PER-BATCH
+    extents and ``Segment.rows`` folds the batch into the row axis.
+    The kernels turn the batch into outer grid positions via their
+    block index maps and the rhs re-streams per batch slice.
+
+    ``flash`` (a dict, set by the second-anchor admission) marks a
+    flash-shaped segment: this anchor's row-softmaxed scores feed a
+    second batched PV contraction, and the whole QK^T -> softmax -> PV
+    chain dispatches to the online-softmax flash kernel.  Keys:
+    ``eqn_idx`` (the PV dot), ``v_var``/``p_var``, ``softmax_eqns``
+    (the absorbed chain, replayed verbatim on the ref path), ``scale``,
+    ``scores_var``/``scores_shape``/``scores_dtype`` and ``t_dim`` (the
+    per-batch KV length).  For flash segments ``k`` is the head dim and
+    ``n`` the value lane width.
     """
 
     eqn_idx: int                  # the dot_general eqn
@@ -216,7 +261,7 @@ class MatmulAnchor:
     lhs_specs: list[OperandSpec]  # prologue inputs: roles bulk_k/param_k
     rhs: Any                      # the var feeding the dot's rhs
     pro_eqns: list[int]           # lhs prologue chain (inside the kernel)
-    k: int                        # contraction extent
+    k: int                        # contraction extent (per batch slice)
     n: int                        # lane width of the segment product
     out_var: Any                  # the product var (kernel accumulator)
     out_dtype: Any
@@ -224,6 +269,9 @@ class MatmulAnchor:
     rhs_specs: list[OperandSpec] = field(default_factory=list)
     rhs_pro_eqns: list[int] = field(default_factory=list)
     extra_eqns: list[int] = field(default_factory=list)
+    batch: int = 1                # product of the leading batch dims
+    batch_shape: tuple = ()       # the leading batch dims themselves
+    flash: Any = None             # flash-shaped second-anchor record
 
 
 @dataclass
@@ -281,10 +329,12 @@ class Segment:
     def io_bytes(self) -> int:
         """Fused HBM bytes this segment moves: one read per operand —
         with the contraction re-streaming accounted per form (fwd/dlhs:
-        the weight once per row block; drhs: the activation once per
-        lane block and the cotangent once per row block, matching the
-        (k_rows, n_blocks, m_blocks) grid) — and one write per output.
-        The single source of truth for both the plan's traffic
+        the weight once per PER-BATCH row block; drhs: the activation
+        once per lane block and the cotangent once per row block,
+        matching the (k_rows, n_blocks, m_blocks) grid; flash: k and v
+        once per q block while the [S, T] score matrix contributes ZERO
+        bytes — it lives and dies in VMEM scratch) — and one write per
+        output.  The single source of truth for both the plan's traffic
         accounting and the roofline model."""
         from repro.kernels.fused_matmul import matmul_row_blocks
         from repro.kernels.fused_matmul_bwd import drhs_grid_blocks
@@ -298,15 +348,20 @@ class Segment:
                            if sp.role != "param_w")
             rhs_par = sum(_dtype_size(sp.var.aval) for sp in mm.rhs_specs
                           if sp.role == "param_w")
-            if mm.form == "drhs":
+            if mm.flash is not None:
+                q_pb = max(self.rows // mm.batch, 1)
+                q_blocks = -(-q_pb // min(256, q_pb))   # flash q_block
+                total += lhs_b + rhs_par + rhs_bulk * q_blocks
+            elif mm.form == "drhs":
                 row_blocks, n_blocks = drhs_grid_blocks(
-                    self.rows, mm.n, vmem_bytes=self.vmem_bytes)
+                    self.rows, mm.n, batch=mm.batch,
+                    vmem_bytes=self.vmem_bytes)
                 total += lhs_b * n_blocks + rhs_bulk * row_blocks + rhs_par
             else:
                 total += lhs_b + rhs_par
                 total += rhs_bulk * matmul_row_blocks(
                     self.rows, [sp.meta for sp in self.operand_specs],
-                    mm.n, vmem_bytes=self.vmem_bytes)
+                    mm.n, batch=mm.batch, vmem_bytes=self.vmem_bytes)
         return total
 
 
@@ -437,11 +492,16 @@ def _far_decision_bytes(eqns: Sequence, idxs: Sequence[int]) -> int:
 # so near chains are not cut at pjit boundaries (jax.nn.silu & friends).
 # ---------------------------------------------------------------------------
 
+# NOTE: no custom_vjp entry.  Inlining a ``custom_vjp`` body would
+# silently discard the user's backward rule (the inlined forward would
+# differentiate by autodiff instead); those eqns re-bind unchanged so
+# the rule rides through the rewrite intact.  (On current jax the
+# traced primitive is ``custom_vjp_call_jaxpr``; ``primitive.bind`` with
+# the eqn's own params preserves the rule.)
 _CALL_BODY_PARAM = {
     "pjit": "jaxpr",
     "closed_call": "call_jaxpr",
     "custom_jvp_call": "call_jaxpr",
-    "custom_vjp_call": "call_jaxpr",
 }
 
 
@@ -452,20 +512,22 @@ def _unspecified(s) -> bool:
 def _inline_body(eqn) -> Any | None:
     """The ClosedJaxpr to splice in place of ``eqn``, or None.
 
-    ``custom_jvp_call``/``custom_vjp_call``/``closed_call`` have no
-    generic re-bind path under trace, so their bodies are always inlined
-    (the offload trace is post-grad; PR 1's runner made the same call).
-    A ``pjit`` is inlined only when it carries no shardings or donation
-    AND its body is purely elementwise/layout eqns — anything else keeps
-    its call boundary (pjit fidelity is preserved separately by the
-    runner's re-emitted ``jax.jit``)."""
+    ``custom_jvp_call``/``closed_call`` bodies are always inlined: the
+    offload trace is post-grad, so the jvp body's forward rule is
+    exactly what the trace wants.  ``custom_vjp`` eqns are NEVER inlined
+    — their backward rules are numerically load-bearing and inlining
+    would drop them — they re-bind unchanged instead.  A ``pjit`` is
+    inlined only when it carries no shardings or donation AND its body
+    is purely elementwise/layout eqns — anything else keeps its call
+    boundary (pjit fidelity is preserved separately by the runner's
+    re-emitted ``jax.jit``)."""
     name = eqn.primitive.name
     if name not in _CALL_BODY_PARAM:
         return None
     body = eqn.params.get(_CALL_BODY_PARAM[name])
     if body is None:
         return None
-    if name in ("custom_jvp_call", "custom_vjp_call", "closed_call"):
+    if name in ("custom_jvp_call", "closed_call"):
         return body
     if name == "pjit":
         if any(not _unspecified(s) for s in eqn.params.get("in_shardings", ())):
@@ -526,9 +588,11 @@ def _flatten_calls(closed: jcore.ClosedJaxpr) -> jcore.ClosedJaxpr:
 # ---------------------------------------------------------------------------
 
 def _classify_operand(shape: tuple[int, ...], out_shape: tuple[int, ...],
-                      rows: int) -> tuple[str, int, int] | None:
+                      rows: int) -> tuple | None:
     """Block view of an elementwise operand vs its eqn's output, or None
-    if the broadcast pattern is not expressible as a 2-D index map."""
+    if the broadcast pattern is not expressible as a 2-D index map.
+    Returns a ``(role, rows, cols)`` triple, or a 5-tuple
+    ``("bcast", rows, cols, lead, out_lead)`` for interior broadcasts."""
     if shape == out_shape:
         r, c = _bulk_view(shape)
         return ("bulk", r, c)
@@ -555,7 +619,11 @@ def _classify_operand(shape: tuple[int, ...], out_shape: tuple[int, ...],
             j += 1
         if lead[j:] == out_shape[j:n - 1]:   # [1, S, D]-style prefix bcast
             return ("tile", r_op, cols)
-        return None
+        # interior broadcast ([B,1,S,1,D] vs [B,H,S,W,D]): no single
+        # rep/tile remap, but every dim is 1-or-matching, so the kernel
+        # can decompose the row-block index over the output's leading
+        # dims and stride only the non-broadcast ones
+        return ("bcast", r_op, cols, lead, tuple(out_shape[:-1]))
     if _is_param_shape(shape):
         return ("param", 1, _lane(shape))
     return None
@@ -597,6 +665,46 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
     constvar_set = set(jaxpr.constvars)
     invar_set = set(jaxpr.invars)
 
+    # plan-time scalar resolution: attention's sqrt(head_dim) scale is
+    # traced as a scalar eqn chain over consts/literals; the flash
+    # matcher folds it into the kernel's static scale
+    producer_idx: dict[Any, int] = {}
+    for i, eqn in enumerate(eqns):
+        for v in eqn.outvars:
+            producer_idx[v] = i
+    scalar_consts: dict[Any, Any] = {
+        v: c for v, c in zip(jaxpr.constvars, closed.consts)
+        if getattr(v.aval, "size", 0) == 1}
+    scalar_cache: dict[Any, Any] = {}
+
+    def resolve_scalar(v):
+        """Concrete value of a scalar var derived only from literals and
+        consts (None otherwise), evaluated once at plan time."""
+        if getattr(v.aval, "size", 0) != 1:
+            return None
+        if v in scalar_cache:
+            return scalar_cache[v]
+        scalar_cache[v] = None           # cycle guard
+        val = scalar_consts.get(v)
+        if val is None and v in producer_idx:
+            e = eqns[producer_idx[v]]
+            if len(e.outvars) == 1:
+                ins = []
+                for u in e.invars:
+                    r = u.val if isinstance(u, jcore.Literal) \
+                        else resolve_scalar(u)
+                    if r is None:
+                        ins = None
+                        break
+                    ins.append(r)
+                if ins is not None:
+                    try:
+                        val = e.primitive.bind(*ins, **e.params)
+                    except Exception:
+                        val = None
+        scalar_cache[v] = val
+        return val
+
     segments: list[Segment] = []
     decisions: list[SegmentDecision] = []
     # mutable run state
@@ -609,13 +717,16 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
     param_out_set: set[int] = set()
     reduced_vars: set[Any] = set()   # rank-reduced row stats: view (rows, 1)
     mm: dict[str, Any] | None = None  # open matmul-anchor state
+    hoisted: list[int] = []   # independent scalar eqns passed over the
+    #                           segment; they run unfused ahead of it
 
     def reset():
         nonlocal current, cur_rows, n_compute, anchor, specs, produced, \
-            param_out_set, reduced_vars, mm
+            param_out_set, reduced_vars, mm, hoisted
         current, cur_rows, n_compute, anchor = [], None, 0, None
         specs, produced, param_out_set = {}, {}, set()
         reduced_vars, mm = set(), None
+        hoisted = []
 
     def _merge_spec(new_specs, v, cls) -> bool:
         old = specs.get(v) or new_specs.get(v)
@@ -884,7 +995,18 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                     if produced[v][0] != "bulk":
                         return False
                 elif not external_bulk(v):
-                    return False
+                    # not a same-rows bulk view: classify the padded
+                    # shape the way elementwise operands are — this is
+                    # where rep/tile and interior-broadcast ("bcast")
+                    # operands enter a segment, since jnp broadcasting
+                    # always routes them through an explicit
+                    # broadcast_in_dim eqn
+                    vshape = (1,) * (len(oshape) - len(ishape)) + ishape
+                    cls = _classify_operand(vshape, oshape, rows)
+                    if cls is None or cls[0] == "param":
+                        return False
+                    if not _merge_spec(new_specs, v, cls):
+                        return False
         elif name in ("reshape", "squeeze"):
             if name == "reshape" and eqn.params.get("dimensions"):
                 return False
@@ -968,13 +1090,13 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                 cls = specs.get(v)
                 if cls is None:
                     return None
-                role, r, c = cls
+                role, r, c = cls[0], cls[1], cls[2]
                 if role == "bulk" and (r, c) == (m_rows, k_dim):
                     lhs_specs.append(OperandSpec(v, "bulk_k", m_rows, k_dim))
                 elif role == "param" and c in (1, k_dim):
                     lhs_specs.append(OperandSpec(v, "param_k", 1, c))
                 else:
-                    return None          # rep/tile prologues stay split
+                    return None     # rep/tile/bcast prologues stay split
         return list(current), lhs_specs
 
     def _rhs_prologue_convertible(anchor_i, rhs_v, k_dim, n_cols):
@@ -1035,7 +1157,7 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                 cls = specs.get(v)
                 if cls is None:
                     return None
-                role, r, c = cls
+                role, r, c = cls[0], cls[1], cls[2]
                 if role == "bulk" and (r, c) == (k_dim, n_cols):
                     rhs_specs.append(
                         OperandSpec(v, "bulk_w", k_dim, n_cols))
@@ -1045,14 +1167,17 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                     return None
         return list(current), rhs_specs
 
-    def _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape):
-        """dw = xT @ g: both operands contract all their leading (row)
-        dims, M runs innermost in the kernel into a [Kb, Nb] f32
-        scratch.  jax's transpose rule emits this as
-        ``dot_general(g, x, contract-rows)`` followed by a rank-2
-        ``transpose`` — when that transpose is the product's only
-        consumer and directly adjacent, it is absorbed (the kernel
-        writes the [K, N] layout directly, no transposed copy)."""
+    def _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape, nb, batch,
+                    batch_shape):
+        """dw = xT @ g: both operands contract all their (per-batch)
+        leading (row) dims, M runs innermost in the kernel into a
+        [Kb, Nb] f32 scratch.  jax's transpose rule emits this as
+        ``dot_general(g, x, contract-rows)`` followed by a transpose of
+        the two trailing dims — when that transpose is the product's
+        only consumer and directly adjacent, it is absorbed (the kernel
+        writes the [.., K, N] layout directly, no transposed copy).
+        With ``nb`` batch dims the grid gains a per-batch row axis and
+        the contraction extent ``k`` stays the PER-BATCH m extent."""
         nonlocal mm, cur_rows, n_compute, anchor, current, specs, produced
         if current or lhs_v in produced or rhs_v in produced:
             return False     # a shared cotangent chain escapes: split
@@ -1060,32 +1185,225 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
             return False
         out = eqn.outvars[0]
         m_ext = 1
-        for d in lshape[:-1]:
+        for d in lshape[nb:-1]:
             m_ext *= d
         prod_var = out
         row_src, col_src = lhs_v, rhs_v
         extra: list[int] = []
         cons = consumers.get(out, [])
+        want_perm = tuple(range(nb)) + (nb + 1, nb)
         if out not in outvar_set and cons == [i + 1]:
             nxt = eqns[cons[0]]
             if nxt.primitive.name == "transpose" and \
-                    tuple(nxt.params["permutation"]) == (1, 0):
+                    tuple(nxt.params["permutation"]) == want_perm:
                 prod_var = nxt.outvars[0]
                 row_src, col_src = rhs_v, lhs_v
                 extra = [cons[0]]
         p_rows = tuple(row_src.aval.shape)[-1]
         n_cols = tuple(col_src.aval.shape)[-1]
         mm = dict(form="drhs", eqn_idx=i, lhs_var=row_src,
-                  lhs_specs=[OperandSpec(row_src, "bulk_m", m_ext, p_rows)],
+                  lhs_specs=[OperandSpec(row_src, "bulk_m",
+                                         batch * m_ext, p_rows)],
                   rhs=col_src,
-                  rhs_specs=[OperandSpec(col_src, "bulk_w", m_ext, n_cols)],
+                  rhs_specs=[OperandSpec(col_src, "bulk_w",
+                                         batch * m_ext, n_cols)],
                   pro_eqns=[], rhs_pro_eqns=[], extra_eqns=extra,
                   k=m_ext, n=n_cols, out_var=prod_var,
-                  out_dtype=prod_var.aval.dtype, span_start=i)
+                  out_dtype=prod_var.aval.dtype, span_start=i,
+                  batch=batch, batch_shape=batch_shape, flash=None)
         current, specs = [], {}
         produced = {prod_var: ("bulk", n_cols)}
-        cur_rows, n_compute = p_rows, 0
+        cur_rows, n_compute = batch * p_rows, 0
         anchor = tuple(prod_var.aval.shape)
+        return True
+
+    def _try_admit_flash(i, eqn) -> bool:
+        """Second-anchor admission: ride a batched ``dlhs`` anchor whose
+        open epilogue run is EXACTLY a scale/mask/row-softmax of the
+        scores when the incoming eqn is the batched PV dot.  The pair
+        fuses as one flash-shaped segment: anchor 1's row-softmaxed
+        accumulator becomes anchor 2's streamed lhs, dispatched to the
+        online-softmax flash kernel — the [S, T] score matrix never
+        exists in HBM.  Anything that fails the pattern falls back to
+        ordinary flush-then-readmit (still correct, just two
+        segments)."""
+        nonlocal mm, cur_rows, n_compute, anchor, current, specs, \
+            produced
+        nb = len(mm.get("batch_shape", ()))
+        if (mm["form"] != "dlhs" or mm.get("flash") is not None
+                or mm["pro_eqns"] or mm["rhs_pro_eqns"] or param_out_set
+                or nb == 0):
+            return False
+        # external operands admitted so far must all be resolvable
+        # scalar consts (the sqrt(head_dim) scale) — anything else means
+        # the epilogue is not a pure scale/softmax of the scores
+        if any(resolve_scalar(v) is None for v in specs):
+            return False
+        if eqn.primitive.name != "dot_general":
+            return False
+        (lc, rc), (lbatch, rbatch) = eqn.params["dimension_numbers"]
+        if tuple(lbatch) != tuple(range(nb)) or \
+                tuple(rbatch) != tuple(range(nb)):
+            return False
+        if tuple(lc) != (nb + 1,) or tuple(rc) != (nb,):
+            return False                 # p[..,S,T] @ v[..,T,Dv]
+        lhs_v, rhs_v = eqn.invars
+        if isinstance(lhs_v, jcore.Literal) or \
+                isinstance(rhs_v, jcore.Literal):
+            return False
+        if lhs_v not in produced or rhs_v in produced:
+            return False
+        lshape = tuple(lhs_v.aval.shape)
+        rshape = tuple(rhs_v.aval.shape)
+        out = eqn.outvars[0]
+        t_dim = mm["n"]
+        if lshape[:nb] != mm["batch_shape"] or \
+                rshape[:nb] != mm["batch_shape"]:
+            return False
+        if _bulk_view(lshape) != (cur_rows, t_dim):
+            return False
+        if len(rshape) != nb + 2 or rshape[nb] != t_dim:
+            return False
+        n2 = rshape[-1]
+        # the flash kernel's accumulator/PV tile assumes the value lane
+        # width equals the q head dim; other widths fall back to two
+        # ordinary anchored segments
+        if n2 != mm["k"]:
+            return False
+        if not jnp.issubdtype(out.aval.dtype, jnp.floating) or any(
+                jnp.dtype(v.aval.dtype).itemsize > 4 for v in (rhs_v, out)):
+            return False
+
+        # --- match the open run as scale -> row-softmax of the scores
+        chain = list(current)
+        pos = 0
+        x = mm["out_var"]
+        scale = 1.0
+
+        def _lit_scalar(v):
+            if isinstance(v, jcore.Literal) and \
+                    getattr(v.aval, "size", 0) == 1:
+                return float(jnp.asarray(v.val).reshape(()))
+            return None
+
+        ext_env: dict[Any, Any] = {}     # resolved scale consts, bound
+        #                                  into the softmax replay
+
+        def _scale_val(v):
+            if isinstance(v, jcore.Literal):
+                return _lit_scalar(v)
+            c = resolve_scalar(v)
+            if c is None:
+                return None
+            ext_env[v] = c
+            return float(jnp.asarray(c).reshape(()))
+
+        while pos < len(chain):          # leading scalar scale eqns
+            e = eqns[chain[pos]]
+            nm = e.primitive.name
+            if nm not in ("mul", "div") or len(e.invars) != 2:
+                break
+            a, b = e.invars
+            if nm == "mul" and a is x:
+                s = _scale_val(b)
+            elif nm == "mul" and b is x:
+                s = _scale_val(a)
+            elif nm == "div" and a is x:
+                s = _scale_val(b)
+                s = None if s == 0.0 else s
+            else:
+                break
+            if s is None:
+                break
+            scale = scale / s if nm == "div" else scale * s
+            x = e.outvars[0]
+            pos += 1
+        if pos >= len(chain) or \
+                eqns[chain[pos]].primitive.name != "reduce_max" or \
+                eqns[chain[pos]].invars[0] is not x:
+            return False
+        stat = eqns[chain[pos]].outvars[0]
+        pos += 1
+        massage = ("max", "stop_gradient", "broadcast_in_dim", "reshape",
+                   "convert_element_type")
+        while pos < len(chain):          # keepdims/guard massage of stat
+            e = eqns[chain[pos]]
+            nm = e.primitive.name
+            nonlit = [v for v in e.invars
+                      if not isinstance(v, jcore.Literal)]
+            if nm not in massage or nonlit != [stat]:
+                break
+            if nm == "max":
+                other = [v for v in e.invars if v is not stat]
+                if len(other) != 1 or _lit_scalar(other[0]) is None or \
+                        _lit_scalar(other[0]) > -1e9:
+                    return False         # a real mask: not plain softmax
+            stat = e.outvars[0]
+            pos += 1
+        if pos >= len(chain):
+            return False
+        e = eqns[chain[pos]]
+        if e.primitive.name != "sub" or e.invars[0] is not x or \
+                e.invars[1] is not stat:
+            return False
+        xs = e.outvars[0]
+        pos += 1
+        if pos >= len(chain) or eqns[chain[pos]].primitive.name != "exp" \
+                or eqns[chain[pos]].invars[0] is not xs:
+            return False
+        ex = eqns[chain[pos]].outvars[0]
+        pos += 1
+        if pos >= len(chain) or \
+                eqns[chain[pos]].primitive.name != "reduce_sum" or \
+                eqns[chain[pos]].invars[0] is not ex:
+            return False
+        den = eqns[chain[pos]].outvars[0]
+        pos += 1
+        while pos < len(chain):          # keepdims massage of the denom
+            e = eqns[chain[pos]]
+            nonlit = [v for v in e.invars
+                      if not isinstance(v, jcore.Literal)]
+            if e.primitive.name not in ("broadcast_in_dim", "reshape",
+                                        "convert_element_type") or \
+                    nonlit != [den]:
+                break
+            den = e.outvars[0]
+            pos += 1
+        if pos >= len(chain):
+            return False
+        e = eqns[chain[pos]]
+        if e.primitive.name != "div" or e.invars[0] is not ex or \
+                e.invars[1] is not den or e.outvars[0] is not lhs_v:
+            return False
+        pos += 1
+        if pos != len(chain):
+            return False                 # extra eqns: not a pure softmax
+
+        # no chain value (scores included) may escape the fused pair
+        chain_set = set(chain)
+        for v in [mm["out_var"]] + [eqns[j].outvars[0] for j in chain]:
+            if v in outvar_set or any(
+                    c not in chain_set and c != i
+                    for c in consumers.get(v, [])):
+                return False
+
+        scores = mm["out_var"]
+        mm["flash"] = dict(
+            eqn_idx=i, v_var=rhs_v, p_var=lhs_v,
+            softmax_eqns=tuple(chain), scale=scale, scores_var=scores,
+            scores_shape=tuple(scores.aval.shape),
+            scores_dtype=scores.aval.dtype, t_dim=t_dim,
+            const_env=ext_env)
+        mm["extra_eqns"] = list(mm["extra_eqns"]) + chain + [i]
+        mm["rhs_specs"] = list(mm["rhs_specs"]) + [
+            OperandSpec(rhs_v, "bulk_v", mm["batch"] * t_dim, n2)]
+        mm["n"] = n2
+        mm["out_var"] = out
+        mm["out_dtype"] = out.aval.dtype
+        current, specs = [], {}
+        produced = {out: ("bulk", n2)}
+        reduced_vars.clear()
+        anchor = tuple(out.aval.shape)
         return True
 
     def try_admit_anchor(i, eqn) -> bool:
@@ -1095,19 +1413,32 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
         eqns fuse as its epilogue, so the product never round-trips HBM.
         Three forms qualify — the forward x[M,K] @ w[K,N] and the two
         grad-time layouts dx = g @ wT (``dlhs``) and dw = xT @ g
-        (``drhs``); see locator.ANCHOR_PRIMS."""
+        (``drhs``); see locator.ANCHOR_PRIMS.  All three also admit
+        leading, aligned batch dims ([B,H,S,D]-style contractions): the
+        batch axes become outer grid axes and the rhs re-streams per
+        batch slice.  A second dot arriving on an open batched dlhs
+        anchor may fuse the pair flash-shaped (``_try_admit_flash``)."""
         nonlocal mm, cur_rows, n_compute, anchor, current, specs, \
             produced, param_out_set
         if mm is not None:
-            return False                 # one anchor per segment
+            return _try_admit_flash(i, eqn)   # one anchor per segment,
+            #                                   except the flash pair
         (lc, rc), (lbatch, rbatch) = eqn.params["dimension_numbers"]
         lhs_v, rhs_v = eqn.invars
         if isinstance(lhs_v, jcore.Literal) or isinstance(rhs_v, jcore.Literal):
             return False
-        if tuple(lbatch) or tuple(rbatch):
-            return False                 # batched contractions stay far
         lshape = tuple(lhs_v.aval.shape)
         rshape = tuple(rhs_v.aval.shape)
+        nb = len(lbatch)
+        if tuple(lbatch) != tuple(range(nb)) or \
+                tuple(rbatch) != tuple(range(nb)):
+            return False                 # only leading, aligned batches
+        if lshape[:nb] != rshape[:nb]:
+            return False
+        batch_shape = lshape[:nb]
+        batch = 1
+        for d in batch_shape:
+            batch *= d
         out = eqn.outvars[0]
         oshape = tuple(out.aval.shape)
         if not jnp.issubdtype(out.aval.dtype, jnp.floating):
@@ -1120,36 +1451,39 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
         if out.aval.size < bulk_threshold:
             return False
         form = None
-        if len(rshape) == 2 and len(lshape) >= 2 \
+        if len(rshape) == nb + 2 and len(lshape) >= nb + 2 \
                 and tuple(lc) == (len(lshape) - 1,):
-            if tuple(rc) == (0,):
-                form = "fwd"             # x[M,K] @ w[K,N]
-            elif tuple(rc) == (1,):
-                form = "dlhs"            # g[M,N] @ w[K,N]^T
-        if form is None and len(lshape) == len(rshape) >= 2 \
-                and tuple(lc) == tuple(range(len(lshape) - 1)) \
-                and tuple(rc) == tuple(range(len(rshape) - 1)):
-            form = "drhs"                # xT[K,M] @ g[M,N]
+            if tuple(rc) == (nb,):
+                form = "fwd"             # x[..,M,K] @ w[..,K,N]
+            elif tuple(rc) == (nb + 1,):
+                form = "dlhs"            # g[..,M,N] @ w[..,K,N]^T
+        if form is None and len(lshape) == len(rshape) >= nb + 2 \
+                and tuple(lc) == tuple(range(nb, len(lshape) - 1)) \
+                and tuple(rc) == tuple(range(nb, len(rshape) - 1)):
+            form = "drhs"                # xT[..,K,M] @ g[..,M,N]
         if form is None:
             return False
         if form == "drhs":
-            return _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape)
+            return _admit_drhs(i, eqn, lhs_v, rhs_v, lshape, rshape,
+                               nb, batch, batch_shape)
 
         m_rows, n_cols = _bulk_view(oshape)
         k_dim = lshape[-1]
         if _bulk_view(lshape) != (m_rows, k_dim):
             return False
-        want_rshape = (k_dim, n_cols) if form == "fwd" else (n_cols, k_dim)
+        want_rshape = batch_shape + (
+            (k_dim, n_cols) if form == "fwd" else (n_cols, k_dim))
         if rshape != want_rshape:
             return False
         rhs_pro_eqns: list[int] = []
-        rhs_specs = [OperandSpec(rhs_v, "bulk_w", *rshape)]
+        rhs_specs = [OperandSpec(rhs_v, "bulk_w", *_bulk_view(rshape))]
         if rhs_v in produced:
-            # weight-side prologue (fwd only): the open run must be a
-            # dequant-cast chain producing the rhs; the dlhs kernel
-            # reads its weight column-major, where a per-block prologue
-            # would re-apply per (i, k) step in a different layout
-            if form != "fwd" or lhs_v in produced:
+            # weight-side prologue (unbatched fwd only): the open run
+            # must be a dequant-cast chain producing the rhs; the dlhs
+            # kernel reads its weight column-major, where a per-block
+            # prologue would re-apply per (i, k) step in a different
+            # layout
+            if form != "fwd" or nb > 0 or lhs_v in produced:
                 return False
             conv = _rhs_prologue_convertible(i, rhs_v, k_dim, n_cols)
             if conv is None:
@@ -1175,7 +1509,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                   rhs=rhs_v, rhs_specs=rhs_specs,
                   rhs_pro_eqns=rhs_pro_eqns, extra_eqns=[],
                   pro_eqns=pro_eqns, k=k_dim, n=n_cols,
-                  out_var=out, out_dtype=out.aval.dtype, span_start=span0)
+                  out_var=out, out_dtype=out.aval.dtype, span_start=span0,
+                  batch=batch, batch_shape=batch_shape, flash=None)
         # fresh elementwise state for the epilogue; the product is the
         # segment's root value
         current, specs = [], {}
@@ -1186,6 +1521,8 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
     def try_admit(i, eqn) -> bool:
         if mm is not None and i in mm["extra_eqns"]:
             return True      # already absorbed at anchor admission
+        if mm is not None and mm.get("flash") is not None:
+            return False     # the PV dot closes a flash-shaped segment
         tier = eqn_tier(eqn.primitive.name)
         if tier == "near":
             return try_admit_elementwise(i, eqn)
@@ -1196,6 +1533,25 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
         if tier == "anchor":
             return try_admit_anchor(i, eqn)
         return False
+
+    def hoistable(i, eqn) -> bool:
+        """A small eqn the open segment can pass over without flushing:
+        it consumes nothing the segment produces (so it can run unfused
+        just ahead of the kernel via ``pre_eqns``) and its output is
+        param-shaped.  The canonical case is attention's
+        ``sqrt(head_dim)`` scale constant traced as a scalar eqn chain
+        between the QK^T anchor and its epilogue — without hoisting,
+        that chain would flush the anchor bare."""
+        if mm is None and not current:
+            return False                 # no open segment to protect
+        if len(eqn.outvars) != 1:
+            return False
+        if eqn.outvars[0].aval.size >= bulk_threshold:
+            return False
+        if eqn_tier(eqn.primitive.name) not in ("near", "layout"):
+            return False
+        return not any(v in produced for v in eqn.invars
+                       if not isinstance(v, jcore.Literal))
 
     def flush():
         if mm is None and n_compute < 1:
@@ -1212,14 +1568,18 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
         # eject param-out layout eqns whose output escapes the segment:
         # they run unfused just ahead of the kernel (their operands are
         # external by construction), and their output becomes a plain
-        # segment input where consumed inside.
-        pre: list[int] = []
+        # segment input where consumed inside.  Hoisted scalar eqns
+        # (passed over the segment without flushing) join them — the
+        # runner jumps the whole span, so anything inside it that is not
+        # absorbed by the kernel must run in ``pre_eqns``.
+        pre: list[int] = [i for i in hoisted if i < span_end]
         for i in sorted(param_out_set):
             ov = eqns[i].outvars[0]
             if ov in outvar_set or any(ci not in seg_set
                                        for ci in consumers.get(ov, [])):
                 seg_set.discard(i)
                 pre.append(i)
+        pre.sort()
         seg_idx = [i for i in seg_idx if i in seg_set]
 
         produced_f: dict[Any, tuple[str, int]] = {}
@@ -1302,7 +1662,10 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
                 out_var=mm["out_var"], out_dtype=mm["out_dtype"],
                 form=mm["form"], rhs_specs=mm["rhs_specs"],
                 rhs_pro_eqns=mm["rhs_pro_eqns"],
-                extra_eqns=mm["extra_eqns"])
+                extra_eqns=mm["extra_eqns"],
+                batch=mm.get("batch", 1),
+                batch_shape=tuple(mm.get("batch_shape", ())),
+                flash=mm.get("flash"))
         seg = Segment(
             eqn_idx=seg_idx, rows=cur_rows, bulk_shape=anchor,
             operand_specs=operand_specs, outputs=outputs, out_cols=out_cols,
@@ -1324,9 +1687,14 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
             tier="anchor" if anchor_spec is not None else "elementwise",
             n_compute=n_compute, near_bytes=seg.io_bytes(),
             far_bytes=far_b)
+        form = None
+        if anchor_spec is not None:
+            form = "flash" if anchor_spec.flash is not None \
+                else anchor_spec.form
         decision = decision._with(
-            form=anchor_spec.form if anchor_spec is not None else None,
-            rows=cur_rows, roles=tuple(roles))
+            form=form, rows=cur_rows, roles=tuple(roles),
+            batch=anchor_spec.batch_shape if anchor_spec is not None
+            else ())
         decisions.append(decision)
         if decision.fused:
             segments.append(seg)
@@ -1334,6 +1702,9 @@ def plan_offload(closed: jcore.ClosedJaxpr, *,
 
     for i, eqn in enumerate(eqns):
         if try_admit(i, eqn):
+            continue
+        if hoistable(i, eqn):
+            hoisted.append(i)
             continue
         flush()
         if not try_admit(i, eqn):
@@ -1484,6 +1855,32 @@ def _rhs_prologue_fn(eqns: Sequence, mm: MatmulAnchor) -> Callable:
     return fn
 
 
+def _flash_softmax_fn(eqns: Sequence, mm: MatmulAnchor) -> Callable:
+    """The flash segment's absorbed scale/softmax chain, replayed
+    verbatim (scores -> probabilities) for the ref path — exact numerics
+    and, through ``jax.vjp`` over the ref dispatch, exact gradients
+    (``stop_gradient`` on the row max included)."""
+    fl = mm.flash
+
+    def fn(scores):
+        env: dict[Any, Any] = {fl["scores_var"]: scores}
+        env.update(fl.get("const_env", {}))
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for j in fl["softmax_eqns"]:
+            eqn = eqns[j]
+            out = eqn.primitive.bind(*(read(v) for v in eqn.invars),
+                                     **eqn.params)
+            if eqn.primitive.multiple_results:
+                out = out[0]
+            env[eqn.outvars[0]] = out
+        return env[fl["p_var"]]
+
+    return fn
+
+
 def _segment_arg_vars(seg: Segment) -> list[Any]:
     """The segment's inputs in the canonical positional order the
     dispatch (and its custom VJP) uses: matmul lhs-side, matmul
@@ -1520,7 +1917,18 @@ def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
             epi_meta, m_dim=mm.k, rows=seg.rows, n_dim=mm.n,
             acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
             out_dtypes=out_dtypes, donate=donate, impl=impl,
-            vmem_bytes=seg.vmem_bytes)
+            batch=mm.batch, vmem_bytes=seg.vmem_bytes)
+    if mm.flash is not None:
+        # QK^T -> scale/softmax -> PV as ONE segment; must route before
+        # the plain dlhs check (a flash anchor's base form IS dlhs)
+        fl = mm.flash
+        return kops.fused_flash_segment(
+            _flash_softmax_fn(eqns, mm), lhs_vals[0], rhs_vals[0],
+            rhs_vals[1], batch=mm.batch, rows=seg.rows, head_dim=mm.k,
+            t_dim=fl["t_dim"], n_dim=mm.n, scale=fl["scale"],
+            scores_shape=fl["scores_shape"],
+            scores_dtype=fl["scores_dtype"], out_dtype=out_dtypes[0],
+            impl=impl)
     if mm.form == "dlhs":
         return kops.fused_matmul_dlhs_segment(
             _prologue_fn(eqns, mm), _segment_fn(eqns, seg), lhs_vals,
@@ -1528,7 +1936,7 @@ def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
             epi_meta, rows=seg.rows, k_dim=mm.k, n_dim=mm.n,
             acc_dtype=mm.out_dtype, out_cols=seg.out_cols,
             out_dtypes=out_dtypes, donate=donate, impl=impl,
-            vmem_bytes=seg.vmem_bytes)
+            batch=mm.batch, vmem_bytes=seg.vmem_bytes)
     return kops.fused_matmul_segment(
         _prologue_fn(eqns, mm), _rhs_prologue_fn(eqns, mm),
         _segment_fn(eqns, seg), lhs_vals,
@@ -1536,7 +1944,7 @@ def _segment_dispatch(eqns: Sequence, seg: Segment, vals: Sequence, *,
         tuple(s.meta for s in mm.rhs_specs), epi_vals, epi_meta,
         rows=seg.rows, k_dim=mm.k, n_dim=mm.n, acc_dtype=mm.out_dtype,
         out_cols=seg.out_cols, out_dtypes=out_dtypes, donate=donate,
-        impl=impl, vmem_bytes=seg.vmem_bytes)
+        impl=impl, batch=mm.batch, vmem_bytes=seg.vmem_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -1793,8 +2201,9 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, policy: OffloadPolicy,
         elif name == "pjit":
             steps.append(make_pjit_step(eqn))
         else:
-            # custom_jvp/vjp_call and closed_call never reach here: the
-            # _flatten_calls pass inlined their bodies unconditionally
+            # custom_jvp_call/closed_call never reach here (their bodies
+            # are inlined by _flatten_calls); custom_vjp eqns DO — they
+            # re-bind unchanged so the user's backward rule survives
             steps.append(make_eqn_step(eqn))
         i += 1
 

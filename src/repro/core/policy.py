@@ -22,7 +22,11 @@ single source of truth for that choice across the whole stack:
 * ``SegmentDecision`` / ``DecisionReport`` — the per-candidate decision
   record the planner emits (tier, anchor form, operand roles, io bytes,
   modeled near/far time, fuse/decline rationale) and the readable table
-  behind ``wrapped.explain(*args)``.
+  behind ``wrapped.explain(*args)``.  Batched anchors render their
+  outer grid axes in the ``batch`` column — a ``[B,H,S,D]`` einsum
+  shows as ``form=fwd, batch=(B, H)`` (i.e. ``batch=2x4`` in the
+  table) — and a planned flash-attention segment shows as
+  ``form=flash`` with the same batch axes.
 
 Decision backends
 -----------------
@@ -281,7 +285,7 @@ class SegmentDecision:
     """One candidate segment's §IV-B1 verdict."""
 
     tier: str                    # "elementwise" | "anchor"
-    form: str | None             # fwd/dlhs/drhs for anchored candidates
+    form: str | None             # fwd/dlhs/drhs/flash for anchored candidates
     eqns: int                    # fused ALU eqns (n_compute)
     rows: int                    # shared row extent of the block views
     roles: tuple[str, ...]       # operand roles (bulk/param/rep/tile/...)
@@ -291,6 +295,7 @@ class SegmentDecision:
     far_us: float
     fused: bool
     reason: str
+    batch: tuple = ()            # batch grid axes of a batched anchor
 
     def _with(self, **kw) -> "SegmentDecision":
         return dataclasses.replace(self, **kw)
@@ -338,11 +343,13 @@ class DecisionReport:
                f"traffic {self.traffic_reduction:.2f}x "
                f"({self.naive_bytes / 1e6:.2f} -> "
                f"{self.fused_bytes / 1e6:.2f} MB)")
-        cols = ("idx", "tier", "form", "eqns", "rows", "near_mb",
+        cols = ("idx", "tier", "form", "batch", "eqns", "rows", "near_mb",
                 "far_mb", "near_us", "far_us", "decision")
         rows = [cols]
         for i, d in enumerate(self.all_decisions()):
-            rows.append((str(i), d.tier, d.form or "-", str(d.eqns),
+            rows.append((str(i), d.tier, d.form or "-",
+                         "x".join(map(str, d.batch)) if d.batch else "-",
+                         str(d.eqns),
                          str(d.rows), f"{d.near_bytes / 1e6:.2f}",
                          f"{d.far_bytes / 1e6:.2f}", f"{d.near_us:.2f}",
                          f"{d.far_us:.2f}",

@@ -98,8 +98,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "q_block", "kv_block", "interpret",
-                     "return_lse"))
+    static_argnames=("causal", "window", "scale", "q_block", "kv_block",
+                     "interpret", "return_lse"))
 def flash_attention(
     q: jnp.ndarray,  # [B, S, NQ, H]
     k: jnp.ndarray,  # [B, T, NK, H]
@@ -107,6 +107,7 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int = 0,
+    scale: float | None = None,
     q_block: int = 256,
     kv_block: int = 256,
     interpret: bool = False,
@@ -136,7 +137,8 @@ def flash_attention(
             (1, 1, g, q_block), lambda bb, kh, qi, ki: (bb, kh, 0, qi)))
         out_shape.append(jax.ShapeDtypeStruct((b, nk, g, sq), jnp.float32))
     kernel = functools.partial(
-        _attn_kernel, scale=1.0 / (h ** 0.5), causal=causal,
+        _attn_kernel,
+        scale=(1.0 / (h ** 0.5)) if scale is None else scale, causal=causal,
         window=window, q_block=q_block, kv_block=kv_block, kv_len=t)
     if not return_lse:
         kernel = functools.partial(_no_lse_adapter, kernel)

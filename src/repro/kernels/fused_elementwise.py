@@ -108,6 +108,50 @@ def _largest_divisor_leq(n: int, limit: int) -> int:
     return best
 
 
+def _bcast_row_index(op_lead: tuple, out_lead: tuple,
+                     rb: int) -> tuple[int, Callable]:
+    """Block extent and row-grid index map for an interior-broadcast
+    ("bcast") operand — e.g. [B,1,S,1,D] read against [B,H,S,W,D] rows.
+
+    The row-block index ``i`` decomposes over the output's leading dims
+    (``rb`` divides ``out_lead[-1]`` by the caller's gcd constraint);
+    only the operand's non-broadcast dims contribute to its row index,
+    so each distinct operand row is read once per visit instead of the
+    broadcast tensor being materialized.  Returns ``(block_rows, fn)``
+    where ``fn(i)`` is the operand's block-row index: when the operand's
+    innermost lead dim is broadcast the block is a single row (the whole
+    ``rb``-row output block maps to one operand row), otherwise the
+    block spans ``rb`` operand rows."""
+    inner = out_lead[-1] // rb
+    if op_lead[-1] == 1:
+        def fn(i):
+            j = i // inner
+            idx = 0
+            stride = 1
+            for od, pd in zip(reversed(out_lead[:-1]),
+                              reversed(op_lead[:-1])):
+                d = j % od
+                if pd != 1:
+                    idx = idx + d * stride
+                    stride *= pd
+                j = j // od
+            return idx
+        return 1, fn
+
+    def fn(i):
+        j = i // inner
+        idx = i % inner
+        stride = inner
+        for od, pd in zip(reversed(out_lead[:-1]), reversed(op_lead[:-1])):
+            d = j % od
+            if pd != 1:
+                idx = idx + d * stride
+                stride *= pd
+            j = j // od
+        return idx
+    return rb, fn
+
+
 def _seg_kernel(*refs, fn: Callable, n_in: int):
     vals = [r[...] for r in refs[:n_in]]
     outs = fn(*vals)
@@ -130,12 +174,16 @@ def fused_segment_grid(
     """Cross-shape near-bank segment — the offload rewriter's target.
 
     Every operand carries its own 2-D block view via ``specs``
-    (``(role, op_rows, cols)`` triples, see
-    repro.core.offload.OperandSpec): ``bulk`` operands tile the row
-    grid, ``param`` operands broadcast one [1, cols] block to every
-    step, and ``rep``/``tile`` operands remap the grid index
+    (``(role, op_rows, cols)`` triples — or 5-tuples
+    ``("bcast", op_rows, cols, lead, out_lead)`` for interior
+    broadcasts — see repro.core.offload.OperandSpec): ``bulk`` operands
+    tile the row grid, ``param`` operands broadcast one [1, cols] block
+    to every step, ``rep``/``tile`` operands remap the grid index
     (``i // q`` / ``i % p``) so row-broadcast tensors like [B,1,D] are
-    read once per distinct row instead of being materialized.  ``fn``
+    read once per distinct row instead of being materialized, and
+    ``bcast`` operands ([B,1,S,1,D]-style interior broadcasts)
+    decompose the row-block index over the output's leading dims and
+    stride only their non-broadcast dims (``_bcast_row_index``).  ``fn``
     maps the blocks (plus a static ``block_rows``) to one
     [block_rows, out_cols[j]] block per output, all written in the same
     single HBM pass.
@@ -153,11 +201,14 @@ def fused_segment_grid(
     """
     limit = max(min(rows_block, rows), 1)
     g = 0   # rb must divide every rep repeat factor and tile period
-    for role, op_rows, _ in specs:
+    for spec in specs:
+        role, op_rows = spec[0], spec[1]
         if role == "rep":
             g = math.gcd(g, rows // op_rows)
         elif role == "tile":
             g = math.gcd(g, op_rows)
+        elif role == "bcast":   # must divide the innermost out lead dim
+            g = math.gcd(g, spec[4][-1])
     # largest divisor that fits the block budget (NOT gcd with the
     # budget, which collapses to 1 for coprime extents like 511)
     rb = _largest_divisor_leq(g, limit) if g else limit
@@ -175,7 +226,8 @@ def fused_segment_grid(
     grid = ((rows + pad) // rb,)
 
     ops2, in_specs = [], []
-    for (role, op_rows, c), v in zip(specs, operands):
+    for spec, v in zip(specs, operands):
+        role, op_rows, c = spec[0], spec[1], spec[2]
         v = jnp.asarray(v)
         if role == "param":
             ops2.append(v.reshape(1, c))
@@ -191,6 +243,11 @@ def fused_segment_grid(
             ops2.append(v.reshape(op_rows, c))
             in_specs.append(
                 pl.BlockSpec((1, c), lambda i, q=q: (i // q, 0)))
+        elif role == "bcast":             # interior broadcast
+            brows, idx_fn = _bcast_row_index(spec[3], spec[4], rb)
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(
+                pl.BlockSpec((brows, c), lambda i, f=idx_fn: (f(i), 0)))
         else:                             # tile: rb divides the period
             p = op_rows // rb
             ops2.append(v.reshape(op_rows, c))

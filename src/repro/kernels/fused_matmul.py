@@ -42,7 +42,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _compat
-from repro.kernels.fused_elementwise import _largest_divisor_leq
+from repro.kernels.fused_elementwise import (
+    _bcast_row_index,
+    _largest_divisor_leq,
+)
 
 
 # VMEM budget for the f32 accumulator (and, symmetrically, the rhs
@@ -61,31 +64,42 @@ def _block_budget(block: int, n_dim: int,
     return max(min(block, budget // (4 * max(n_dim, 1))), 8)
 
 
-def _row_block(rows: int, epi_specs: Sequence[tuple[str, int, int]],
+def _row_block(rows: int, epi_specs: Sequence[tuple],
                rows_block: int, n_dim: int,
-               vmem_bytes: int | None = None) -> int:
-    """Row-block extent: the largest divisor of the rep/tile gcd (or of
-    ``rows``) that fits the (VMEM-clamped) block budget — exact tiling,
-    so donation aliases always hold."""
+               vmem_bytes: int | None = None, batch: int = 1) -> int:
+    """Row-block extent: the largest divisor of the rep/tile/bcast gcd
+    (or of ``rows``) that fits the (VMEM-clamped) block budget — exact
+    tiling, so donation aliases always hold.  With ``batch`` > 1 the
+    block must also divide the PER-BATCH row extent so every row block
+    sits inside a single batch slice of the outer grid."""
     limit = max(min(_block_budget(rows_block, n_dim, vmem_bytes), rows), 1)
     g = 0   # rows_block must divide every rep repeat factor/tile period
-    for role, op_rows, _ in epi_specs:
+    for spec in epi_specs:
+        role, op_rows = spec[0], spec[1]
         if role == "rep":
             g = math.gcd(g, rows // op_rows)
         elif role == "tile":
             g = math.gcd(g, op_rows)
+        elif role == "bcast":   # must divide the innermost out lead dim
+            g = math.gcd(g, spec[4][-1])
+    if batch > 1:
+        per = rows // batch
+        g = math.gcd(g, per) if g else per
     return _largest_divisor_leq(g if g else rows, limit)
 
 
-def matmul_row_blocks(rows: int, epi_specs: Sequence[tuple[str, int, int]],
+def matmul_row_blocks(rows: int, epi_specs: Sequence[tuple],
                       n_dim: int, rows_block: int = 512,
-                      vmem_bytes: int | None = None) -> int:
-    """Number of row blocks the anchored kernel launches.  The [K, N]
-    rhs weight is re-streamed once per row block; the offload planner's
-    traffic accounting uses this same computation so the modeled bytes
-    match what the kernel actually reads."""
-    return rows // _row_block(rows, epi_specs, rows_block, n_dim,
-                              vmem_bytes)
+                      vmem_bytes: int | None = None,
+                      batch: int = 1) -> int:
+    """Number of PER-BATCH row blocks the anchored kernel launches.  The
+    per-batch [K, N] rhs slice is re-streamed once per row block of that
+    slice; the offload planner's traffic accounting multiplies the FULL
+    rhs byte count by this value, so it is per batch slice by
+    construction.  Planner and kernel share this computation so the
+    modeled bytes match what the kernel actually reads."""
+    return (rows // batch) // _row_block(rows, epi_specs, rows_block,
+                                         n_dim, vmem_bytes, batch)
 
 
 def _mm_kernel(*refs, pro_fn: Callable, rhs_pro_fn: Callable, n_lhs: int,
@@ -131,6 +145,7 @@ def fused_matmul_segment(
     donate: Sequence[tuple[int, int]] = (),
     rows_block: int = 512,
     k_block: int = 512,
+    batch: int = 1,
     vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
@@ -147,15 +162,24 @@ def fused_matmul_segment(
     [rows_block, out_cols[j]] block per output.  ``donate`` pairs index
     into ``epi_operands`` and become Pallas ``input_output_aliases``
     (offset past the lhs/rhs inputs).
+
+    ``batch`` > 1 generalizes the grid to a batched contraction
+    ([B.., M, K] @ [B.., K, N]): ``rows`` is the FULL row extent
+    (batch * per-batch M), row blocks never straddle a batch slice, and
+    the bulk_w rhs — viewed [batch * K, N] — streams its own batch
+    slice's [K, N] once per row block of that slice (the batch axes are
+    outer grid positions realized through the block index maps).
     """
-    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes)
+    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes, batch)
     rk = _largest_divisor_leq(
         k_dim, max(min(_block_budget(k_block, n_dim, vmem_bytes),
                        k_dim), 1))
     grid = (rows // rb, k_dim // rk)
+    q_steps = (rows // batch) // rb       # row blocks per batch slice
 
     ops2, in_specs = [], []
-    for (role, _, c), v in zip(lhs_specs, lhs_operands):
+    for spec, v in zip(lhs_specs, lhs_operands):
+        role, c = spec[0], spec[2]
         v = jnp.asarray(v)
         if role == "param_k":
             ops2.append(v.reshape(1, c))
@@ -166,15 +190,23 @@ def fused_matmul_segment(
         else:                   # bulk_k
             ops2.append(v.reshape(rows, k_dim))
             in_specs.append(pl.BlockSpec((rb, rk), lambda i, k: (i, k)))
-    for (role, _, c), v in zip(rhs_specs, rhs_operands):
+    for spec, v in zip(rhs_specs, rhs_operands):
+        role, c = spec[0], spec[2]
         v = jnp.asarray(v)
         if role == "param_w":
             ops2.append(v.reshape(1, c))
             in_specs.append(pl.BlockSpec((1, c), lambda i, k: (0, 0)))
+        elif batch > 1:         # bulk_w slice of the [batch * K, N] view
+            ops2.append(v.reshape(batch * k_dim, n_dim))
+            in_specs.append(pl.BlockSpec(
+                (rk, n_dim),
+                lambda i, k, q=q_steps, nk=k_dim // rk:
+                ((i // q) * nk + k, 0)))
         else:                   # bulk_w: a raw [K, N] weight-side operand
             ops2.append(v.reshape(k_dim, n_dim))
             in_specs.append(pl.BlockSpec((rk, n_dim), lambda i, k: (k, 0)))
-    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+    for spec, v in zip(epi_specs, epi_operands):
+        role, op_rows, c = spec[0], spec[1], spec[2]
         v = jnp.asarray(v)
         if role == "param":
             ops2.append(v.reshape(1, c))
@@ -187,6 +219,11 @@ def fused_matmul_segment(
             ops2.append(v.reshape(op_rows, c))
             in_specs.append(
                 pl.BlockSpec((1, c), lambda i, k, q=q: (i // q, 0)))
+        elif role == "bcast":             # interior broadcast
+            brows, idx_fn = _bcast_row_index(spec[3], spec[4], rb)
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(pl.BlockSpec(
+                (brows, c), lambda i, k, f=idx_fn: (f(i), 0)))
         else:                             # tile: rb divides the period
             p = op_rows // rb
             ops2.append(v.reshape(op_rows, c))

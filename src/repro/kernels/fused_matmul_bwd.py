@@ -44,7 +44,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _compat
-from repro.kernels.fused_elementwise import _largest_divisor_leq
+from repro.kernels.fused_elementwise import (
+    _bcast_row_index,
+    _largest_divisor_leq,
+)
 from repro.kernels.fused_matmul import _block_budget, _row_block
 
 # dx = g @ wT contracts lhs lane with RHS LANE (dim 1 of the [K,N]
@@ -96,6 +99,7 @@ def fused_matmul_dlhs_segment(
     donate: Sequence[tuple[int, int]] = (),
     rows_block: int = 512,
     k_block: int = 512,
+    batch: int = 1,
     vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
@@ -107,15 +111,22 @@ def fused_matmul_dlhs_segment(
     column block and contracts it lane-against-lane on the MXU.
     Everything else (prologue per lhs tile, epilogue on the accumulator,
     donation on dead epilogue operands) mirrors the forward kernel.
+
+    ``batch`` > 1 admits leading batch dims on BOTH operands (attention
+    QK^T is this form per batch slice): ``rows`` spans all batches, row
+    blocks never straddle a batch slice, and the rhs — viewed
+    [batch * n_dim, k_dim] — streams its own slice per row block.
     """
-    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes)
+    rb = _row_block(rows, epi_specs, rows_block, n_dim, vmem_bytes, batch)
     ck = _largest_divisor_leq(
         k_dim, max(min(_block_budget(k_block, n_dim, vmem_bytes),
                        k_dim), 1))
     grid = (rows // rb, k_dim // ck)
+    q_steps = (rows // batch) // rb       # row blocks per batch slice
 
     ops2, in_specs = [], []
-    for (role, _, c), v in zip(lhs_specs, lhs_operands):
+    for spec, v in zip(lhs_specs, lhs_operands):
+        role, c = spec[0], spec[2]
         v = jnp.asarray(v)
         if role == "param_k":
             ops2.append(v.reshape(1, c))
@@ -126,9 +137,15 @@ def fused_matmul_dlhs_segment(
         else:                   # bulk_k: the [rows, k_dim] cotangent
             ops2.append(v.reshape(rows, k_dim))
             in_specs.append(pl.BlockSpec((rb, ck), lambda i, k: (i, k)))
-    ops2.append(jnp.asarray(rhs).reshape(n_dim, k_dim))
-    in_specs.append(pl.BlockSpec((n_dim, ck), lambda i, k: (0, k)))
-    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+    if batch > 1:
+        ops2.append(jnp.asarray(rhs).reshape(batch * n_dim, k_dim))
+        in_specs.append(pl.BlockSpec(
+            (n_dim, ck), lambda i, k, q=q_steps: (i // q, k)))
+    else:
+        ops2.append(jnp.asarray(rhs).reshape(n_dim, k_dim))
+        in_specs.append(pl.BlockSpec((n_dim, ck), lambda i, k: (0, k)))
+    for spec, v in zip(epi_specs, epi_operands):
+        role, op_rows, c = spec[0], spec[1], spec[2]
         v = jnp.asarray(v)
         if role == "param":
             ops2.append(v.reshape(1, c))
@@ -141,6 +158,11 @@ def fused_matmul_dlhs_segment(
             ops2.append(v.reshape(op_rows, c))
             in_specs.append(
                 pl.BlockSpec((1, c), lambda i, k, q=q: (i // q, 0)))
+        elif role == "bcast":             # interior broadcast
+            brows, idx_fn = _bcast_row_index(spec[3], spec[4], rb)
+            ops2.append(v.reshape(op_rows, c))
+            in_specs.append(pl.BlockSpec(
+                (brows, c), lambda i, k, f=idx_fn: (f(i), 0)))
         else:                             # tile: rb divides the period
             p = op_rows // rb
             ops2.append(v.reshape(op_rows, c))
@@ -182,25 +204,32 @@ def fused_matmul_dlhs_segment(
 
 def drhs_blocks(rows: int, n_dim: int, rows_block: int = 512,
                 n_block: int = 512,
-                vmem_bytes: int | None = None) -> tuple[int, int]:
+                vmem_bytes: int | None = None,
+                batch: int = 1) -> tuple[int, int]:
     """(row_block, n_block) extents of the drhs kernel: the lane block is
     fixed first, then the row block shrinks so the f32 [Kb, Nb] scratch
-    stays within the shared VMEM accumulator budget."""
+    stays within the shared VMEM accumulator budget.  With ``batch`` > 1
+    the row block divides the PER-BATCH row extent so no output tile
+    straddles a batch slice."""
+    per = rows // batch
     nb = _largest_divisor_leq(n_dim, max(min(n_block, n_dim), 1))
     pb = _largest_divisor_leq(
-        rows, max(min(_block_budget(rows_block, nb, vmem_bytes), rows), 1))
+        per, max(min(_block_budget(rows_block, nb, vmem_bytes), per), 1))
     return pb, nb
 
 
 def drhs_grid_blocks(rows: int, n_dim: int, rows_block: int = 512,
                      n_block: int = 512,
-                     vmem_bytes: int | None = None) -> tuple[int, int]:
+                     vmem_bytes: int | None = None,
+                     batch: int = 1) -> tuple[int, int]:
     """(row_blocks, n_blocks) of the drhs kernel grid.  The [M, K] lhs is
-    re-streamed once per n block and the [M, N] rhs once per row block;
-    the offload planner's ``Segment.io_bytes`` uses this same computation
-    so the modeled bytes match what the kernel actually reads."""
-    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes)
-    return rows // pb, n_dim // nb
+    re-streamed once per n block and the [M, N] rhs once per PER-BATCH
+    row block; the offload planner's ``Segment.io_bytes`` uses this same
+    computation so the modeled bytes match what the kernel actually
+    reads."""
+    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes,
+                         batch)
+    return (rows // batch) // pb, n_dim // nb
 
 
 def _drhs_kernel(*refs, epi_fn: Callable, n_epi: int, acc_dtype):
@@ -243,6 +272,7 @@ def fused_matmul_drhs_segment(
     rows_block: int = 512,
     n_block: int = 512,
     m_block: int = 512,
+    batch: int = 1,
     vmem_bytes: int | None = None,
     interpret: bool = False,
 ) -> tuple:
@@ -257,16 +287,35 @@ def fused_matmul_drhs_segment(
     lane-blocked too ((pb, nb) tiles at (i, j)); the planner restricts
     drhs epilogues to pure elementwise eqns so no lane statistic is ever
     needed across an (i, j) tile boundary.
+
+    ``batch`` > 1 admits leading batch dims on BOTH operands: lhs and
+    rhs are viewed [batch * m_dim, ·], ``rows`` spans all batches'
+    output rows, and the row-block index selects the owning batch's
+    m-row range so each output tile reduces ONLY its own slice.
     """
-    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes)
+    pb, nb = drhs_blocks(rows, n_dim, rows_block, n_block, vmem_bytes,
+                         batch)
     mb = _largest_divisor_leq(m_dim, max(min(m_block, m_dim), 1))
     grid = (rows // pb, n_dim // nb, m_dim // mb)
+    q_steps = (rows // batch) // pb       # row blocks per batch slice
+    m_rows = m_dim // mb                  # m blocks per batch slice
 
-    ops2 = [jnp.asarray(lhs).reshape(m_dim, rows),
-            jnp.asarray(rhs).reshape(m_dim, n_dim)]
-    in_specs = [pl.BlockSpec((mb, pb), lambda i, j, m: (m, i)),
-                pl.BlockSpec((mb, nb), lambda i, j, m: (m, j))]
-    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
+    ops2 = [jnp.asarray(lhs).reshape(batch * m_dim, rows // batch),
+            jnp.asarray(rhs).reshape(batch * m_dim, n_dim)]
+    if batch > 1:
+        in_specs = [
+            pl.BlockSpec((mb, pb),
+                         lambda i, j, m, q=q_steps, mr=m_rows:
+                         ((i // q) * mr + m, i % q)),
+            pl.BlockSpec((mb, nb),
+                         lambda i, j, m, q=q_steps, mr=m_rows:
+                         ((i // q) * mr + m, j)),
+        ]
+    else:
+        in_specs = [pl.BlockSpec((mb, pb), lambda i, j, m: (m, i)),
+                    pl.BlockSpec((mb, nb), lambda i, j, m: (m, j))]
+    for spec, v in zip(epi_specs, epi_operands):
+        role, op_rows, c = spec[0], spec[1], spec[2]
         v = jnp.asarray(v)
         if role == "param":
             ops2.append(v.reshape(1, c))

@@ -136,26 +136,38 @@ def fused_segment(fn, bulk, params=(), *, out_dtypes, impl: Impl = "auto",
                              interpret=(impl == "interpret"), **kw)
 
 
+def _full_view(spec, v, rows):
+    """Materialize one operand's [rows, c] broadcast view for ref paths.
+
+    ``spec`` is a (role, op_rows, c) triple or an interior-broadcast
+    5-tuple ("bcast", op_rows, c, lead, out_lead)."""
+    role, op_rows, c = spec[0], spec[1], spec[2]
+    v = jnp.asarray(v)
+    if role == "param":
+        return v.reshape(1, c)
+    if role == "rep":
+        return jnp.repeat(v.reshape(op_rows, c), rows // op_rows, axis=0)
+    if role == "tile":
+        return jnp.tile(v.reshape(op_rows, c), (rows // op_rows, 1))
+    if role == "bcast":
+        op_lead, out_lead = spec[3], spec[4]
+        return jnp.broadcast_to(
+            v.reshape(op_lead + (c,)), out_lead + (c,)).reshape(rows, c)
+    return v.reshape(rows, c)
+
+
 def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
                        donate=(), impl: Impl = "auto", **kw):
     """Cross-shape near-bank segment with per-operand block views (what
     the offload rewriter emits).  ``specs`` are (role, op_rows, cols)
-    triples; ``donate`` pairs become Pallas ``input_output_aliases``.
-    Returns one [rows, out_cols[j]] array per output.  The "ref" path
-    materializes the broadcast views and runs ``fn`` as one full-array
-    pass (donation is XLA's problem there)."""
+    triples — or ("bcast", op_rows, cols, lead, out_lead) 5-tuples for
+    interior broadcasts; ``donate`` pairs become Pallas
+    ``input_output_aliases``.  Returns one [rows, out_cols[j]] array per
+    output.  The "ref" path materializes the broadcast views and runs
+    ``fn`` as one full-array pass (donation is XLA's problem there)."""
     impl = _resolve(impl)
     if impl == "ref":
-        full = []
-        for (role, op_rows, c), v in zip(specs, operands):
-            v2 = jnp.asarray(v).reshape(
-                (1, c) if role == "param" else (op_rows, c)
-                if role in ("rep", "tile") else (rows, c))
-            if role == "rep":
-                v2 = jnp.repeat(v2, rows // op_rows, axis=0)
-            elif role == "tile":
-                v2 = jnp.tile(v2, (rows // op_rows, 1))
-            full.append(v2)
+        full = [_full_view(s, v, rows) for s, v in zip(specs, operands)]
         outs = fn(*full, block_rows=rows)
         return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
     return _fused_seg_grid_pallas(fn, operands, specs, rows=rows,
@@ -166,29 +178,22 @@ def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
 
 def _epi_full_views(epi_specs, epi_operands, rows):
     """Materialize the epilogue operands' broadcast views for ref paths."""
-    full = []
-    for (role, op_rows, c), v in zip(epi_specs, epi_operands):
-        v2 = jnp.asarray(v).reshape(
-            (1, c) if role == "param" else (op_rows, c)
-            if role in ("rep", "tile") else (rows, c))
-        if role == "rep":
-            v2 = jnp.repeat(v2, rows // op_rows, axis=0)
-        elif role == "tile":
-            v2 = jnp.tile(v2, (rows // op_rows, 1))
-        full.append(v2)
-    return full
+    return [_full_view(s, v, rows)
+            for s, v in zip(epi_specs, epi_operands)]
 
 
 def fused_matmul_segment(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
                          lhs_specs, rhs_operands, rhs_specs,
                          epi_operands, epi_specs, *, rows, k_dim, n_dim,
                          acc_dtype, out_cols, out_dtypes, donate=(),
-                         impl: Impl = "auto", **kw):
+                         batch: int = 1, impl: Impl = "auto", **kw):
     """Matmul-anchored near-bank segment (fused GEMM prologue/epilogue —
     what the offload rewriter emits for dot_general-anchored segments).
     The "ref" path materializes the block views and runs prologue ->
     contraction -> epilogue as full-array jnp (one XLA dot; donation is
-    XLA's problem there)."""
+    XLA's problem there).  ``batch`` > 1 means ``rows`` spans leading
+    batch dims shared by both operands; the contraction is per batch
+    slice (k_dim/n_dim stay per-batch)."""
     impl = _resolve(impl)
     if impl == "ref":
         lhs_full = [jnp.asarray(v).reshape(
@@ -196,11 +201,19 @@ def fused_matmul_segment(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
             for (role, _, c), v in zip(lhs_specs, lhs_operands)]
         lhs = pro_fn(*lhs_full, block_rows=rows)
         rhs_full = [jnp.asarray(v).reshape(
-            (1, c) if role == "param_w" else (k_dim, n_dim))
+            (1, c) if role == "param_w" else (batch * k_dim, n_dim))
             for (role, _, c), v in zip(rhs_specs, rhs_operands)]
         rhs = rhs_pro_fn(*rhs_full, block_rows=rows)
-        h = jnp.dot(lhs, rhs,
-                    preferred_element_type=jnp.float32).astype(acc_dtype)
+        if batch > 1:
+            h = jax.lax.dot_general(
+                lhs.reshape(batch, rows // batch, k_dim),
+                rhs.reshape(batch, k_dim, n_dim),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).reshape(rows, n_dim).astype(acc_dtype)
+        else:
+            h = jnp.dot(lhs, rhs,
+                        preferred_element_type=jnp.float32).astype(acc_dtype)
         full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
         outs = epi_fn(*full, block_rows=rows)
         return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
@@ -209,27 +222,38 @@ def fused_matmul_segment(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
                             epi_operands, epi_specs, rows=rows, k_dim=k_dim,
                             n_dim=n_dim, acc_dtype=acc_dtype,
                             out_cols=out_cols, out_dtypes=out_dtypes,
-                            donate=donate,
+                            donate=donate, batch=batch,
                             interpret=(impl == "interpret"), **kw)
 
 
 def fused_matmul_dlhs_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
                               epi_operands, epi_specs, *, rows, k_dim,
                               n_dim, acc_dtype, out_cols, out_dtypes,
-                              donate=(), impl: Impl = "auto", **kw):
+                              donate=(), batch: int = 1,
+                              impl: Impl = "auto", **kw):
     """dGRAD_LHS-anchored segment: dx[rows, n] = g[rows, k] @ w[n, k]^T
     with the [n, k] forward weight read column-major in-kernel.  The
-    "ref" path runs one XLA dot_general contracting both lane axes."""
+    "ref" path runs one XLA dot_general contracting both lane axes.
+    ``batch`` > 1 contracts per batch slice (attention QK^T is this
+    form: q[rows, k] against k[batch, n, k])."""
     impl = _resolve(impl)
     if impl == "ref":
         lhs_full = [jnp.asarray(v).reshape(
             (1, c) if role == "param_k" else (rows, k_dim))
             for (role, _, c), v in zip(lhs_specs, lhs_operands)]
         g = pro_fn(*lhs_full, block_rows=rows)
-        h = jax.lax.dot_general(
-            g, jnp.asarray(rhs).reshape(n_dim, k_dim),
-            (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(acc_dtype)
+        if batch > 1:
+            h = jax.lax.dot_general(
+                g.reshape(batch, rows // batch, k_dim),
+                jnp.asarray(rhs).reshape(batch, n_dim, k_dim),
+                (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).reshape(rows, n_dim).astype(acc_dtype)
+        else:
+            h = jax.lax.dot_general(
+                g, jnp.asarray(rhs).reshape(n_dim, k_dim),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(acc_dtype)
         full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
         outs = epi_fn(*full, block_rows=rows)
         return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
@@ -237,24 +261,33 @@ def fused_matmul_dlhs_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
                               epi_operands, epi_specs, rows=rows,
                               k_dim=k_dim, n_dim=n_dim, acc_dtype=acc_dtype,
                               out_cols=out_cols, out_dtypes=out_dtypes,
-                              donate=donate,
+                              donate=donate, batch=batch,
                               interpret=(impl == "interpret"), **kw)
 
 
 def fused_matmul_drhs_segment(epi_fn, lhs, rhs, epi_operands, epi_specs, *,
                               m_dim, rows, n_dim, acc_dtype, out_cols,
-                              out_dtypes, donate=(), impl: Impl = "auto",
-                              **kw):
+                              out_dtypes, donate=(), batch: int = 1,
+                              impl: Impl = "auto", **kw):
     """dGRAD_RHS-anchored segment: dw[rows, n] = x[m, rows]^T @ g[m, n]
     accumulated over the row (M) axis into an f32 [Kb, Nb] scratch.  The
-    "ref" path runs one XLA dot_general contracting both row axes."""
+    "ref" path runs one XLA dot_general contracting both row axes.
+    ``batch`` > 1 reduces each batch slice's own m rows only."""
     impl = _resolve(impl)
     if impl == "ref":
-        h = jax.lax.dot_general(
-            jnp.asarray(lhs).reshape(m_dim, rows),
-            jnp.asarray(rhs).reshape(m_dim, n_dim),
-            (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(acc_dtype)
+        if batch > 1:
+            h = jax.lax.dot_general(
+                jnp.asarray(lhs).reshape(batch, m_dim, rows // batch),
+                jnp.asarray(rhs).reshape(batch, m_dim, n_dim),
+                (((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).reshape(rows, n_dim).astype(acc_dtype)
+        else:
+            h = jax.lax.dot_general(
+                jnp.asarray(lhs).reshape(m_dim, rows),
+                jnp.asarray(rhs).reshape(m_dim, n_dim),
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(acc_dtype)
         full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
         outs = epi_fn(*full, block_rows=rows)
         return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
@@ -262,4 +295,40 @@ def fused_matmul_drhs_segment(epi_fn, lhs, rhs, epi_operands, epi_specs, *,
                               m_dim=m_dim, rows=rows, n_dim=n_dim,
                               acc_dtype=acc_dtype, out_cols=out_cols,
                               out_dtypes=out_dtypes, donate=donate,
+                              batch=batch,
                               interpret=(impl == "interpret"), **kw)
+
+
+def fused_flash_segment(softmax_fn, q, k, v, *, batch, rows, head_dim,
+                        t_dim, n_dim, scale, scores_shape, scores_dtype,
+                        out_dtype, donate=(), impl: Impl = "auto", **kw):
+    """Flash-shaped anchored segment: QK^T -> scale/row-softmax -> PV as
+    ONE launch, the [S, T] score matrix never touching HBM.
+
+    ``softmax_fn`` replays the admitted scale+softmax eqns verbatim on
+    the raw scores (ref path only — the Pallas path runs the online
+    softmax inside ``flash_attention`` with the extracted ``scale``).
+    ``rows`` spans all batch slices; per slice q is [S, head_dim],
+    k is [t_dim, head_dim], v is [t_dim, n_dim] with n_dim == head_dim
+    (the flash kernel's scratch/PV layout requires it)."""
+    impl = _resolve(impl)
+    s_pb = rows // batch
+    if impl == "ref":
+        q3 = jnp.asarray(q).reshape(batch, s_pb, head_dim)
+        k3 = jnp.asarray(k).reshape(batch, t_dim, head_dim)
+        v3 = jnp.asarray(v).reshape(batch, t_dim, n_dim)
+        s = jax.lax.dot_general(
+            q3, k3, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).astype(scores_dtype)
+        p = softmax_fn(s.reshape(scores_shape))
+        o = jax.lax.dot_general(
+            jnp.asarray(p).reshape(batch, s_pb, t_dim), v3,
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        return (o.reshape(rows, n_dim).astype(out_dtype),)
+    q4 = jnp.asarray(q).reshape(batch, s_pb, 1, head_dim)
+    k4 = jnp.asarray(k).reshape(batch, t_dim, 1, head_dim)
+    v4 = jnp.asarray(v).reshape(batch, t_dim, 1, n_dim)
+    o = _flash_pallas(q4, k4, v4, causal=False, window=0, scale=scale,
+                      interpret=(impl == "interpret"), **kw)
+    return (o.reshape(rows, n_dim).astype(out_dtype),)

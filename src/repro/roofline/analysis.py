@@ -14,7 +14,10 @@ scan-over-layers / scan-over-blocks models:
                          grad-time dlhs/drhs backward forms on train
                          traces — model the kernels' actual re-streaming
                          (fwd/dlhs: weight once per row block; drhs: both
-                         operands once per crossing grid block).
+                         operands once per crossing grid block; batched
+                         anchors price PER-BATCH row blocks against the
+                         full rhs, and flash-shaped attention segments
+                         charge zero bytes for the score matrix).
   * ``analytic_bytes``   the kernel-aware HBM-traffic floor (params,
                          optimizer, activation streams, caches) — what the
                          Pallas/TPU execution actually streams.

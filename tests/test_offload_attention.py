@@ -1,0 +1,152 @@
+"""Flash-shaped anchored segments: QK^T -> scale/softmax -> PV as ONE
+near-bank launch.
+
+The batched-anchors PR acceptance contract:
+  * the attention prefill chain plans as a SINGLE anchored segment
+    (``form=flash``): the batched dlhs QK^T anchor's row-softmaxed
+    accumulator becomes the PV anchor's streamed lhs, and the [S, T]
+    score matrix contributes ZERO bytes to ``Segment.io_bytes``
+  * modeled traffic reduction on the chain is >= 4x (the bench commits
+    this same floor as a MUST_FUSE row)
+  * forward and gradient parity against plain jax, f32 and bf16, on
+    GQA head-group shapes (num_heads=16 / num_kv_heads=8 / head_dim=128
+    per ``configs/qwen3_1_7b.py``, scaled down for the interpreter)
+  * near-miss chains (masked scores, mismatched value lanes) still plan
+    correctly as ordinary segments — correctness never depends on the
+    flash upgrade
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpu_offload, offload_report
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=dtype)
+
+
+def _attn(q, k, v):
+    scale = jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k) / scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def _qkv(b=2, h=4, s=32, d=16, dtype=jnp.float32):
+    return (_rand((b, h, s, d), 0, dtype), _rand((b, h, s, d), 1, dtype),
+            _rand((b, h, s, d), 2, dtype))
+
+
+def _check(fn, *args, rtol=1e-5, atol=1e-5):
+    got = mpu_offload(fn, bulk_threshold=64, impl="interpret")(*args)
+    want = fn(*args)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+def test_attention_plans_as_single_flash_segment():
+    q, k, v = _qkv()
+    plan = offload_report(_attn, q, k, v, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    mm = plan.segments[0].matmul
+    assert mm is not None and mm.flash is not None
+    assert mm.form == "dlhs" and mm.batch_shape == (2, 4)
+    d = [d for d in plan.decisions if d.fused]
+    assert d and d[0].form == "flash" and d[0].batch == (2, 4)
+
+
+def test_attention_traffic_reduction_at_least_4x():
+    """The acceptance floor: the fused plan moves >= 4x fewer modeled
+    bytes than the unfused chain because the score matrix never
+    round-trips HBM (zero bytes in ``Segment.io_bytes``)."""
+    q, k, v = _qkv(b=2, h=2, s=128, d=32)
+    plan = offload_report(_attn, q, k, v, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    assert plan.segments[0].matmul.flash is not None
+    ratio = plan.traffic_reduction
+    assert ratio >= 4.0, f"flash traffic reduction {ratio:.2f}x < 4x"
+    # the fused bytes stay below even ONE round-trip of the score matrix
+    score_bytes = 2 * 2 * 128 * 128 * 4
+    assert plan.fused_hbm_bytes < 2 * score_bytes
+
+
+def test_attention_forward_parity_f32():
+    _check(_attn, *_qkv())
+
+
+def test_attention_forward_parity_bf16():
+    q, k, v = _qkv(dtype=jnp.bfloat16)
+    _check(_attn, q, k, v, rtol=2e-2, atol=2e-2)
+
+
+def test_attention_grad_parity_f32():
+    q, k, v = _qkv()
+    w = mpu_offload(_attn, bulk_threshold=64, impl="interpret")
+    g = jax.grad(lambda *a: (w(*a) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    r = jax.grad(lambda *a: (_attn(*a) ** 2).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g, r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_attention_grad_parity_bf16_gqa_shape():
+    """bf16 grads on a GQA head-group shape: num_heads=16 grouped over
+    num_kv_heads=8 (kv repeated per group, as qwen3_1_7b lowers it),
+    scaled to interpreter-friendly extents."""
+    b, nq, nkv, s, d = 2, 4, 2, 16, 16
+
+    def gqa(q, k, v):
+        k = jnp.repeat(k, nq // nkv, axis=1)
+        v = jnp.repeat(v, nq // nkv, axis=1)
+        return _attn(q, k, v)
+
+    q = _rand((b, nq, s, d), 0, jnp.bfloat16)
+    k = _rand((b, nkv, s, d), 1, jnp.bfloat16)
+    v = _rand((b, nkv, s, d), 2, jnp.bfloat16)
+    w = mpu_offload(gqa, bulk_threshold=64, impl="interpret")
+    g = jax.grad(lambda *a: (w(*a).astype(jnp.float32) ** 2).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    r = jax.grad(lambda *a: (gqa(*a).astype(jnp.float32) ** 2).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    for name, a, b_ in zip("qkv", g, r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=5e-2, atol=5e-2,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_masked_attention_does_not_flash_but_matches():
+    """An additive mask between scale and softmax breaks the pure
+    scale/softmax pattern: the chain must NOT upgrade to flash, and the
+    offloaded result must still match plain jax exactly."""
+    def masked(q, k, v, m):
+        s = jnp.einsum("bhsd,bhtd->bhst", q, k) * 0.25 + m
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+    q, k, v = _qkv()
+    m = (_rand((2, 4, 32, 32), 3) > 0).astype(jnp.float32) * -1e9
+    plan = offload_report(masked, q, k, v, m, bulk_threshold=64)
+    assert all(s.matmul is None or s.matmul.flash is None
+               for s in plan.segments)
+    _check(masked, q, k, v, m)
+
+
+def test_mismatched_value_lanes_do_not_flash_but_match():
+    """The flash kernel's PV tile requires the value lane width to equal
+    the q head dim; other widths stay two ordinary anchored segments."""
+    def fn(q, k, v):
+        s = jnp.einsum("bhsd,bhtd->bhst", q, k) * 0.25
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bhte->bhse", p, v)
+
+    q, k, _ = _qkv()
+    v = _rand((2, 4, 32, 8), 2)          # Dv=8 != D=16
+    plan = offload_report(fn, q, k, v, bulk_threshold=64)
+    assert all(s.matmul is None or s.matmul.flash is None
+               for s in plan.segments)
+    _check(fn, q, k, v)

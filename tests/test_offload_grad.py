@@ -157,6 +157,58 @@ def test_bwd_plans_are_replanned_through_rewriter():
         "the cotangent program must fuse segments, not fall back"
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_anchor_grads_match(dtype):
+    """grad through a batched fwd anchor: the cotangent jaxpr re-plans
+    into batched dlhs (dx) and drhs (dw) anchors, and all three
+    per-batch-slice kernels must match plain jax."""
+    def fn(x, w):
+        return (jnp.tanh(jnp.einsum("bmk,bkn->bmn", x, w)) ** 2).sum()
+
+    x = _rand((4, 32, 16), 0, dtype)
+    w = _rand((4, 16, 8), 1, dtype) * 0.1
+    wrapped = mpu_offload(fn, bulk_threshold=64, impl="interpret")
+    g = jax.grad(wrapped, argnums=(0, 1))(x, w)
+    r = jax.grad(fn, argnums=(0, 1))(x, w)
+    for name, a, b in zip(("dx", "dw"), g, r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   err_msg=f"{name} mismatch",
+                                   **_tol(dtype))
+
+
+def test_user_custom_vjp_rule_survives_offload():
+    """``_flatten_calls`` must NOT inline ``custom_vjp_call`` bodies:
+    inlining would silently discard the user's backward rule and
+    differentiate the primal body instead.  The rule here is
+    deliberately NOT the primal's true gradient, so this test fails
+    loudly if the rule is ever dropped again (the former caveat at the
+    ``_CALL_BODY_PARAM`` table)."""
+    @jax.custom_vjp
+    def f(x):
+        return jnp.tanh(x)
+
+    def f_fwd(x):
+        return jnp.tanh(x), x
+
+    def f_bwd(res, g):
+        return (g * 7.0,)                # NOT d tanh: detects inlining
+
+    f.defvjp(f_fwd, f_bwd)
+
+    def prog(x):
+        return (f(x) * 2.0 + 1.0).sum()
+
+    x = _rand((8, 128))
+    w = mpu_offload(prog, bulk_threshold=64, impl="interpret")
+    np.testing.assert_allclose(np.asarray(w(x)), np.asarray(prog(x)),
+                               rtol=1e-5, atol=1e-5)
+    g = jax.grad(w)(x)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.full_like(np.asarray(x), 14.0),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_offloaded_train_step_matches_plain():
     """make_train_step(offload=True) wraps the un-differentiated loss
     and the optimizer update; one step must match the plain step."""

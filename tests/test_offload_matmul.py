@@ -10,16 +10,20 @@ The PR-3 acceptance contract, extended by the backward-anchoring PR:
     weight read column-major) and dw = xT @ g (drhs, M-innermost
     accumulation; jax's adjacent transpose absorbed), with a
     weight-side dequant-cast prologue on the forward form
-  * disqualified contractions (batch dims, rank>2 rhs) stay far —
-    correctness never depends on anchoring
+  * batched contractions ANCHOR since the batched-anchors PR: leading,
+    aligned batch dims become outer grid axes (all three forms), and a
+    batched QK^T -> scale/softmax -> PV pair fuses flash-shaped;
+    disqualified contractions (misaligned batches, rank>2 rhs) stay
+    far — correctness never depends on anchoring
   * lane-axis ``reduce_sum``/``reduce_max`` fuse INTO segments as
     (rows, 1) row statistics, so rmsnorm- and softmax-shaped chains are
     a single segment end to end
   * segment-boundary donation keeps working across anchored segments
     (epilogue operands that die at the segment become Pallas
     ``input_output_aliases``)
-  * interior broadcasts ([B,1,S,1,D]) still conservatively split — the
-    ROADMAP limitation is guarded, not silently miscompiled
+  * interior broadcasts ([B,1,S,1,D]) fuse via the "bcast" operand role
+    (block-index decomposition over the output's leading dims) — the
+    former conservative split is gone
 """
 import jax
 import jax.numpy as jnp
@@ -187,17 +191,52 @@ def test_bare_matmul_is_not_anchored():
     _check(fn, x, w)
 
 
-def test_batched_dots_stay_far():
-    """Batch dims are not anchorable and stay far; the transposed
-    grad-time forms ANCHOR since the backward-anchoring PR (see the
-    dGRAD tests below)."""
+def test_batched_dots_anchor():
+    """Batch dims became outer grid axes in the batched-anchors PR:
+    leading, aligned batch dims on both operands admit, the batch axes
+    fold into the segment's row extent, and the rhs re-streams per
+    batch slice (here: an attention-shaped QK^T, the dlhs form)."""
     def batched(q, k):
         return jnp.einsum("bsh,bth->bst", q, k) * 2.0
 
     q, k = _rand((4, 16, 32)), _rand((4, 16, 32), 1)
     plan = offload_report(batched, q, k, bulk_threshold=64)
-    assert all(s.matmul is None for s in plan.segments)
+    assert len(plan.segments) == 1
+    mm = plan.segments[0].matmul
+    assert mm is not None and mm.form == "dlhs"
+    assert mm.batch == 4 and mm.batch_shape == (4,)
+    assert plan.segments[0].rows == 4 * 16
     _check(batched, q, k)
+
+
+def test_batched_fwd_dot_anchors():
+    """The fwd form with batch dims: x[B,M,K] @ w[B,K,N] plus an
+    elementwise epilogue is one anchored segment per-batch-slice."""
+    def fn(x, w):
+        return jnp.tanh(jnp.einsum("bmk,bkn->bmn", x, w))
+
+    x, w = _rand((4, 32, 16)), _rand((4, 16, 8), 1) * 0.1
+    plan = offload_report(fn, x, w, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    mm = plan.segments[0].matmul
+    assert mm is not None and mm.form == "fwd" and mm.batch == 4
+    _check(fn, x, w)
+
+
+def test_batched_dot_misaligned_batches_stay_far():
+    """Only leading, aligned batch dims qualify: a contraction whose
+    batch axes differ between operands still falls far (correctness
+    never depends on anchoring)."""
+    def fn(x, w):
+        # rhs batch axis is NOT leading: dimension_numbers put lhs batch
+        # at 0 but rhs batch at 1
+        return jax.lax.dot_general(
+            x, w, (((2,), (0,)), ((0,), (1,)))) * 2.0
+
+    x, w = _rand((4, 16, 32)), _rand((32, 4, 8), 1)
+    plan = offload_report(fn, x, w, bulk_threshold=64)
+    assert all(s.matmul is None for s in plan.segments)
+    _check(fn, x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -466,28 +505,39 @@ def test_reduced_stat_as_segment_output():
 
 
 # ---------------------------------------------------------------------------
-# interior broadcasts: the guarded ROADMAP limitation
+# interior broadcasts: fixed by the batched-anchors PR
 # ---------------------------------------------------------------------------
 
-def test_interior_broadcast_conservatively_splits():
+def test_interior_broadcast_fuses():
     """[B,1,S,1,D] against [B,T,S,U,D] has two non-adjacent broadcast
-    dims — not expressible as one 2-D block index map.  The planner must
-    refuse to fuse the eqn (split, don't miscompile) and the offloaded
-    result must match the reference exactly."""
+    dims.  With the "bcast" operand role the row-block index decomposes
+    over the output's leading dims and strides only the operand's
+    non-broadcast dims, so the whole chain fuses as ONE segment instead
+    of conservatively splitting (the former ROADMAP limitation)."""
     def fn(a, m):
         return jnp.tanh(a) * m + a * 0.5
 
     a = _rand((2, 3, 8, 5, 16))
     m = _rand((2, 1, 8, 1, 16), 1)
     plan = offload_report(fn, a, m, bulk_threshold=64)
-    closed = jax.make_jaxpr(fn)(a, m)
-    mul_idx = {i for i, e in enumerate(closed.jaxpr.eqns)
-               if e.primitive.name == "mul"
-               and any(getattr(v, "aval", None) is not None
-                       and tuple(v.aval.shape) == (2, 1, 8, 1, 16)
-                       for v in e.invars)}
-    assert mul_idx, "expected an interior-broadcast mul in the jaxpr"
-    seg_members = {i for s in plan.segments for i in s.all_eqn_idx}
-    assert not (mul_idx & seg_members), \
-        "interior-broadcast operand must end the segment"
+    assert len(plan.segments) == 1
+    roles = {s.role for s in plan.segments[0].operand_specs}
+    assert "bcast" in roles, f"expected a bcast operand, got {roles}"
+    _check(fn, a, m)
+
+
+def test_interior_broadcast_middle_dim_fuses():
+    """The other bcast layout: the broadcast dim is interior but the
+    operand's innermost leading dim is NOT broadcast ([B,1,S,D] against
+    [B,T,S,D]) — neither rep (rows don't repeat contiguously) nor tile
+    (not periodic across batches), so only the bcast role fits."""
+    def fn(a, m):
+        return jnp.tanh(a) * m + a * 0.5
+
+    a = _rand((2, 6, 8, 16))
+    m = _rand((2, 1, 8, 16), 1)
+    plan = offload_report(fn, a, m, bulk_threshold=64)
+    assert len(plan.segments) == 1
+    roles = {s.role for s in plan.segments[0].operand_specs}
+    assert "bcast" in roles, f"expected a bcast operand, got {roles}"
     _check(fn, a, m)

@@ -131,6 +131,30 @@ def test_cost_declines_bare_grad_dot_keeps_gemm_fused():
     assert d.fused and d.near_us < d.far_us
 
 
+def test_cost_prices_batched_attention_anchor_near_below_far():
+    """Cost mode on an [8,8,512,64] attention prefill: the flash-shaped
+    segment's modeled near bytes (score matrix never in HBM) price
+    strictly below the far chain's per-eqn round-trips, so the cost
+    backend FUSES the batched anchor."""
+    def attn(q, k, v):
+        s = jnp.einsum("bhsd,bhtd->bhst", q, k) * 0.125
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+    q = _rand((8, 8, 512, 64))
+    k = _rand((8, 8, 512, 64), 1)
+    v = _rand((8, 8, 512, 64), 2)
+    plan = offload_report(attn, q, k, v, policy=OffloadPolicy(mode="cost"))
+    assert len(plan.segments) == 1
+    mm = plan.segments[0].matmul
+    assert mm is not None and mm.flash is not None
+    assert mm.batch == 64 and mm.batch_shape == (8, 8)
+    d = [d for d in plan.decisions if d.fused][0]
+    assert d.form == "flash" and d.batch == (8, 8)
+    assert d.near_bytes < d.far_bytes and d.near_us < d.far_us
+    assert plan.traffic_reduction >= 4.0
+
+
 def test_cost_matches_greedy_segment_counts_on_fusing_chains():
     x = _rand((4096, 256))
     y = _rand((4096, 256), 1)
