@@ -1,0 +1,308 @@
+"""Serving benchmark: paged continuous batching vs the fixed-slot engine.
+
+Open-loop synthetic workload (deterministic arrival schedule, prompts
+drawn from a fixed rng) through both engines **at equal KV-cache
+memory**:
+
+* ``FixedSlotEngine`` pins ``slots_fixed * max_len`` KV positions per
+  layer whether or not tokens exist;
+* the paged ``Engine`` gets the same position budget as a page pool
+  (``num_pages * page_size == slots_fixed * max_len``) but twice the
+  concurrency — pages track live tokens, so more requests fit the same
+  memory.  That is the continuous-batching claim, and the bench holds
+  memory constant so the speedup is attributable to paging alone.
+
+Reported per engine: tokens/s (wall clock over the full workload) and
+p50/p99 per-token latency (the wall time of the decode step that
+emitted each token).  Deterministic companions:
+
+* **KV traffic model**: per decode step the dense engine streams
+  ``slots * capacity`` cache positions per attention layer (its kernel
+  grids over the padded cache; masked chunks still stream).  The paged
+  engine streams only allocated pages — table tails point at the
+  reserved scratch page, which stays in the activated row buffer (the
+  near-bank re-reference the MPU row-locality argument is about) and
+  costs no new DRAM traffic.  The positions-streamed ratio is exact,
+  machine-independent, and ratcheted.
+* **Exactness**: both engines must emit identical greedy tokens.
+* **Zero-retrace**: the paged engine must finish the whole churning
+  workload with one decode trace/plan and frozen admit buckets.
+
+``MUST_SERVE`` carries the committed floors; violating any floor exits
+non-zero (CI fails without needing the artifact), and the committed
+``BENCH_serve.json`` ratchets the deterministic traffic ratio against
+the last recorded run.  ``--smoke`` shrinks the workload for per-push
+CI freshness; ``--csv`` emits machine-readable rows; under GitHub
+Actions the one-liner (and any regression) lands in
+``$GITHUB_STEP_SUMMARY``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve import Engine, FixedSlotEngine, Request  # noqa: E402
+
+ARTIFACT = ROOT / "BENCH_serve.json"
+
+SCHEMA_VERSION = 1
+
+# Committed serving contract.  Deterministic floors are exact
+# (positions-streamed model, token equality, trace counters); the
+# wall-clock speedup floor is set well under the measured value so CI
+# machine jitter cannot trip it, but a paged engine SLOWER than the
+# fixed-slot baseline at equal memory still fails.
+MUST_SERVE = {
+    "speedup_floor": 1.0,          # paged tokens/s / fixed tokens/s
+    "traffic_floor": 2.0,          # modeled KV positions streamed ratio
+    "max_step_traces": 1,          # decode signature is stable
+    "max_admit_traces": 8,         # <= one per pow2 prompt bucket
+    "exact_tokens": True,          # paged greedy == fixed-slot greedy
+}
+
+
+def _workload(n_requests: int, seed: int = 0):
+    """Deterministic open-loop workload: arrival steps + mixed-length
+    prompts.  Arrivals are independent of completions (open loop) but
+    scheduled in engine steps so the run is reproducible."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals = [], []
+    t = 0
+    for i in range(n_requests):
+        n = int(rng.integers(6, 49))
+        prompt = rng.integers(1, 250, size=n).astype(np.int32)
+        reqs.append(Request(prompt, max_new_tokens=16, rid=i))
+        t += int(rng.integers(0, 3))     # 0-2 steps between arrivals
+        arrivals.append(t)
+    return reqs, arrivals
+
+
+def _run_engine(eng, reqs, arrivals, *, traffic_fn):
+    """Drive one engine through the open-loop schedule.  Returns
+    (tokens, per-token step latencies, modeled positions streamed)."""
+    done = {r.rid: [] for r in reqs}
+    latencies = []
+    positions_streamed = 0
+    queue = list(zip(arrivals, reqs))
+    step_i = 0
+    requeue = getattr(eng, "_requeue", None)
+    t0 = time.perf_counter()
+    while queue or (requeue and len(requeue)) or _busy(eng):
+        while requeue and len(requeue) and eng.admit(requeue[0]):
+            requeue.pop(0)
+        while queue and queue[0][0] <= step_i and eng.admit(queue[0][1]):
+            queue.pop(0)
+        positions_streamed += traffic_fn(eng)
+        s0 = time.perf_counter()
+        made = eng.step()
+        dt = time.perf_counter() - s0
+        for rid, tok in made:
+            done[rid].append(tok)
+            latencies.append(dt)
+        step_i += 1
+    wall = time.perf_counter() - t0
+    return done, latencies, positions_streamed, wall
+
+
+def _busy(eng) -> bool:
+    if isinstance(eng, Engine):
+        return bool(eng._host_active.any())
+    return bool(eng.active.any())
+
+
+def _fixed_traffic(eng: FixedSlotEngine) -> int:
+    """Dense decode streams the padded cache for every slot each step
+    (its kernel masks dead positions but still grids over them)."""
+    if not eng.active.any():
+        return 0
+    return eng.slots * eng.max_len
+
+
+def _paged_traffic(eng: Engine) -> int:
+    """Paged decode streams allocated pages only; unallocated table
+    entries re-reference the scratch page (stays in the activated row
+    buffer — no new DRAM traffic)."""
+    if not eng._decode_active.any():
+        return 0
+    return sum(eng.pool.allocated(s) * eng.page_size
+               for s in range(eng.slots) if eng._decode_active[s])
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def run(write_artifact: bool = True, n_requests: int = 24,
+        seed: int = 0) -> dict:
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              num_layers=2, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slots_fixed, max_len, page_size = 4, 128, 16
+    kv_budget = slots_fixed * max_len           # positions per layer
+    num_pages = 1 + kv_budget // page_size
+    slots_paged = 2 * slots_fixed               # same memory, 2x batch
+
+    reqs, arrivals = _workload(n_requests, seed)
+    total_new = sum(r.max_new_tokens for r in reqs)
+
+    fixed = FixedSlotEngine(cfg, params, slots=slots_fixed,
+                            max_len=max_len)
+    f_done, f_lat, f_pos, f_wall = _run_engine(
+        fixed, [dataclasses.replace(r) for r in reqs], arrivals,
+        traffic_fn=_fixed_traffic)
+
+    paged = Engine(cfg, params, slots=slots_paged, max_len=max_len,
+                   page_size=page_size, num_pages=num_pages,
+                   offload=True)
+    p_done, p_lat, p_pos, p_wall = _run_engine(
+        paged, [dataclasses.replace(r) for r in reqs], arrivals,
+        traffic_fn=_paged_traffic)
+
+    exact = all(p_done[r.rid] == f_done[r.rid] for r in reqs)
+    sv = paged.serve_stats
+    st = paged.offload_stats
+
+    result = {
+        "schema_version": SCHEMA_VERSION,
+        "config": {
+            "arch": "qwen3-1.7b/reduced", "num_layers": 2,
+            "slots_fixed": slots_fixed, "slots_paged": slots_paged,
+            "max_len": max_len, "page_size": page_size,
+            "num_pages": num_pages, "kv_budget_positions": kv_budget,
+            "n_requests": n_requests, "total_new_tokens": total_new,
+        },
+        "fixed": {
+            "tokens_per_s": total_new / f_wall,
+            "p50_token_ms": _pct(f_lat, 50) * 1e3,
+            "p99_token_ms": _pct(f_lat, 99) * 1e3,
+            "wall_s": f_wall,
+            "positions_streamed": f_pos,
+        },
+        "paged": {
+            "tokens_per_s": total_new / p_wall,
+            "p50_token_ms": _pct(p_lat, 50) * 1e3,
+            "p99_token_ms": _pct(p_lat, 99) * 1e3,
+            "wall_s": p_wall,
+            "positions_streamed": p_pos,
+            "preemptions": sv["preemptions"],
+            "admit_traces": sv["admit_traces"],
+            "step_traces": sv["step_traces"],
+            "offload_traces": st["traces"],
+            "offload_plan_misses": st["plan_misses"],
+        },
+        "speedup": f_wall / p_wall,
+        "traffic_reduction": f_pos / max(p_pos, 1),
+        "exact_tokens": exact,
+    }
+    if write_artifact:
+        ARTIFACT.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def check_regressions(res: dict, baseline: dict | None = None) -> list[str]:
+    bad = []
+    if res["speedup"] < MUST_SERVE["speedup_floor"]:
+        bad.append(f"paged speedup {res['speedup']:.2f}x < committed "
+                   f"floor {MUST_SERVE['speedup_floor']:.2f}x")
+    if res["traffic_reduction"] < MUST_SERVE["traffic_floor"]:
+        bad.append(f"KV traffic reduction {res['traffic_reduction']:.2f}x "
+                   f"< committed floor {MUST_SERVE['traffic_floor']:.2f}x")
+    if res["paged"]["step_traces"] > MUST_SERVE["max_step_traces"] or \
+            res["paged"]["offload_traces"] > MUST_SERVE["max_step_traces"]:
+        bad.append(f"decode retraced: step_traces="
+                   f"{res['paged']['step_traces']} offload_traces="
+                   f"{res['paged']['offload_traces']} (committed: 1)")
+    if res["paged"]["admit_traces"] > MUST_SERVE["max_admit_traces"]:
+        bad.append(f"admit traced {res['paged']['admit_traces']} times "
+                   f"(committed: <= {MUST_SERVE['max_admit_traces']} "
+                   f"pow2 buckets)")
+    if MUST_SERVE["exact_tokens"] and not res["exact_tokens"]:
+        bad.append("paged greedy tokens differ from fixed-slot tokens")
+    if baseline:
+        prev = baseline.get("traffic_reduction", 0.0)
+        if res["traffic_reduction"] < prev * 0.98:
+            bad.append(f"traffic reduction {res['traffic_reduction']:.2f}x"
+                       f" < baseline {prev:.2f}x (deterministic ratchet)")
+    return bad
+
+
+def _load_baseline() -> dict | None:
+    if not ARTIFACT.exists():
+        return None
+    try:
+        prev = json.loads(ARTIFACT.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    return prev if prev.get("schema_version") == SCHEMA_VERSION else None
+
+
+def _one_liner(res: dict) -> str:
+    return (f"paged {res['paged']['tokens_per_s']:.1f} tok/s vs fixed "
+            f"{res['fixed']['tokens_per_s']:.1f} tok/s "
+            f"(speedup {res['speedup']:.2f}x at equal KV memory, "
+            f"KV traffic {res['traffic_reduction']:.2f}x lower, "
+            f"p99 {res['paged']['p99_token_ms']:.1f}ms vs "
+            f"{res['fixed']['p99_token_ms']:.1f}ms, "
+            f"retraces {res['paged']['offload_traces']}, "
+            f"artifact: {ARTIFACT.name})")
+
+
+def _print_csv(res: dict) -> None:
+    cols = ["engine", "tokens_per_s", "p50_token_ms", "p99_token_ms",
+            "wall_s", "positions_streamed"]
+    print(",".join(cols))
+    for name in ("fixed", "paged"):
+        r = res[name]
+        print(",".join([name] + [f"{r[c]:.4f}" for c in cols[1:]]))
+
+
+def _write_step_summary(res: dict, regressed: list[str]) -> None:
+    import os
+
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["### serve bench", "", f"`{_one_liner(res)}`", ""]
+    if regressed:
+        lines += ["**SERVING REGRESSION**", ""]
+        lines += [f"- {r}" for r in regressed]
+        lines.append("")
+    try:
+        with open(path, "a") as fh:
+            fh.write("\n".join(lines) + "\n")
+    except OSError:
+        pass
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    csv = "--csv" in argv
+    baseline = _load_baseline()      # before run() overwrites the artifact
+    # --smoke shrinks the workload, so its deterministic traffic ratio is
+    # not comparable to the committed full-run baseline: floors still
+    # apply, but the artifact/ratchet stay full-run only
+    res = run(write_artifact=not smoke, n_requests=12 if smoke else 24)
+    if csv:
+        _print_csv(res)
+    print(_one_liner(res))
+    regressed = check_regressions(res, None if smoke else baseline)
+    _write_step_summary(res, regressed)
+    if regressed:
+        print("SERVING REGRESSION: " + "; ".join(regressed),
+              file=sys.stderr)
+        sys.exit(1)

@@ -13,6 +13,7 @@ from repro.kernels.ops import (
     fused_matmul_segment,
     fused_segment,
     fused_segment_grid,
+    paged_decode_attention,
     rmsnorm,
     rotary,
     ssd_scan,
@@ -33,6 +34,7 @@ __all__ = [
     "fused_matmul_segment",
     "fused_segment",
     "fused_segment_grid",
+    "paged_decode_attention",
     "rmsnorm",
     "rotary",
     "ssd_scan",

@@ -1,12 +1,27 @@
-"""Split-KV decode attention (flash-decoding) as a Pallas TPU kernel.
+"""Split-KV decode attention (flash-decoding) as Pallas TPU kernels.
 
 The canonical near-bank op: one query token streams the whole KV cache
-(arithmetic intensity ~1 FLOP/byte), so performance == HBM bandwidth.
-The kernel tiles the cache over the grid's sequential axis; the partial
+(arithmetic intensity ~1 FLOP/byte), so performance == bank bandwidth.
+Both kernels tile the cache over the grid's sequential axis; the partial
 (acc, m, l) triple lives in VMEM scratch — exactly MPU's near-bank
 register file holding partial results while the "bank" (cache block)
 streams past.  ``lengths`` rides in SMEM via scalar prefetch, mirroring
 MPU's far-bank address path (LSU) vs near-bank value path split.
+
+Two cache layouts:
+
+* ``decode_attention`` — one contiguous cache per sequence.  The pool
+  should be kept **head-major** ``[B, NK, T, H]`` with ``T`` padded to a
+  block multiple **once at allocation** (``head_major=True``): the
+  kernel then reads the pool in place.  The legacy token-major
+  ``[B, T, NK, H]`` layout still works but costs a full
+  ``jnp.pad``+``transpose`` copy of the cache on every call.
+* ``paged_decode_attention`` — the cache is a global pool of fixed-size
+  pages ``[P, NK, page, H]`` indexed per sequence by a ``block_tables``
+  row (MPU's "multiple activated row-buffers" told in JAX): the table
+  is scalar-prefetched next to ``lengths`` and each grid step DMAs one
+  *used* page through its block index map, so a request streams only
+  ``ceil(len/page)`` pages instead of the padded max-length cache.
 """
 from __future__ import annotations
 
@@ -63,27 +78,41 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("kv_block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("kv_block", "head_major", "interpret"))
 def decode_attention(
     q: jnp.ndarray,        # [B, NQ, H]
-    k_cache: jnp.ndarray,  # [B, T, NK, H]
-    v_cache: jnp.ndarray,  # [B, T, NK, H]
+    k_cache: jnp.ndarray,  # [B, T, NK, H] (or [B, NK, T, H] head-major)
+    v_cache: jnp.ndarray,  # same layout as k_cache
     lengths: jnp.ndarray,  # [B] int32
     *,
     kv_block: int = 512,
+    head_major: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     b, nq, h = q.shape
-    t, nk = k_cache.shape[1], k_cache.shape[2]
+    if head_major:
+        # pool layout [B, NK, T, H], T padded once at allocation: the
+        # kernel reads the cache in place — no per-step copy.
+        nk, t = k_cache.shape[1], k_cache.shape[2]
+        kv_block = min(kv_block, t)
+        if t % kv_block:                       # fallback, off the hot path
+            t_pad = (-t) % kv_block
+            k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+            v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        kr, vr = k_cache, v_cache
+        st = kr.shape[2]
+    else:
+        t, nk = k_cache.shape[1], k_cache.shape[2]
+        kv_block = min(kv_block, t)
+        t_pad = (-t) % kv_block
+        kp = jnp.pad(k_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        st = t + t_pad
+        kr = kp.transpose(0, 2, 1, 3)  # [B, NK, T, H]
+        vr = vp.transpose(0, 2, 1, 3)
     g = nq // nk
-    kv_block = min(kv_block, t)
-    t_pad = (-t) % kv_block
-    kp = jnp.pad(k_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
-    vp = jnp.pad(v_cache, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
-    st = t + t_pad
     qr = q.reshape(b, nk, g, h)
-    kr = kp.transpose(0, 2, 1, 3)  # [B, NK, T, H]
-    vr = vp.transpose(0, 2, 1, 3)
     grid = (b, nk, st // kv_block)
 
     out = pl.pallas_call(
@@ -112,4 +141,107 @@ def decode_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(b, nq, h)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: block-table-indexed page pool
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *,
+                         page_size: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    length = lengths_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_start = pi * page_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # [G, H]
+        k = k_ref[0, 0].astype(jnp.float32)      # [page, H]
+        v = v_ref[0, 0].astype(jnp.float32)      # [page, H]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, page]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jnp.ndarray,             # [B, NQ, H]
+    k_pages: jnp.ndarray,       # [P, NK, page, H] global page pool
+    v_pages: jnp.ndarray,       # [P, NK, page, H]
+    block_tables: jnp.ndarray,  # [B, NP] int32 page ids per sequence
+    lengths: jnp.ndarray,       # [B] int32 valid cache lengths
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention over a paged KV pool.
+
+    ``block_tables[b, i]`` names the pool page holding positions
+    ``[i*page, (i+1)*page)`` of sequence ``b``; rows shorter than NP
+    pad with any valid page id (masked by ``lengths``).  The table is
+    scalar-prefetched (SMEM) beside ``lengths`` and drives the K/V
+    block index maps — the far-bank address path picks which "row
+    buffer" (page) the near-bank value path streams next.
+    """
+    b, nq, h = q.shape
+    nk, page = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    g = nq // nk
+    qr = q.reshape(b, nk, g, h)
+    grid = (b, nk, n_pages)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page_size=page,
+                          scale=1.0 / (h ** 0.5)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, h),
+                             lambda bb, kh, pi, L, T: (bb, kh, 0, 0)),
+                pl.BlockSpec((1, 1, page, h),
+                             lambda bb, kh, pi, L, T: (T[bb, pi], kh, 0, 0)),
+                pl.BlockSpec((1, 1, page, h),
+                             lambda bb, kh, pi, L, T: (T[bb, pi], kh, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, h),
+                                   lambda bb, kh, pi, L, T: (bb, kh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, h), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nk, g, h), q.dtype),
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qr,
+      k_pages.reshape(-1, nk, page, h), v_pages.reshape(-1, nk, page, h))
     return out.reshape(b, nq, h)

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.adamw_update import adamw_update as _adamw_pallas
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.fused_elementwise import fused_elementwise as _fused_pallas
 from repro.kernels.fused_elementwise import fused_segment as _fused_seg_pallas
@@ -59,12 +62,27 @@ def flash_attention(q, k, v, *, causal=True, window=0, impl: Impl = "auto",
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, impl: Impl = "auto",
-                     **kw):
+                     head_major: bool = False, **kw):
     impl = _resolve(impl)
     if impl == "ref":
+        if head_major:                      # ref oracle is token-major
+            k_cache = k_cache.transpose(0, 2, 1, 3)
+            v_cache = v_cache.transpose(0, 2, 1, 3)
         return _ref.ref_decode_attention(q, k_cache, v_cache, lengths)
     return _decode_pallas(q, k_cache, v_cache, lengths,
+                          head_major=head_major,
                           interpret=(impl == "interpret"), **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           impl: Impl = "auto", **kw):
+    """Decode attention over a paged KV pool (block-table indexed)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_paged_decode_attention(
+            q, k_pages, v_pages, block_tables, lengths)
+    return _paged_decode_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                interpret=(impl == "interpret"), **kw)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: Impl = "auto", **kw):

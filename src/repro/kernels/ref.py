@@ -65,6 +65,22 @@ def ref_decode_attention(q, k_cache, v_cache, lengths):
     return out.reshape(b, nq, h).astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, k_pages, v_pages, block_tables, lengths):
+    """q [B,NQ,H]; pages [P,NK,page,H]; block_tables [B,NP]; lengths [B].
+
+    Gathers each sequence's pages into a contiguous head-major cache and
+    applies masked decode attention — the semantic ground truth for the
+    paged Pallas kernel (which never materializes the gather)."""
+    b = q.shape[0]
+    nk, page, h = k_pages.shape[1:]
+    n_pages = block_tables.shape[1]
+    kg = k_pages[block_tables]           # [B, NP, NK, page, H]
+    vg = v_pages[block_tables]
+    k_cache = kg.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * page, nk, h)
+    v_cache = vg.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * page, nk, h)
+    return ref_decode_attention(q, k_cache, v_cache, lengths)
+
+
 def ref_ssd_scan(x, logd, dt, bmat, cmat, state0=None):
     """Sequential SSD oracle.  x [B,S,H,P]; logd,dt [B,S,H];
     bmat,cmat [B,S,N].  Returns (y [B,S,H,P], state [B,H,P,N])."""

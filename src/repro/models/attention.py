@@ -333,12 +333,20 @@ def attention_prefill_apply(
     positions: jnp.ndarray,       # [B, S]
     max_len: int,
     cache_dtype=jnp.bfloat16,
+    length: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Parallel prefill: full-sequence attention + KV cache capture.
 
     Returns (out [B,S,D], k_cache [B,T,NK,H], v_cache) with T = max_len
     (or the sliding window for SWA archs, arranged rolling so that decode
-    continues with slot = pos %% window)."""
+    continues with slot = pos %% window).
+
+    ``length`` (traced scalar): number of *real* tokens when the input
+    is right-padded to a shape bucket — the SWA rolling capture then
+    arranges by the real length so pad tokens never occupy a slot a
+    real token owns (dense capture needs no masking: pad entries sit at
+    positions >= length and decode overwrites them before its length
+    mask would ever admit them)."""
     b, s, _ = x.shape
     q, k, v = project_qkv(params, cfg, x, positions)
     layout = _attention_layout(cfg, b, s)
@@ -356,7 +364,19 @@ def attention_prefill_apply(
     w = cfg.sliding_window
     if w > 0:
         size = min(max_len, w)
-        if s >= size:
+        if s >= size and length is not None:
+            # length-aware rolling: slot j holds token t, the last real
+            # t with t % size == j; slots no real token reaches are
+            # zeroed (length <= size leaves slots j >= length empty —
+            # the same layout the unpadded s < size branch produces).
+            j = jnp.arange(size)
+            last = (length - 1) - (length - 1 - j) % size
+            valid = last >= 0
+            k_c = jnp.take(k, jnp.clip(last, 0, s - 1), axis=1)
+            v_c = jnp.take(v, jnp.clip(last, 0, s - 1), axis=1)
+            k_c = jnp.where(valid[None, :, None, None], k_c, 0)
+            v_c = jnp.where(valid[None, :, None, None], v_c, 0)
+        elif s >= size:
             # rolling arrangement: buf[slot] = token t, t = last with t%size==slot
             last = s - 1 - (s - 1 - jnp.arange(size)) % size
             k_c = jnp.take(k, last, axis=1)
@@ -370,6 +390,113 @@ def attention_prefill_apply(
         k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return out, k_c.astype(cache_dtype), v_c.astype(cache_dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: block-table indexed page pools
+# ---------------------------------------------------------------------------
+
+def gather_kv_pages(pages: jnp.ndarray, block_tables: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """[P, NK, page, H] pool + [B, NP] table -> token-major [B, T, NK, H]
+    contiguous view (T = NP * page).  Only the *bucketed* pages move —
+    the jnp analogue of the paged Pallas kernel's block index maps."""
+    b, n_pages = block_tables.shape
+    nk, page, h = pages.shape[1:]
+    g = pages[block_tables]              # [B, NP, NK, page, H]
+    return g.transpose(0, 1, 3, 2, 4).reshape(b, n_pages * page, nk, h)
+
+
+def write_kv_page_entries(pages: jnp.ndarray, new: jnp.ndarray,
+                          page_ids: jnp.ndarray, offsets: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """Scatter per-row entries into the pool: ``new`` [R, NK, H] lands at
+    ``pages[page_ids[r], :, offsets[r]]``.  Rows meant to be dropped
+    should point at the reserved scratch page 0."""
+    return pages.at[page_ids, :, offsets].set(new.astype(pages.dtype))
+
+
+def attention_decode_paged(
+    params: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,               # [B, 1, D] new token
+    pages_k: jnp.ndarray,         # [P, NK, page, H] global page pool
+    pages_v: jnp.ndarray,
+    pos: jnp.ndarray,             # [B] position of the new token
+    block_tables: jnp.ndarray,    # [B, NP] int32 (bucketed width)
+    active: jnp.ndarray,          # [B] bool — inactive rows write scratch
+    *,
+    kv_capacity: int,             # logical per-request cache size
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step against the paged pool: project the new token,
+    scatter its K/V into the owning page (inactive rows land in the
+    reserved scratch page 0), attend over the *bucketed* gathered pages.
+
+    Single-device path (the distributed engine uses the sequence-sharded
+    dense cache).  On TPU the gather never happens — the paged Pallas
+    kernel streams pages through block index maps."""
+    B = x.shape[0]
+    page = pages_k.shape[2]
+    q, k, v = project_qkv(params, cfg, x, pos[:, None])
+    if cfg.sliding_window > 0:
+        slot = pos % kv_capacity
+        lengths = jnp.minimum(pos + 1, kv_capacity)
+    else:
+        slot = jnp.minimum(pos, kv_capacity - 1)
+        lengths = pos + 1
+    lengths = jnp.where(active, lengths, 0)
+    pi = jnp.clip(slot // page, 0, block_tables.shape[1] - 1)
+    gp = jnp.where(active, block_tables[jnp.arange(B), pi], 0)
+    off = slot % page
+    pages_k = write_kv_page_entries(pages_k, k[:, 0], gp, off)
+    pages_v = write_kv_page_entries(pages_v, v[:, 0], gp, off)
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q[:, 0], pages_k, pages_v, block_tables, lengths)
+    else:
+        # slice the gather to the logical capacity: the bucketed table
+        # width rounds up to pow2 pages, and trimming the tail keeps the
+        # chunked online-softmax bit-identical to the dense-cache path
+        k_cache = gather_kv_pages(pages_k, block_tables)[:, :kv_capacity]
+        v_cache = gather_kv_pages(pages_v, block_tables)[:, :kv_capacity]
+        out = decode_attention(q[:, 0], k_cache, v_cache, lengths, window=0)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim)
+    return out @ params["wo"].astype(x.dtype), pages_k, pages_v
+
+
+def attention_prefill_chunk(
+    params: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,               # [1, C, D] prompt chunk (right-padded)
+    pages_k: jnp.ndarray,         # [P, NK, page, H]
+    pages_v: jnp.ndarray,
+    block_table: jnp.ndarray,     # [NP] int32 — this request's pages
+    ctx_len: jnp.ndarray,         # scalar: tokens already cached
+    n_valid: jnp.ndarray,         # scalar: real tokens in this chunk
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked prefill for dense (non-SWA) attention: write the chunk's
+    K/V into the request's pages, then attend the chunk's queries over
+    the gathered context+chunk.  Pad rows of the chunk scatter into the
+    scratch page and produce unused outputs."""
+    assert cfg.sliding_window == 0, "chunked prefill is dense-only"
+    _, c, _ = x.shape
+    page = pages_k.shape[2]
+    positions = (ctx_len + jnp.arange(c))[None]
+    q, k, v = project_qkv(params, cfg, x, positions)
+    pos_t = ctx_len + jnp.arange(c)
+    valid = jnp.arange(c) < n_valid
+    pi = jnp.clip(pos_t // page, 0, block_table.shape[0] - 1)
+    gp = jnp.where(valid, block_table[pi], 0)
+    off = pos_t % page
+    pages_k = write_kv_page_entries(pages_k, k[0], gp, off)
+    pages_v = write_kv_page_entries(pages_v, v[0], gp, off)
+    kg = gather_kv_pages(pages_k, block_table[None])   # [1, T, NK, H]
+    vg = gather_kv_pages(pages_v, block_table[None])
+    out = blockwise_attention(q, kg, vg, causal=True, window=0,
+                              q_offset=ctx_len)
+    out = out.reshape(1, c, cfg.num_heads * cfg.resolved_head_dim)
+    return out @ params["wo"].astype(x.dtype), pages_k, pages_v
 
 
 def _split_kv_decode_sharded(q, cache_k, cache_v, new_k, new_v, slot,

@@ -33,11 +33,15 @@ from repro.models.layers import (
 )
 from repro.models.transformer import (
     Cache,
+    attention_only_pattern,
     init_stack,
     init_stack_cache,
+    init_stack_cache_paged,
     stack_apply,
     stack_decode,
+    stack_decode_paged,
     stack_prefill,
+    stack_prefill_chunk,
 )
 
 
@@ -49,6 +53,10 @@ class Model(NamedTuple):
     prefill: Callable[..., tuple[jnp.ndarray, Cache]]
     decode_step: Callable[..., tuple[jnp.ndarray, Cache]]
     init_cache: Callable[..., Cache]
+    # paged serving surface (continuous batching engine)
+    init_paged_cache: Callable[..., Cache]
+    decode_step_paged: Callable[..., tuple[jnp.ndarray, Cache]]
+    prefill_chunk: Callable[..., tuple[jnp.ndarray, Cache]]
 
 
 def _compute_dtype(cfg: ModelConfig):
@@ -126,11 +134,17 @@ def build_model(cfg: ModelConfig) -> Model:
     def init_cache(batch: int, max_len: int) -> Cache:
         return init_stack_cache(cfg, batch, max_len, dtype=dtype)
 
-    def prefill(params: Params, batch: dict, max_len: int
+    def prefill(params: Params, batch: dict, max_len: int,
+                length: jnp.ndarray | None = None
                 ) -> tuple[jnp.ndarray, Cache]:
         """Parallel prefill: one full-sequence pass that computes the last
         token's logits AND captures the decode cache (KV / SSM / WKV
-        states) — the production prefill dataflow."""
+        states) — the production prefill dataflow.
+
+        ``length`` (traced scalar): real token count when ``tokens`` is
+        right-padded to a shape bucket.  The last-token logits are read
+        at the real end and the SWA rolling capture arranges by the real
+        length, so one trace serves every prompt in the bucket."""
         tokens = batch["tokens"]
         b, s = tokens.shape
         x = embed_apply(params["embed"], tokens, dtype)
@@ -144,10 +158,15 @@ def build_model(cfg: ModelConfig) -> Model:
             offset = prefix.shape[1]
         s_total = x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+        total_len = None if length is None else offset + length
         h, cache = stack_prefill(params["decoder"], cfg, x, positions,
                                  max_len, enc_memory=enc_memory,
-                                 cache_dtype=dtype)
-        h_last = rmsnorm_apply(params["final_ln"], h[:, -1:], cfg.norm_eps)
+                                 cache_dtype=dtype, length=total_len)
+        if total_len is None:
+            h_last = h[:, -1:]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(h, total_len - 1, 1, axis=1)
+        h_last = rmsnorm_apply(params["final_ln"], h_last, cfg.norm_eps)
         logits = lm_head_apply(params["embed"], h_last[:, 0], cfg.vocab_size)
         return logits, cache
 
@@ -162,4 +181,43 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = lm_head_apply(params["embed"], h[:, 0], cfg.vocab_size)
         return logits, cache
 
-    return Model(cfg, init, loss_fn, forward, prefill, decode_step, init_cache)
+    # ---------------- paged serving (continuous batching) ----------------
+    def init_paged_cache(slots: int, num_pages: int, page_size: int) -> Cache:
+        return init_stack_cache_paged(cfg, slots, num_pages, page_size,
+                                      dtype=dtype)
+
+    def decode_step_paged(params: Params, cache: Cache, token: jnp.ndarray,
+                          pos: jnp.ndarray, block_tables: jnp.ndarray,
+                          active: jnp.ndarray, *, max_len: int
+                          ) -> tuple[jnp.ndarray, Cache]:
+        """token/pos [B]; block_tables [B,NP]; active [B] bool.  Inactive
+        rows compute but write only the reserved scratch page (attention)
+        or freeze their state row (recurrent)."""
+        x = embed_apply(params["embed"], token[:, None], dtype)
+        h, cache = stack_decode_paged(params["decoder"], cfg, x, cache, pos,
+                                      block_tables, active, max_len=max_len)
+        h = rmsnorm_apply(params["final_ln"], h, cfg.norm_eps)
+        logits = lm_head_apply(params["embed"], h[:, 0], cfg.vocab_size)
+        return logits, cache
+
+    def prefill_chunk(params: Params, cache: Cache, tokens: jnp.ndarray,
+                      block_table: jnp.ndarray, ctx_len: jnp.ndarray,
+                      n_valid: jnp.ndarray) -> tuple[jnp.ndarray, Cache]:
+        """One prompt chunk [1, C] for a single request: scatter its K/V
+        into the request's pages and return the logits at the chunk's
+        last *real* token (meaningful only on the final chunk).  Dense
+        attention-only decoder stacks (no SWA / frontend / enc-dec)."""
+        assert not is_encdec and not has_frontend
+        assert cfg.sliding_window == 0 and attention_only_pattern(cfg)
+        x = embed_apply(params["embed"], tokens, dtype)
+        h, cache = stack_prefill_chunk(params["decoder"], cfg, x, cache,
+                                       block_table, ctx_len, n_valid)
+        h_last = jax.lax.dynamic_slice_in_dim(
+            h, jnp.maximum(n_valid - 1, 0), 1, axis=1)
+        h_last = rmsnorm_apply(params["final_ln"], h_last, cfg.norm_eps)
+        logits = lm_head_apply(params["embed"], h_last[:, 0], cfg.vocab_size)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step,
+                 init_cache, init_paged_cache, decode_step_paged,
+                 prefill_chunk)

@@ -34,7 +34,9 @@ from repro.models import ssm as ssm_mod
 from repro.models.attention import (
     attention_apply,
     attention_decode_apply,
+    attention_decode_paged,
     attention_prefill_apply,
+    attention_prefill_chunk,
     init_attention,
 )
 from repro.models.layers import (
@@ -120,13 +122,18 @@ def block_prefill_apply(params: Params, cfg: ModelConfig, kind: BlockKind,
                         x: jnp.ndarray, positions: jnp.ndarray,
                         max_len: int,
                         enc_memory: jnp.ndarray | None = None,
-                        cache_dtype=jnp.bfloat16
+                        cache_dtype=jnp.bfloat16,
+                        length: jnp.ndarray | None = None
                         ) -> tuple[jnp.ndarray, Cache]:
-    """Parallel prefill: full-sequence block + cache capture."""
+    """Parallel prefill: full-sequence block + cache capture.
+
+    ``length`` (traced scalar): real token count when the input is
+    right-padded to a shape bucket — see ``attention_prefill_apply``."""
     if kind in ("attention", "shared_attention"):
         h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
         y, k_c, v_c = attention_prefill_apply(
-            params["attn"], cfg, h, positions, max_len, cache_dtype)
+            params["attn"], cfg, h, positions, max_len, cache_dtype,
+            length=length)
         x = x + y
         if "cross" in params and enc_memory is not None:
             h = rmsnorm_apply(params["ln_cross"], x, cfg.norm_eps)
@@ -307,7 +314,8 @@ def stack_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                   positions: jnp.ndarray, max_len: int, *,
                   num_layers: int | None = None,
                   enc_memory: jnp.ndarray | None = None,
-                  cache_dtype=jnp.bfloat16
+                  cache_dtype=jnp.bfloat16,
+                  length: jnp.ndarray | None = None
                   ) -> tuple[jnp.ndarray, Cache]:
     """Parallel prefill through the stack, emitting the decode cache."""
     num_layers = cfg.num_layers if num_layers is None else num_layers
@@ -320,7 +328,7 @@ def stack_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray,
                   else period_params[str(p_idx)])
             h, caches[str(p_idx)] = block_prefill_apply(
                 bp, cfg, kind, h, positions, max_len, enc_memory,
-                cache_dtype)
+                cache_dtype, length)
         return h, caches
 
     if n_periods > 0:
@@ -333,7 +341,8 @@ def stack_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray,
         bp = (params["shared_attn"] if kind == "shared_attention"
               else params["rem"][str(p_idx)])
         x, rem_cache[str(p_idx)] = block_prefill_apply(
-            bp, cfg, kind, x, positions, max_len, enc_memory, cache_dtype)
+            bp, cfg, kind, x, positions, max_len, enc_memory, cache_dtype,
+            length)
     return x, {"stack": stack_cache, "rem": rem_cache}
 
 
@@ -371,4 +380,168 @@ def stack_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
         x, new_rem_cache[str(p_idx)] = block_decode_apply(
             bp, cfg, kind, x, cache["rem"][str(p_idx)], pos,
             enc_memory=enc_memory)
+    return x, {"stack": new_stack_cache, "rem": new_rem_cache}
+
+
+# ---------------------------------------------------------------------------
+# paged stack: attention KV in a global page pool, recurrent state per slot
+# ---------------------------------------------------------------------------
+
+def attention_only_pattern(cfg: ModelConfig) -> bool:
+    """True iff every block in the pattern carries a KV cache (no
+    recurrent state) — the precondition for chunked prefill."""
+    return all(k in ("attention", "shared_attention")
+               for k in cfg.block_pattern)
+
+
+def init_block_cache_paged(cfg: ModelConfig, kind: BlockKind, slots: int,
+                           num_pages: int, page_size: int,
+                           dtype=jnp.bfloat16) -> Cache:
+    """Per-block cache for the paged engine: attention kinds get a global
+    page pool ``[P, NK, page, H]`` shared by all slots (page 0 reserved
+    as write scratch); recurrent kinds keep per-slot state rows."""
+    if kind in ("attention", "shared_attention"):
+        h = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((num_pages, cfg.num_kv_heads, page_size, h), dtype),
+            "v": jnp.zeros((num_pages, cfg.num_kv_heads, page_size, h), dtype),
+        }
+    if kind == "mamba2":
+        return ssm_mod.init_mamba2_cache(cfg, slots, dtype)
+    if kind == "rwkv6":
+        return rwkv_mod.init_rwkv6_cache(cfg, slots, dtype)
+    raise ValueError(kind)
+
+
+def init_stack_cache_paged(cfg: ModelConfig, slots: int, num_pages: int,
+                           page_size: int, *, num_layers: int | None = None,
+                           dtype=jnp.bfloat16) -> Cache:
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+    cache: Cache = {"stack": {}, "rem": {}}
+    for pos, kind in enumerate(pattern):
+        one = init_block_cache_paged(cfg, kind, slots, num_pages, page_size,
+                                     dtype)
+        if n_periods > 0:
+            cache["stack"][str(pos)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (n_periods,) + a.shape).copy(), one)
+        if pos < rem:
+            cache["rem"][str(pos)] = one
+    return cache
+
+
+def _mask_recurrent(new: Cache, old: Cache, active: jnp.ndarray) -> Cache:
+    """Freeze inactive slots' recurrent state (batch axis 0 per leaf):
+    attention writes self-redirect to the scratch page, but recurrent
+    blocks mutate their whole state row every step."""
+    def leaf(n, o):
+        m = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(leaf, new, old)
+
+
+def block_decode_paged(params: Params, cfg: ModelConfig, kind: BlockKind,
+                       x: jnp.ndarray, cache: Cache, pos: jnp.ndarray,
+                       block_tables: jnp.ndarray, active: jnp.ndarray, *,
+                       max_len: int) -> tuple[jnp.ndarray, Cache]:
+    """Single-token decode with paged attention KV. x [B,1,d]; pos [B];
+    block_tables [B,NP]; active [B] bool."""
+    if kind in ("attention", "shared_attention"):
+        w = cfg.sliding_window
+        cap = min(max_len, w) if w > 0 else max_len
+        h = rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+        y, pk, pv = attention_decode_paged(
+            params["attn"], cfg, h, cache["k"], cache["v"], pos,
+            block_tables, active, kv_capacity=cap)
+        x = x + y
+        h = rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+        y, _ = _ffn(params["ffn"], cfg, h)
+        return x + y, {"k": pk, "v": pv}
+    x, new_cache = block_decode_apply(params, cfg, kind, x, cache, pos)
+    return x, _mask_recurrent(new_cache, cache, active)
+
+
+def stack_decode_paged(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       cache: Cache, pos: jnp.ndarray,
+                       block_tables: jnp.ndarray, active: jnp.ndarray, *,
+                       max_len: int, num_layers: int | None = None
+                       ) -> tuple[jnp.ndarray, Cache]:
+    """Single-token decode through the stack against paged KV pools.
+
+    Every layer shares one block table per request: tables index each
+    layer's own pool with identical page ids, so admit/evict move O(1)
+    table rows instead of O(layers) cache slices."""
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+
+    def period_body(h, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for p_idx, kind in enumerate(pattern):
+            bp = (params["shared_attn"] if kind == "shared_attention"
+                  else period_params.get(str(p_idx)))
+            h, new_cache[str(p_idx)] = block_decode_paged(
+                bp, cfg, kind, h, period_cache[str(p_idx)], pos,
+                block_tables, active, max_len=max_len)
+        return h, new_cache
+
+    if n_periods > 0:
+        x, new_stack_cache = jax.lax.scan(
+            period_body, x, (params["stack"], cache["stack"]))
+    else:
+        new_stack_cache = cache["stack"]
+    new_rem_cache = {}
+    for p_idx in range(rem):
+        kind = pattern[p_idx]
+        bp = (params["shared_attn"] if kind == "shared_attention"
+              else params["rem"][str(p_idx)])
+        x, new_rem_cache[str(p_idx)] = block_decode_paged(
+            bp, cfg, kind, x, cache["rem"][str(p_idx)], pos,
+            block_tables, active, max_len=max_len)
+    return x, {"stack": new_stack_cache, "rem": new_rem_cache}
+
+
+def stack_prefill_chunk(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                        cache: Cache, block_table: jnp.ndarray,
+                        ctx_len: jnp.ndarray, n_valid: jnp.ndarray, *,
+                        num_layers: int | None = None) -> tuple[jnp.ndarray, Cache]:
+    """One prompt chunk through an attention-only stack, scattering K/V
+    straight into the request's pages.  x [1,C,d]; block_table [NP];
+    ctx_len/n_valid scalars.  Dense attention only (asserted upstream)."""
+    num_layers = cfg.num_layers if num_layers is None else num_layers
+    pattern, n_periods, rem = _pattern_layout(cfg, num_layers)
+
+    def chunk_block(bp, h, blk_cache):
+        hn = rmsnorm_apply(bp["ln1"], h, cfg.norm_eps)
+        y, pk, pv = attention_prefill_chunk(
+            bp["attn"], cfg, hn, blk_cache["k"], blk_cache["v"],
+            block_table, ctx_len, n_valid)
+        h = h + y
+        hn = rmsnorm_apply(bp["ln2"], h, cfg.norm_eps)
+        y, _ = _ffn(bp["ffn"], cfg, hn)
+        return h + y, {"k": pk, "v": pv}
+
+    def period_body(h, inp):
+        period_params, period_cache = inp
+        new_cache = {}
+        for p_idx, kind in enumerate(pattern):
+            bp = (params["shared_attn"] if kind == "shared_attention"
+                  else period_params.get(str(p_idx)))
+            h, new_cache[str(p_idx)] = chunk_block(
+                bp, h, period_cache[str(p_idx)])
+        return h, new_cache
+
+    if n_periods > 0:
+        x, new_stack_cache = jax.lax.scan(
+            period_body, x, (params["stack"], cache["stack"]))
+    else:
+        new_stack_cache = cache["stack"]
+    new_rem_cache = {}
+    for p_idx in range(rem):
+        kind = pattern[p_idx]
+        bp = (params["shared_attn"] if kind == "shared_attention"
+              else params["rem"][str(p_idx)])
+        x, new_rem_cache[str(p_idx)] = chunk_block(
+            bp, x, cache["rem"][str(p_idx)])
     return x, {"stack": new_stack_cache, "rem": new_rem_cache}

@@ -1,3 +1,5 @@
-from repro.serve.engine import Completion, Engine, Request
+from repro.serve.engine import Completion, Engine, FixedSlotEngine, Request
+from repro.serve.kv_pool import PagePool, bucket_length, ceil_pow2
 
-__all__ = ["Completion", "Engine", "Request"]
+__all__ = ["Completion", "Engine", "FixedSlotEngine", "PagePool", "Request",
+           "bucket_length", "ceil_pow2"]

@@ -1,17 +1,46 @@
-"""Serving engine: batched prefill + decode with a slot-based KV cache.
+"""Serving engine: continuous batching over a paged KV cache.
 
-``Engine`` keeps a fixed pool of B slots (continuous batching): requests
-occupy free slots, prefill fills a slot's cache region, decode advances
-all active slots every step (inactive slots are masked).  Greedy and
-temperature sampling.
+``Engine`` keeps a fixed pool of B batch rows ("slots") and a global
+page pool for attention KV (``serve.kv_pool``).  Requests are admitted
+per step into free slots, their prompt KV is scattered into
+block-table-indexed pages, and one fused decode step advances every
+active slot; finished slots free their pages immediately, so KV memory
+tracks *live tokens* rather than ``slots * max_len`` (the vLLM-style
+paged-attention dataflow, told in the MPU vocabulary: block tables are
+the far-bank address path that picks which near-bank "row buffer" each
+sequence streams next).
 
-Per-slot prefill uses the parallel prefill path (one pass), then merges
-the slot's cache into the pool; decode is one fused step for the whole
-pool — the production decode shape (decode_32k lowers exactly this).
+Design contract — **zero re-traces at steady state**:
+
+* the decode step has ONE signature (pool + fixed-width tables), traced
+  once; with ``offload=True`` it runs through the near-bank rewriter and
+  ``Engine.offload_stats`` stays at ``plan_misses == traces == 1``;
+* admits are shape-bucketed: prompts pad to pow2 buckets (exact under
+  the causal mask and the length-aware SWA rolling capture), so the
+  jitted admit retraces once per bucket and ``Engine.serve_stats``
+  counters freeze after warmup;
+* slot bookkeeping (pos/token/budget/temperature/active) lives on
+  device and is updated inside the jitted step — one host sync per
+  decode step, instead of the per-slot Python loop the fixed-slot
+  engine used.
+
+Long prompts on dense attention-only models can prefill in fixed-size
+chunks interleaved with decode (``prefill_chunk=N``): one chunk per
+engine step scatters straight into the request's pages, bounding
+per-step latency.  On page exhaustion the engine preempts the youngest
+request by recompute (its prompt + emitted tokens re-queue), which is
+exact for greedy decoding.
+
+``FixedSlotEngine`` preserves the previous dense slots*max_len engine
+as the benchmark baseline (``benchmarks/serve_bench.py``).
+
+Knobs: ``page_size`` (tokens per KV page), ``num_pages`` (pool size;
+default fits ``slots`` full-length requests — smaller values
+oversubscribe and exercise preemption), ``prefill_chunk`` (0 = whole
+prompts), ``bucket_prompts`` (pow2 admit bucketing).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -20,7 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import Model, build_model
+from repro.models import build_model
+from repro.models.transformer import attention_only_pattern
+from repro.serve.kv_pool import PagePool, bucket_length, ceil_pow2
 
 
 @dataclass
@@ -38,6 +69,484 @@ class Completion:
 
 
 class Engine:
+    """Continuous-batching engine over a paged KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
+                 max_len: int = 512, seed: int = 0, offload: bool = False,
+                 offload_policy: "OffloadPolicy | None" = None,
+                 offload_bulk_threshold: int | None = None,
+                 offload_max_plans: int | None = None,
+                 page_size: int = 64, num_pages: int | None = None,
+                 prefill_chunk: int = 0, bucket_prompts: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        w = cfg.sliding_window
+        # logical per-request cache capacity (rolling window for SWA)
+        self.kv_capacity = min(max_len, w) if w > 0 else max_len
+        pages_per_req = -(-self.kv_capacity // page_size)
+        self.table_width = ceil_pow2(pages_per_req)
+        if num_pages is None:
+            # page 0 is scratch; default sizes the pool for full residency
+            num_pages = 1 + slots * pages_per_req
+        self.num_pages = num_pages
+        self.pool = PagePool(num_pages, page_size, self.table_width, slots)
+        self.cache = self.model.init_paged_cache(slots, num_pages, page_size)
+
+        # device-side slot state, updated inside the jitted step/admit —
+        # ONE host sync per decode step (np.asarray of the emit triple)
+        self._state = {
+            "pos": jnp.zeros((slots,), jnp.int32),
+            "tok": jnp.zeros((slots,), jnp.int32),
+            "budget": jnp.zeros((slots,), jnp.int32),
+            "temp": jnp.zeros((slots,), jnp.float32),
+            "active": jnp.zeros((slots,), bool),
+        }
+        # host mirrors (slot occupancy / page-growth bookkeeping)
+        self._host_active = np.zeros((slots,), bool)   # occupied (incl. prefilling)
+        self._decode_active = np.zeros((slots,), bool)  # decoding
+        self._host_pos = np.zeros((slots,), np.int32)
+        self._slot_rid = np.full((slots,), -1, np.int32)
+        self._slot_req: list[Request | None] = [None] * slots
+        self._slot_emitted: list[list[int]] = [[] for _ in range(slots)]
+        self._slot_seq = np.zeros((slots,), np.int64)  # admit order (preempt youngest)
+        self._admit_seq = 0
+        self._prefilling: dict[int, dict] = {}  # slot -> {req, prompt, ctx}
+        self._requeue: list[Request] = []
+
+        self.rng = jax.random.PRNGKey(seed)
+        self._has_frontend = cfg.frontend != "none"
+        # pow2 admit bucketing is exact only when no recurrent state or
+        # MoE capacity can see the pad tokens
+        self.bucket_prompts = (bucket_prompts and attention_only_pattern(cfg)
+                               and cfg.moe is None)
+        # chunked prefill: dense causal attention scattering straight
+        # into pages — no SWA rolling, no frontend prefix, no recurrent
+        # state, no MoE capacity coupling across chunks
+        self.prefill_chunk = prefill_chunk
+        self._chunkable = (prefill_chunk > 0 and cfg.kind == "decoder"
+                           and not self._has_frontend and w == 0
+                           and cfg.moe is None
+                           and attention_only_pattern(cfg))
+
+        self.serve_counters = {"admit_traces": 0, "step_traces": 0,
+                               "chunk_traces": 0, "control_traces": 0,
+                               "preemptions": 0}
+
+        # the hot path: with offload on, the decode step goes through
+        # the compile-time near-bank rewriter; the plan is built once
+        # for the pool's decode signature and the result still jits +
+        # donates.  ``offload_policy`` (an OffloadPolicy; implies
+        # offload) selects the decision backend and planner knobs —
+        # None leaves the wrapper unpinned, resolving the policy scope
+        # active when the decode signature first TRACES.
+        offload = offload or offload_policy is not None
+        if offload_bulk_threshold is not None or \
+                offload_max_plans is not None:
+            from repro.core.policy import fold_legacy_kwargs
+            offload_policy = fold_legacy_kwargs(
+                offload_policy, where="Engine", target="offload_policy",
+                bulk_threshold=offload_bulk_threshold,
+                max_plans=offload_max_plans)
+        self.offload = offload
+        self.offload_policy = offload_policy
+        self._build_fns()
+
+    # -- jitted functions ---------------------------------------------------
+    def _build_fns(self):
+        model, cfg = self.model, self.cfg
+        max_len, cap = self.max_len, self.kv_capacity
+        page, counters = self.page_size, self.serve_counters
+        w, has_frontend = cfg.sliding_window, self._has_frontend
+        pool = self.pool
+
+        def paged_decode(params, cache, tok, pos, tables, active):
+            return model.decode_step_paged(params, cache, tok, pos,
+                                           tables, active, max_len=max_len)
+
+        if self.offload:
+            from repro.core.offload import mpu_offload
+            self._decode_offload = mpu_offload(
+                paged_decode, policy=self.offload_policy)
+            decode_fn = self._decode_offload
+        else:
+            self._decode_offload = None
+            decode_fn = paged_decode
+
+        def step_impl(params, cache, state, tables, sub):
+            counters["step_traces"] += 1   # fires at trace time only
+            logits, cache = decode_fn(params, cache, state["tok"],
+                                      state["pos"], tables, state["active"])
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            temps = state["temp"]
+            sampled = jax.random.categorical(
+                sub, logits / jnp.maximum(temps[:, None], 1e-3)
+            ).astype(jnp.int32)
+            nxt = jnp.where(temps > 0, sampled, greedy)
+            emitted, was_active = state["tok"], state["active"]
+            pos = jnp.where(was_active, state["pos"] + 1, state["pos"])
+            budget = jnp.where(was_active, state["budget"] - 1,
+                               state["budget"])
+            done = was_active & ((budget < 0) | (pos >= max_len - 1))
+            new_state = {
+                "pos": pos,
+                "tok": jnp.where(was_active, nxt, state["tok"]),
+                "budget": budget,
+                "temp": state["temp"],
+                "active": was_active & ~done,
+            }
+            return emitted, was_active, done, new_state, cache
+
+        self._step_fn = jax.jit(step_impl, donate_argnums=(1, 2))
+
+        def admit_impl(params, cache, state, tokens, frontend, length,
+                       slot, table_row, budget, temp):
+            counters["admit_traces"] += 1  # once per prompt shape bucket
+            batch = {"tokens": tokens}
+            if has_frontend:
+                batch["frontend"] = frontend
+            logits, cache1 = model.prefill(params, batch, max_len, length)
+            n_pr = (pool.pages_for(cap) if w > 0
+                    else pool.pages_for(min(tokens.shape[1], cap)))
+            cache = _scatter_admit(cache, cache1, table_row, slot,
+                                   page=page, n_pr=n_pr)
+            tok0 = jnp.argmax(logits[0]).astype(jnp.int32)
+            state = {
+                "pos": state["pos"].at[slot].set(length),
+                "tok": state["tok"].at[slot].set(tok0),
+                "budget": state["budget"].at[slot].set(budget),
+                "temp": state["temp"].at[slot].set(temp),
+                "active": state["active"].at[slot].set(True),
+            }
+            return cache, state
+
+        self._admit_fn = jax.jit(admit_impl, donate_argnums=(1, 2))
+
+        def chunk_impl(params, cache, tokens, table_row, ctx, n_valid):
+            counters["chunk_traces"] += 1
+            return model.prefill_chunk(params, cache, tokens, table_row,
+                                       ctx, n_valid)
+
+        self._chunk_fn = jax.jit(chunk_impl, donate_argnums=(1,))
+
+        def activate_impl(state, logits, slot, pos0, budget, temp):
+            counters["control_traces"] += 1
+            tok0 = jnp.argmax(logits[0]).astype(jnp.int32)
+            return {
+                "pos": state["pos"].at[slot].set(pos0),
+                "tok": state["tok"].at[slot].set(tok0),
+                "budget": state["budget"].at[slot].set(budget),
+                "temp": state["temp"].at[slot].set(temp),
+                "active": state["active"].at[slot].set(True),
+            }
+
+        self._activate_fn = jax.jit(activate_impl, donate_argnums=(0,))
+
+        def deactivate_impl(state, slot):
+            counters["control_traces"] += 1
+            return {**state, "active": state["active"].at[slot].set(False)}
+
+        self._deactivate_fn = jax.jit(deactivate_impl, donate_argnums=(0,))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def offload_stats(self) -> dict | None:
+        """Compile-time counters of the offloaded decode step (None when
+        offload is off).  The wrapper sits under the engine's ``jax.jit``,
+        so the counters tick at trace/compile time, not per decode step:
+        the zero-retrace steady state is ``plan_misses == traces == 1``
+        and ``plan_hits == 0`` — the paged decode has a single signature
+        (fixed pool + fixed-width tables), so churning admissions and
+        evictions never re-enter Python.  Growing ``traces`` /
+        ``plan_misses`` would mean the decode signature is unstable;
+        growing ``evictions`` means signature churn exceeds the policy's
+        ``max_plans`` LRU bound."""
+        if self._decode_offload is None:
+            return None
+        return self._decode_offload.stats.as_dict()
+
+    @property
+    def serve_stats(self) -> dict:
+        """Serving-side counters: jit trace counts per entry point (each
+        should freeze after one warmup per shape bucket — the serving
+        analogue of ``offload_stats``'s zero-retrace contract), plus
+        preemptions and live page-pool occupancy."""
+        return {
+            **self.serve_counters,
+            "pages_used": self.pool.used_pages,
+            "pages_free": self.pool.free_pages,
+            "page_size": self.page_size,
+            "table_width": self.table_width,
+        }
+
+    def explain_decode(self):
+        """Per-segment offload DecisionReport of the paged decode step
+        for the pool's current signature (None when offload is off):
+        which chains fused, which candidates the policy declined, and
+        the modeled near/far times behind each verdict."""
+        if self._decode_offload is None:
+            return None
+        return self._decode_offload.explain(
+            self.params, self.cache, self._state["tok"], self._state["pos"],
+            jnp.asarray(self.pool.tables), self._state["active"])
+
+    # -- slot management ----------------------------------------------------
+    def _free_slot(self) -> int | None:
+        idx = np.where(~self._host_active)[0]
+        return int(idx[0]) if idx.size else None
+
+    def _occupy(self, slot: int, req: Request, pos0: int):
+        self._host_active[slot] = True
+        self._host_pos[slot] = pos0
+        self._slot_rid[slot] = req.rid
+        self._slot_req[slot] = req
+        self._slot_emitted[slot] = []
+        self._slot_seq[slot] = self._admit_seq
+        self._admit_seq += 1
+
+    def _release(self, slot: int):
+        self.pool.free_slot(slot)
+        self._host_active[slot] = False
+        self._decode_active[slot] = False
+        self._slot_req[slot] = None
+        self._slot_rid[slot] = -1
+        self._prefilling.pop(slot, None)
+
+    def _preempt(self, slot: int):
+        """Evict by recompute: requeue the request's prompt + emitted
+        tokens (exact for greedy; sampled requests resample the tail)."""
+        req = self._slot_req[slot]
+        if slot in self._prefilling:
+            self._requeue.append(req)   # nothing emitted yet
+        else:
+            emitted = self._slot_emitted[slot]
+            remaining = req.max_new_tokens - len(emitted)
+            if remaining > 0:
+                prompt = np.concatenate([
+                    np.asarray(req.prompt, np.int32),
+                    np.asarray(emitted, np.int32)])
+                self._requeue.append(Request(
+                    prompt, remaining, req.temperature, req.rid))
+            self._state = self._deactivate_fn(self._state, slot)
+        self._release(slot)
+        self.serve_counters["preemptions"] += 1
+
+    def _preempt_for_pages(self, protect: int) -> bool:
+        """Free pages by preempting the youngest decoding slot other
+        than ``protect``.  Returns True if a victim was evicted."""
+        victims = [s for s in range(self.slots)
+                   if self._decode_active[s] and s != protect]
+        if not victims:
+            return False
+        self._preempt(max(victims, key=lambda s: self._slot_seq[s]))
+        return True
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        """Admit a request into a free slot (prefill now, or start a
+        chunked prefill).  Returns False when no slot/pages are free."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = np.asarray(req.prompt, np.int32).reshape(-1)
+        s = toks.shape[0]
+        if self._chunkable and s > self.prefill_chunk:
+            need = self.pool.pages_for(min(self.prefill_chunk, s))
+            if not self.pool.ensure(slot, need):
+                return False
+            self._occupy(slot, req, pos0=s)
+            self._prefilling[slot] = {"req": req, "prompt": toks, "ctx": 0}
+            return True
+        s_b = bucket_length(s, self.max_len) if self.bucket_prompts else s
+        need = (self.pool.pages_for(self.kv_capacity)
+                if self.cfg.sliding_window > 0
+                else self.pool.pages_for(min(s_b, self.kv_capacity)))
+        if not self.pool.ensure(slot, need):
+            return False
+        tokens = np.zeros((1, s_b), np.int32)
+        tokens[0, :s] = toks
+        if self._has_frontend:
+            from repro.models.frontends import synth_frontend_embeddings
+            frontend = synth_frontend_embeddings(
+                jax.random.fold_in(self.rng, req.rid), self.cfg, 1)
+        else:
+            frontend = np.zeros((1,), np.float32)  # unused traced arg
+        self.cache, self._state = self._admit_fn(
+            self.params, self.cache, self._state, tokens, frontend,
+            int(s), int(slot), jnp.asarray(self.pool.tables[slot]),
+            int(req.max_new_tokens - 1), float(req.temperature))
+        self._occupy(slot, req, pos0=s)
+        self._decode_active[slot] = True
+        return True
+
+    def _advance_prefill(self):
+        """Run ONE prompt chunk for the oldest prefilling slot —
+        interleaved with decode so long prompts don't stall the batch."""
+        slot = next(iter(self._prefilling))
+        info = self._prefilling[slot]
+        prompt, ctx, c = info["prompt"], info["ctx"], self.prefill_chunk
+        n_valid = min(c, prompt.shape[0] - ctx)
+        need = self.pool.pages_for(ctx + n_valid)
+        while not self.pool.ensure(slot, need):
+            if not self._preempt_for_pages(protect=slot):
+                if not self._decode_active.any():
+                    raise RuntimeError(
+                        "paged KV pool too small to prefill request "
+                        f"{info['req'].rid}: need {need} pages, "
+                        f"free {self.pool.free_pages}")
+                return  # stall: decode completions will free pages
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :n_valid] = prompt[ctx:ctx + n_valid]
+        logits, self.cache = self._chunk_fn(
+            self.params, self.cache, tokens,
+            jnp.asarray(self.pool.tables[slot]), int(ctx), int(n_valid))
+        ctx += n_valid
+        if ctx >= prompt.shape[0]:
+            req = info["req"]
+            self._state = self._activate_fn(
+                self._state, logits, int(slot), int(ctx),
+                int(req.max_new_tokens - 1), float(req.temperature))
+            del self._prefilling[slot]
+            self._decode_active[slot] = True
+            self._host_pos[slot] = ctx
+        else:
+            info["ctx"] = ctx
+
+    # -- decode -------------------------------------------------------------
+    def _grow_pages(self):
+        """Before a decode step, make sure every active slot owns the
+        page its next write lands in (dense caches grow with ``pos``;
+        SWA slots are fully allocated at admit)."""
+        if self.cfg.sliding_window > 0:
+            return
+        for s in np.where(self._decode_active)[0]:
+            write_idx = min(int(self._host_pos[s]), self.kv_capacity - 1)
+            need = write_idx // self.page_size + 1
+            while self._decode_active[s] and \
+                    not self.pool.ensure(int(s), need):
+                if not self._preempt_for_pages(protect=int(s)):
+                    raise RuntimeError(
+                        "paged KV pool too small for a single request: "
+                        f"need {need} pages, width {self.table_width}, "
+                        f"free {self.pool.free_pages}")
+
+    def step(self) -> list[tuple[int, int]]:
+        """One engine step: advance at most one prefill chunk, then one
+        fused decode for all active slots.  Returns [(rid, token)]."""
+        if self._prefilling:
+            self._advance_prefill()
+        if not self._decode_active.any():
+            return []
+        self._grow_pages()
+        if not self._decode_active.any():
+            return []
+        self.rng, sub = jax.random.split(self.rng)
+        emitted, was_active, done, self._state, self.cache = self._step_fn(
+            self.params, self.cache, self._state,
+            jnp.asarray(self.pool.tables), sub)
+        # the single host sync of the step
+        em, wa, dn = (np.asarray(emitted), np.asarray(was_active),
+                      np.asarray(done))
+        out = []
+        for s in range(self.slots):
+            if not wa[s]:
+                continue
+            tok = int(em[s])
+            out.append((int(self._slot_rid[s]), tok))
+            self._slot_emitted[s].append(tok)
+            self._host_pos[s] += 1
+            if dn[s]:
+                self._release(s)
+        return out
+
+    def generate(self, requests: list[Request]) -> dict[int, Completion]:
+        """Run a request list to completion with continuous batching
+        (per-step admission; preempted requests re-queue internally)."""
+        pending = list(requests)
+        done: dict[int, Completion] = {
+            r.rid: Completion(r.rid) for r in requests}
+        while pending or self._requeue or self._host_active.any():
+            while self._requeue and self.admit(self._requeue[0]):
+                self._requeue.pop(0)
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            made = self.step()
+            for rid, tok in made:
+                done[rid].tokens.append(tok)
+            if not made and not self._prefilling \
+                    and not self._host_active.any():
+                raise RuntimeError(
+                    "no progress: request cannot be admitted "
+                    f"(free pages {self.pool.free_pages}, "
+                    f"page_size {self.page_size})")
+        return done
+
+
+# batch-axis position (from the end) per cache leaf name — mirrors the
+# layouts in repro.models.transformer.init_block_cache
+_BATCH_AXIS_FROM_END = {"k": 4, "v": 4, "ssm": 4, "wkv": 4,
+                        "conv": 3, "tshift": 3, "cshift": 3}
+
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+
+
+def _fit_len(x: jnp.ndarray, length: int, axis: int) -> jnp.ndarray:
+    """Slice or zero-pad ``x`` to ``length`` along ``axis``."""
+    t = x.shape[axis]
+    if t == length:
+        return x
+    if t > length:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, length)
+        return x[tuple(idx)]
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, length - t)
+    return jnp.pad(x, pads)
+
+
+def _scatter_admit(cache, cache1, table_row, slot, *, page: int, n_pr: int):
+    """Merge a single-request prefill cache into the paged pools:
+    attention K/V leaves scatter their first ``n_pr`` pages through the
+    slot's block-table row; recurrent leaves write the slot's state row
+    (name-resolved batch axis, as in the fixed-slot engine)."""
+    def leaf(path, pool_leaf, one):
+        name = _leaf_name(path)
+        if name in ("k", "v") and pool_leaf.ndim in (4, 5) \
+                and one.ndim == pool_leaf.ndim:
+            ids = table_row[:n_pr]
+            if pool_leaf.ndim == 5:        # stacked periods
+                x = _fit_len(one[:, 0], n_pr * page, axis=1)
+                n, _, nk, h = x.shape
+                x = x.reshape(n, n_pr, page, nk, h).transpose(0, 1, 3, 2, 4)
+                return pool_leaf.at[:, ids].set(x.astype(pool_leaf.dtype))
+            x = _fit_len(one[0], n_pr * page, axis=0)
+            _, nk, h = x.shape
+            x = x.reshape(n_pr, page, nk, h).transpose(0, 2, 1, 3)
+            return pool_leaf.at[ids].set(x.astype(pool_leaf.dtype))
+        from_end = _BATCH_AXIS_FROM_END.get(name)
+        if from_end is None or one.ndim != pool_leaf.ndim:
+            raise ValueError(
+                f"cannot merge cache leaf {name!r} {one.shape} "
+                f"-> {pool_leaf.shape}")
+        ax = pool_leaf.ndim - from_end
+        idx = (slice(None),) * ax + (slot,)
+        return pool_leaf.at[idx].set(
+            jnp.squeeze(one, ax).astype(pool_leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache, cache1)
+
+
+class FixedSlotEngine:
+    """The previous engine: a dense ``[slots, max_len]`` KV cache with
+    per-slot host bookkeeping.  Kept as the serving benchmark baseline —
+    ``benchmarks/serve_bench.py`` measures the paged engine against it
+    at equal KV-cache memory."""
+
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 8,
                  max_len: int = 512, seed: int = 0, offload: bool = False,
                  offload_policy: "OffloadPolicy | None" = None,
@@ -57,18 +566,6 @@ class Engine:
         self.rng = jax.random.PRNGKey(seed)
         self.temps = np.zeros((slots,), np.float32)
 
-        # the hot path: with offload on, the decode step goes through
-        # the compile-time near-bank rewriter; the plan is built once
-        # for the pool's decode signature and the result still jits +
-        # donates.  ``offload_policy`` (an OffloadPolicy; implies
-        # offload) selects the decision backend and planner knobs —
-        # None leaves the wrapper unpinned, resolving the policy scope
-        # active when the decode signature first TRACES (the wrapper
-        # sits under jax.jit, so once a signature is compiled a later
-        # scoped override does not re-plan it).  Projection matmuls
-        # anchor fused segments (their bias/activation epilogues run on
-        # the accumulator) and rmsnorm/softmax row stats fuse as lane
-        # reductions, so decode value chains stay near-bank end to end.
         offload = offload or offload_policy is not None
         if offload_bulk_threshold is not None or \
                 offload_max_plans is not None:
@@ -90,30 +587,11 @@ class Engine:
 
     @property
     def offload_stats(self) -> dict | None:
-        """Compile-time counters of the offloaded decode step (None when
-        offload is off).  The wrapper sits under the engine's ``jax.jit``,
-        so the counters tick at trace/compile time, not per decode step:
-        a healthy steady state is ``plan_misses == traces == 1`` and
-        ``plan_hits == 0`` — every decode after the first runs the
-        compiled executable without re-entering Python at all.  Growing
-        ``traces``/``plan_misses`` would mean the decode signature is
-        unstable and the step is being re-planned; growing ``evictions``
-        means the signature churn exceeds the policy's ``max_plans`` LRU
-        bound and plans are being recompiled.  ``hit_rate`` summarizes
-        cache health as one fraction (see ``OffloadStats.hit_rate``)."""
         if self._decode_offload is None:
             return None
         return self._decode_offload.stats.as_dict()
 
     def explain_decode(self):
-        """Per-segment offload DecisionReport of the decode step for the
-        pool's current signature (None when offload is off): which
-        chains fused, which candidates the policy declined, and the
-        modeled near/far times behind each verdict.  Plans under the
-        policy effective NOW — if the engine is unpinned and a scoped
-        override was entered after the decode signature compiled, the
-        report describes what a fresh trace would do, not the cached
-        executable."""
         if self._decode_offload is None:
             return None
         return self._decode_offload.explain(
@@ -191,17 +669,11 @@ class Engine:
         return done
 
 
-# batch-axis position (from the end) per cache leaf name — mirrors the
-# layouts in repro.models.transformer.init_block_cache
-_BATCH_AXIS_FROM_END = {"k": 4, "v": 4, "ssm": 4, "wkv": 4,
-                        "conv": 3, "tshift": 3, "cshift": 3}
-
-
 def _merge_slot(path, pool: jnp.ndarray, one: jnp.ndarray, slot: int):
     """Write a single-request cache leaf into the pool at ``slot``.
     The batch axis is resolved by leaf name (robust to slots == 1 and to
     stacked-layer leading dims)."""
-    name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+    name = _leaf_name(path)
     from_end = _BATCH_AXIS_FROM_END.get(name)
     if from_end is None or one.ndim != pool.ndim:
         raise ValueError(
