@@ -35,6 +35,18 @@ the last recorded run.  ``--smoke`` shrinks the workload for per-push
 CI freshness; ``--csv`` emits machine-readable rows; under GitHub
 Actions the one-liner (and any regression) lands in
 ``$GITHUB_STEP_SUMMARY``.
+
+``--chaos`` additionally drives the paged engine through a seeded
+fault storm — every interpret kernel launch fails (guarded dispatch
+falls back to ref, quarantines, and the offload planner degrades to
+all_far), one request's logits are NaN-poisoned, transient page-alloc
+failures pause/resume slots, and slow steps push a deadlined request
+past its budget.  ``MUST_SURVIVE`` is the committed contract for that
+run: requests that finish ``ok`` emit tokens identical to the
+fault-free run, the deadlined request is cancelled (not wedged), no
+pool pages leak, and re-plans stay bounded by quarantine events.  The
+fault-free comparison (and its MUST_SERVE floors) still runs first, so
+``--chaos`` is a strict superset of the plain bench.
 """
 from __future__ import annotations
 
@@ -57,7 +69,7 @@ from repro.serve import Engine, FixedSlotEngine, Request  # noqa: E402
 
 ARTIFACT = ROOT / "BENCH_serve.json"
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # Committed serving contract.  Deterministic floors are exact
 # (positions-streamed model, token equality, trace counters); the
@@ -70,6 +82,19 @@ MUST_SERVE = {
     "max_step_traces": 1,          # decode signature is stable
     "max_admit_traces": 8,         # <= one per pow2 prompt bucket
     "exact_tokens": True,          # paged greedy == fixed-slot greedy
+}
+
+# Committed chaos contract (``--chaos``): what the engine guarantees
+# while faults are being injected.  All checks are deterministic (the
+# fault schedule is seeded).
+MUST_SURVIVE = {
+    "ok_tokens_exact": True,   # status=="ok" => tokens == fault-free run
+    "deadline_cancelled": True,  # the deadlined request ends "cancelled"
+    "pages_reclaimed": True,   # pool.used_pages == 0 after the run
+    "min_quarantines": 1,      # guarded dispatch tripped and degraded
+    "min_nan_aborts": 1,       # poisoned logits abort only their request
+    "min_page_faults": 1,      # transient alloc failures were exercised
+    "bounded_replans": True,   # plan_misses <= 1 + plan_invalidations
 }
 
 
@@ -213,6 +238,119 @@ def run(write_artifact: bool = True, n_requests: int = 24,
     return result
 
 
+def run_chaos(n_requests: int = 8, seed: int = 7) -> tuple[dict, list[str]]:
+    """Seeded fault storm against a fault-free reference run of the same
+    engine config.  Returns (chaos result dict, MUST_SURVIVE failures)."""
+    from repro.core.policy import OffloadPolicy  # noqa: E402
+    from repro.kernels.guard import kernel_guard, set_injector  # noqa: E402
+    from repro.serve import FaultConfig, FaultInjector  # noqa: E402
+
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              num_layers=2, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, 250, size=int(rng.integers(5, 17))).astype(
+        np.int32) for _ in range(n_requests)]
+    deadline_rid = 0
+
+    def reqs(with_deadline: bool):
+        return [Request(p, max_new_tokens=8, rid=i,
+                        deadline_s=0.08 if with_deadline
+                        and i == deadline_rid else 0.0)
+                for i, p in enumerate(prompts)]
+
+    kw = dict(slots=4, max_len=64, page_size=8, offload=True,
+              offload_policy=OffloadPolicy(impl="interpret"))
+    guard = kernel_guard()
+    thr = guard.threshold
+    guard.reset()
+    try:
+        base = Engine(cfg, params, **kw).generate(reqs(False))
+
+        # quarantine after the first failure: a single-segment plan
+        # dispatches once per trace, so the default threshold would
+        # never trip inside one trace
+        guard.threshold = 1
+        inj = FaultInjector(FaultConfig(
+            kernel_fail_rate=1.0, nan_logit_rate=1.0, nan_logit_limit=1,
+            page_fail_rate=0.3, slow_step_rate=1.0, slow_step_s=0.02,
+            seed=seed))
+        eng = Engine(cfg, params, fault_injector=inj, **kw)
+        done = eng.generate(reqs(True))
+    finally:
+        set_injector(None)
+        guard.threshold = thr
+        guard.reset()
+
+    sv = eng.serve_counters
+    st = eng.offload_stats
+    ok_exact = all(c.tokens == base[r].tokens
+                   for r, c in done.items() if c.status == "ok")
+    statuses: dict = {}
+    for c in done.values():
+        statuses[c.status] = statuses.get(c.status, 0) + 1
+
+    chaos = {
+        "n_requests": n_requests,
+        "seed": seed,
+        "statuses": statuses,
+        "ok_tokens_exact": ok_exact,
+        "deadline_status": done[deadline_rid].status,
+        "pages_leaked": eng.pool.used_pages,
+        "deadline_cancels": sv["deadline_cancels"],
+        "nan_aborts": sv["nan_aborts"],
+        "page_faults": sv["page_faults"],
+        "alloc_stalls": sv["alloc_stalls"],
+        "kernel_replans": sv["kernel_replans"],
+        "quarantines": st["quarantines"],
+        "kernel_failures": st["kernel_failures"],
+        "kernel_fallbacks": st["kernel_fallbacks"],
+        "plan_misses": st["plan_misses"],
+        "plan_invalidations": st["plan_invalidations"],
+        "injected": dict(inj.counters),
+    }
+
+    bad = []
+    if MUST_SURVIVE["ok_tokens_exact"] and not ok_exact:
+        bad.append("chaos: an 'ok' request's tokens diverge from the "
+                   "fault-free run")
+    if MUST_SURVIVE["deadline_cancelled"] and \
+            done[deadline_rid].status != "cancelled":
+        bad.append(f"chaos: deadlined request ended "
+                   f"'{done[deadline_rid].status}', expected 'cancelled'")
+    if MUST_SURVIVE["pages_reclaimed"] and eng.pool.used_pages != 0:
+        bad.append(f"chaos: {eng.pool.used_pages} pool pages leaked")
+    if st["quarantines"] < MUST_SURVIVE["min_quarantines"]:
+        bad.append(f"chaos: {st['quarantines']} quarantines < "
+                   f"{MUST_SURVIVE['min_quarantines']} (guarded dispatch "
+                   f"never degraded)")
+    if sv["nan_aborts"] < MUST_SURVIVE["min_nan_aborts"]:
+        bad.append(f"chaos: {sv['nan_aborts']} nan aborts < "
+                   f"{MUST_SURVIVE['min_nan_aborts']}")
+    if sv["page_faults"] < MUST_SURVIVE["min_page_faults"]:
+        bad.append(f"chaos: {sv['page_faults']} page faults < "
+                   f"{MUST_SURVIVE['min_page_faults']}")
+    if MUST_SURVIVE["bounded_replans"] and \
+            st["plan_misses"] > 1 + st["plan_invalidations"]:
+        bad.append(f"chaos: plan_misses {st['plan_misses']} > 1 + "
+                   f"plan_invalidations {st['plan_invalidations']} "
+                   f"(re-planned without a quarantine event)")
+    return chaos, bad
+
+
+def _chaos_one_liner(chaos: dict) -> str:
+    return (f"chaos: {chaos['statuses']} "
+            f"(quarantines {chaos['quarantines']}, "
+            f"fallbacks {chaos['kernel_fallbacks']}, "
+            f"nan_aborts {chaos['nan_aborts']}, "
+            f"page_faults {chaos['page_faults']}, "
+            f"replans {chaos['plan_misses']}<="
+            f"1+{chaos['plan_invalidations']}, "
+            f"pages_leaked {chaos['pages_leaked']}, "
+            f"ok tokens exact: {chaos['ok_tokens_exact']})")
+
+
 def check_regressions(res: dict, baseline: dict | None = None) -> list[str]:
     bad = []
     if res["speedup"] < MUST_SERVE["speedup_floor"]:
@@ -292,15 +430,23 @@ if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     csv = "--csv" in argv
+    chaos_mode = "--chaos" in argv
     baseline = _load_baseline()      # before run() overwrites the artifact
     # --smoke shrinks the workload, so its deterministic traffic ratio is
     # not comparable to the committed full-run baseline: floors still
     # apply, but the artifact/ratchet stay full-run only
-    res = run(write_artifact=not smoke, n_requests=12 if smoke else 24)
+    res = run(write_artifact=False, n_requests=12 if smoke else 24)
     if csv:
         _print_csv(res)
     print(_one_liner(res))
     regressed = check_regressions(res, None if smoke else baseline)
+    if chaos_mode:
+        chaos, survive_bad = run_chaos(n_requests=6 if smoke else 8)
+        res["chaos"] = chaos
+        print(_chaos_one_liner(chaos))
+        regressed += survive_bad
+    if not smoke:
+        ARTIFACT.write_text(json.dumps(res, indent=2))
     _write_step_summary(res, regressed)
     if regressed:
         print("SERVING REGRESSION: " + "; ".join(regressed),

@@ -27,26 +27,45 @@ from repro.configs.base import TrainConfig
 
 @dataclass
 class StragglerMonitor:
+    """Per-step wall-time tracking with two trip wires: the relative
+    one (``median * tolerance``, needs a 5-step history) and an optional
+    *hard* per-step deadline (``deadline_s`` > 0, checked from step 0 —
+    wired from ``TrainConfig.step_deadline_s``).  Hard misses land in
+    ``deadline_misses`` as well as ``flagged`` so the loop can react
+    (commit a checkpoint before the runbook's swap/restart)."""
+
     tolerance: float = 2.0
     window: int = 50
+    deadline_s: float = 0.0      # hard per-step deadline; 0 = disabled
     times: list[float] = field(default_factory=list)
     flagged: list[tuple[int, float]] = field(default_factory=list)
+    deadline_misses: list[tuple[int, float]] = field(default_factory=list)
     _t0: float | None = None
 
     def start(self):
         self._t0 = time.monotonic()
 
     def stop(self, step: int) -> bool:
-        """Returns True if this step was a straggler."""
+        """Returns True if this step was a straggler (relative outlier
+        or hard-deadline miss)."""
         assert self._t0 is not None
         dt = time.monotonic() - self._t0
         self.times.append(dt)
         self.times = self.times[-self.window:]
         med = sorted(self.times)[len(self.times) // 2]
-        if len(self.times) >= 5 and dt > med * self.tolerance:
+        hard = self.deadline_s > 0 and dt > self.deadline_s
+        if hard:
+            self.deadline_misses.append((step, dt))
+        if hard or (len(self.times) >= 5 and dt > med * self.tolerance):
             self.flagged.append((step, dt))
             return True
         return False
+
+    def missed_deadline(self, step: int) -> bool:
+        """Did ``step`` trip the hard deadline?  (Checks the tail only —
+        intended for the just-stopped step.)"""
+        return bool(self.deadline_misses
+                    and self.deadline_misses[-1][0] == step)
 
 
 def elastic_data_axis(requested: int, surviving_hosts: int,
@@ -68,14 +87,18 @@ class CheckpointManager:
         self.num_hosts = num_hosts
 
     def restore_or_init(self, init_fn: Callable[[], Any]) -> tuple[Any, int]:
-        """Returns (state, start_step)."""
+        """Returns (state, start_step).  A checkpoint at step N holds
+        the state *after* N's update (``maybe_save`` runs post-step), so
+        the resumed loop starts at N + 1 — resuming at N would re-apply
+        batch N to a state that already contains it, silently diverging
+        from the uninterrupted run."""
         step = ckpt.latest_step(self.cfg.checkpoint_dir)
         example = init_fn()
         if step is None:
             return example, 0
         state = ckpt.restore(self.cfg.checkpoint_dir, step, example,
                              num_hosts_now=self.num_hosts)
-        return state, step
+        return state, step + 1
 
     def maybe_save(self, step: int, state: Any, *, force: bool = False):
         if not force and (self.cfg.checkpoint_every <= 0

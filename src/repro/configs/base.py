@@ -279,7 +279,10 @@ class TrainConfig:
     checkpoint_every: int = 100
     checkpoint_dir: str = "/tmp/repro_ckpt"
     keep_checkpoints: int = 3
-    step_deadline_s: float = 0.0  # 0 = disabled straggler deadline
+    # hard per-step wall-time deadline (0 = disabled): a step exceeding
+    # it is flagged by StragglerMonitor and the loop force-commits a
+    # checkpoint (train.loop / launch.train)
+    step_deadline_s: float = 0.0
 
     def __post_init__(self):
         if self.offload_bulk_threshold is not None or \

@@ -147,6 +147,7 @@ from repro.core.policy import (
     resolve_policy,
 )
 from repro.kernels import ops as kops
+from repro.kernels.guard import kernel_guard
 
 
 # ---------------------------------------------------------------------------
@@ -417,6 +418,7 @@ class OffloadStats:
     plan_misses: int = 0
     traces: int = 0
     evictions: int = 0
+    plan_invalidations: int = 0  # cached plans dropped on kernel quarantine
 
     @property
     def hit_rate(self) -> float:
@@ -430,12 +432,13 @@ class OffloadStats:
 
     def reset(self) -> None:
         self.plan_hits = self.plan_misses = self.traces = 0
-        self.evictions = 0
+        self.evictions = self.plan_invalidations = 0
 
     def __repr__(self) -> str:
         return (f"OffloadStats(plan_hits={self.plan_hits}, "
                 f"plan_misses={self.plan_misses}, traces={self.traces}, "
                 f"plan_evictions={self.evictions}, "
+                f"plan_invalidations={self.plan_invalidations}, "
                 f"hit_rate={self.hit_rate:.3f})")
 
 
@@ -2355,11 +2358,38 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
     # time (a scoped policy override re-keys plans but does not resize)
     cache_bound = (policy or OffloadPolicy()).max_plans
 
+    # kernel-guard epoch this wrapper's cache was last validated against
+    # (quarantines/resets bump the global epoch; see sync_guard below)
+    guard_seen = [kernel_guard().epoch]
+
     def effective_policy() -> OffloadPolicy:
         override = active_policy_override()
-        if override is not None:
-            return override
-        return policy if policy is not None else OffloadPolicy()
+        pol = override if override is not None else (
+            policy if policy is not None else OffloadPolicy())
+        # graceful degradation: while any fused-segment kernel is
+        # quarantined at this policy's resolved impl, plan everything on
+        # the far pipeline (the paper's always-works tier).  The policy
+        # is part of every cache key, so the all_far plan is a fresh
+        # compile — and when the quarantine lifts (guard reset) the
+        # original keys resolve again untouched.
+        if pol.mode != "all_far" and kernel_guard().degraded_for(pol.impl):
+            pol = pol.replace(mode="all_far")
+        return pol
+
+    def sync_guard(count: bool) -> None:
+        """On a kernel-guard epoch change (quarantine tripped or reset),
+        invalidate cached plans that dispatch fused segments — their
+        compiled executables bake in the now-suspect kernel.  all_far
+        plans (zero segments) survive: they never touch Pallas."""
+        guard = kernel_guard()
+        if guard.epoch == guard_seen[0]:
+            return
+        guard_seen[0] = guard.epoch
+        stale = [k for k, e in cache.items() if e.plan.total_segments > 0]
+        for k in stale:
+            del cache[k]
+            if count:
+                stats.plan_invalidations += 1
 
     def compile_for(pol: OffloadPolicy, args) -> _CompiledOffload:
         # one trace serves both the jaxpr and the output tree
@@ -2385,6 +2415,7 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
         LRU (no insertion, no eviction, no recency bump) or the health
         counters — probing a novel shape must not evict a hot compiled
         plan."""
+        sync_guard(count)
         pol = effective_policy()
         leaves, in_tree = jax.tree.flatten(args)
         # policy- and direction-tagged: the same avals under a different

@@ -5,10 +5,18 @@ body executed on CPU — used by tests to validate kernels against the
 ref.py oracles), "ref" (pure-jnp fallback; what the dry-run lowers, so
 compiled HLO never contains Mosaic custom-calls the CPU backend cannot
 build).  "auto" picks pallas on TPU and ref elsewhere.
+
+Every entry point routes through the process-wide ``KernelGuard``
+(``repro.kernels.guard``): a launch/lowering failure demotes down the
+``pallas -> interpret -> ref`` chain instead of propagating, and after
+K consecutive failures a (kernel, impl) pair is quarantined so future
+traces skip it.  The ref branch is the far pipeline — plain jnp that
+always runs — so a guarded dispatch can only fail if the program itself
+is broken.  Dispatch happens at trace time; compiled executables are
+unaffected.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
@@ -35,6 +43,9 @@ from repro.kernels.fused_matmul_bwd import (
 from repro.kernels.fused_matmul_bwd import (
     fused_matmul_drhs_segment as _fused_drhs_pallas,
 )
+from repro.kernels.guard import default_impl as _default_impl
+from repro.kernels.guard import kernel_guard
+from repro.kernels.guard import resolve_impl as _resolve
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rotary import rotary as _rotary_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -43,115 +54,120 @@ from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
 Impl = Literal["auto", "pallas", "interpret", "ref"]
 
 
-@functools.cache
-def _default_impl() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
-
-
-def _resolve(impl: Impl) -> str:
-    return _default_impl() if impl == "auto" else impl
-
-
 def flash_attention(q, k, v, *, causal=True, window=0, impl: Impl = "auto",
                     **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        return _ref.ref_flash_attention(q, k, v, causal=causal, window=window)
-    return _flash_pallas(q, k, v, causal=causal, window=window,
-                         interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            return _ref.ref_flash_attention(q, k, v, causal=causal,
+                                            window=window)
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("flash_attention", impl, attempt)
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, impl: Impl = "auto",
                      head_major: bool = False, **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        if head_major:                      # ref oracle is token-major
-            k_cache = k_cache.transpose(0, 2, 1, 3)
-            v_cache = v_cache.transpose(0, 2, 1, 3)
-        return _ref.ref_decode_attention(q, k_cache, v_cache, lengths)
-    return _decode_pallas(q, k_cache, v_cache, lengths,
-                          head_major=head_major,
-                          interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            kc, vc = k_cache, v_cache
+            if head_major:                  # ref oracle is token-major
+                kc = kc.transpose(0, 2, 1, 3)
+                vc = vc.transpose(0, 2, 1, 3)
+            return _ref.ref_decode_attention(q, kc, vc, lengths)
+        return _decode_pallas(q, k_cache, v_cache, lengths,
+                              head_major=head_major,
+                              interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("decode_attention", impl, attempt)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
                            impl: Impl = "auto", **kw):
     """Decode attention over a paged KV pool (block-table indexed)."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        return _ref.ref_paged_decode_attention(
-            q, k_pages, v_pages, block_tables, lengths)
-    return _paged_decode_pallas(q, k_pages, v_pages, block_tables, lengths,
-                                interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            return _ref.ref_paged_decode_attention(
+                q, k_pages, v_pages, block_tables, lengths)
+        return _paged_decode_pallas(q, k_pages, v_pages, block_tables,
+                                    lengths, interpret=(im == "interpret"),
+                                    **kw)
+    return kernel_guard().run("paged_decode_attention", impl, attempt)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        return _ref.ref_rmsnorm(x, scale, eps)
-    return _rmsnorm_pallas(x, scale, eps=eps,
-                           interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            return _ref.ref_rmsnorm(x, scale, eps)
+        return _rmsnorm_pallas(x, scale, eps=eps,
+                               interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("rmsnorm", impl, attempt)
 
 
 def rotary(x, positions, *, theta: float = 10000.0, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        return _ref.ref_rotary(x, positions, theta)
-    return _rotary_pallas(x, positions, theta=theta,
-                          interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            return _ref.ref_rotary(x, positions, theta)
+        return _rotary_pallas(x, positions, theta=theta,
+                              interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("rotary", impl, attempt)
 
 
 def ssd_scan(x, logd, dt, bmat, cmat, *, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        y, _ = _ref.ref_ssd_scan(x, logd, dt, bmat, cmat)
-        return y
-    return _ssd_pallas(x, logd, dt, bmat, cmat,
-                       interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            y, _ = _ref.ref_ssd_scan(x, logd, dt, bmat, cmat)
+            return y
+        return _ssd_pallas(x, logd, dt, bmat, cmat,
+                           interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("ssd_scan", impl, attempt)
 
 
 def wkv6(r, k, v, w, u, *, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        y, _ = _ref.ref_wkv6(r, k, v, w, u)
-        return y
-    return _wkv6_pallas(r, k, v, w, u, interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            y, _ = _ref.ref_wkv6(r, k, v, w, u)
+            return y
+        return _wkv6_pallas(r, k, v, w, u, interpret=(im == "interpret"),
+                            **kw)
+    return kernel_guard().run("wkv6", impl, attempt)
 
 
 def adamw_update(p, g, m, v, hyper, *, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        lr, b1, b2, eps, wd, bc1, bc2 = (hyper[i] for i in range(7))
-        pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
-        m_new = b1 * m + (1 - b1) * gf
-        v_new = b2 * v + (1 - b2) * gf * gf
-        upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) + wd * pf
-        return (pf - lr * upd).astype(p.dtype), m_new, v_new
-    return _adamw_pallas(p, g, m, v, hyper,
-                         interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            lr, b1, b2, eps, wd, bc1, bc2 = (hyper[i] for i in range(7))
+            pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) + wd * pf
+            return (pf - lr * upd).astype(p.dtype), m_new, v_new
+        return _adamw_pallas(p, g, m, v, hyper,
+                             interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("adamw_update", impl, attempt)
 
 
 def fused_elementwise(fn, bulk, params=(), *, impl: Impl = "auto", **kw):
-    impl = _resolve(impl)
-    if impl == "ref":
-        full_params = [jnp.asarray(p) for p in params]
-        return fn(*bulk, *full_params)
-    return _fused_pallas(fn, bulk, params,
-                         interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            full_params = [jnp.asarray(p) for p in params]
+            return fn(*bulk, *full_params)
+        return _fused_pallas(fn, bulk, params,
+                             interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("fused_elementwise", impl, attempt)
 
 
 def fused_segment(fn, bulk, params=(), *, out_dtypes, impl: Impl = "auto",
                   **kw):
     """Multi-output near-bank segment (legacy single-shape entry point).
     Always returns a tuple with one array per ``out_dtypes`` entry."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        res = fn(*bulk, *[jnp.asarray(p) for p in params])
-        if not isinstance(res, (tuple, list)):
-            res = (res,)
-        return tuple(r.astype(dt) for r, dt in zip(res, out_dtypes))
-    return _fused_seg_pallas(fn, bulk, params, out_dtypes=out_dtypes,
-                             interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            res = fn(*bulk, *[jnp.asarray(p) for p in params])
+            if not isinstance(res, (tuple, list)):
+                res = (res,)
+            return tuple(r.astype(dt) for r, dt in zip(res, out_dtypes))
+        return _fused_seg_pallas(fn, bulk, params, out_dtypes=out_dtypes,
+                                 interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("fused_segment", impl, attempt)
 
 
 def _full_view(spec, v, rows):
@@ -183,15 +199,16 @@ def fused_segment_grid(fn, operands, specs, *, rows, out_cols, out_dtypes,
     ``input_output_aliases``.  Returns one [rows, out_cols[j]] array per
     output.  The "ref" path materializes the broadcast views and runs
     ``fn`` as one full-array pass (donation is XLA's problem there)."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        full = [_full_view(s, v, rows) for s, v in zip(specs, operands)]
-        outs = fn(*full, block_rows=rows)
-        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
-    return _fused_seg_grid_pallas(fn, operands, specs, rows=rows,
-                                  out_cols=out_cols, out_dtypes=out_dtypes,
-                                  donate=donate,
-                                  interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            full = [_full_view(s, v, rows) for s, v in zip(specs, operands)]
+            outs = fn(*full, block_rows=rows)
+            return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+        return _fused_seg_grid_pallas(fn, operands, specs, rows=rows,
+                                      out_cols=out_cols,
+                                      out_dtypes=out_dtypes, donate=donate,
+                                      interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("fused_segment_grid", impl, attempt)
 
 
 def _epi_full_views(epi_specs, epi_operands, rows):
@@ -212,36 +229,39 @@ def fused_matmul_segment(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
     XLA's problem there).  ``batch`` > 1 means ``rows`` spans leading
     batch dims shared by both operands; the contraction is per batch
     slice (k_dim/n_dim stay per-batch)."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        lhs_full = [jnp.asarray(v).reshape(
-            (1, c) if role == "param_k" else (rows, k_dim))
-            for (role, _, c), v in zip(lhs_specs, lhs_operands)]
-        lhs = pro_fn(*lhs_full, block_rows=rows)
-        rhs_full = [jnp.asarray(v).reshape(
-            (1, c) if role == "param_w" else (batch * k_dim, n_dim))
-            for (role, _, c), v in zip(rhs_specs, rhs_operands)]
-        rhs = rhs_pro_fn(*rhs_full, block_rows=rows)
-        if batch > 1:
-            h = jax.lax.dot_general(
-                lhs.reshape(batch, rows // batch, k_dim),
-                rhs.reshape(batch, k_dim, n_dim),
-                (((2,), (1,)), ((0,), (0,))),
-                preferred_element_type=jnp.float32,
-            ).reshape(rows, n_dim).astype(acc_dtype)
-        else:
-            h = jnp.dot(lhs, rhs,
-                        preferred_element_type=jnp.float32).astype(acc_dtype)
-        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
-        outs = epi_fn(*full, block_rows=rows)
-        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
-    return _fused_mm_pallas(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
-                            lhs_specs, rhs_operands, rhs_specs,
-                            epi_operands, epi_specs, rows=rows, k_dim=k_dim,
-                            n_dim=n_dim, acc_dtype=acc_dtype,
-                            out_cols=out_cols, out_dtypes=out_dtypes,
-                            donate=donate, batch=batch,
-                            interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            lhs_full = [jnp.asarray(v).reshape(
+                (1, c) if role == "param_k" else (rows, k_dim))
+                for (role, _, c), v in zip(lhs_specs, lhs_operands)]
+            lhs = pro_fn(*lhs_full, block_rows=rows)
+            rhs_full = [jnp.asarray(v).reshape(
+                (1, c) if role == "param_w" else (batch * k_dim, n_dim))
+                for (role, _, c), v in zip(rhs_specs, rhs_operands)]
+            rhs = rhs_pro_fn(*rhs_full, block_rows=rows)
+            if batch > 1:
+                h = jax.lax.dot_general(
+                    lhs.reshape(batch, rows // batch, k_dim),
+                    rhs.reshape(batch, k_dim, n_dim),
+                    (((2,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32,
+                ).reshape(rows, n_dim).astype(acc_dtype)
+            else:
+                h = jnp.dot(lhs, rhs,
+                            preferred_element_type=jnp.float32,
+                            ).astype(acc_dtype)
+            full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
+            outs = epi_fn(*full, block_rows=rows)
+            return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+        return _fused_mm_pallas(pro_fn, rhs_pro_fn, epi_fn, lhs_operands,
+                                lhs_specs, rhs_operands, rhs_specs,
+                                epi_operands, epi_specs, rows=rows,
+                                k_dim=k_dim, n_dim=n_dim,
+                                acc_dtype=acc_dtype, out_cols=out_cols,
+                                out_dtypes=out_dtypes, donate=donate,
+                                batch=batch, interpret=(im == "interpret"),
+                                **kw)
+    return kernel_guard().run("fused_matmul", impl, attempt)
 
 
 def fused_matmul_dlhs_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
@@ -254,33 +274,35 @@ def fused_matmul_dlhs_segment(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
     "ref" path runs one XLA dot_general contracting both lane axes.
     ``batch`` > 1 contracts per batch slice (attention QK^T is this
     form: q[rows, k] against k[batch, n, k])."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        lhs_full = [jnp.asarray(v).reshape(
-            (1, c) if role == "param_k" else (rows, k_dim))
-            for (role, _, c), v in zip(lhs_specs, lhs_operands)]
-        g = pro_fn(*lhs_full, block_rows=rows)
-        if batch > 1:
-            h = jax.lax.dot_general(
-                g.reshape(batch, rows // batch, k_dim),
-                jnp.asarray(rhs).reshape(batch, n_dim, k_dim),
-                (((2,), (2,)), ((0,), (0,))),
-                preferred_element_type=jnp.float32,
-            ).reshape(rows, n_dim).astype(acc_dtype)
-        else:
-            h = jax.lax.dot_general(
-                g, jnp.asarray(rhs).reshape(n_dim, k_dim),
-                (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32).astype(acc_dtype)
-        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
-        outs = epi_fn(*full, block_rows=rows)
-        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
-    return _fused_dlhs_pallas(pro_fn, epi_fn, lhs_operands, lhs_specs, rhs,
-                              epi_operands, epi_specs, rows=rows,
-                              k_dim=k_dim, n_dim=n_dim, acc_dtype=acc_dtype,
-                              out_cols=out_cols, out_dtypes=out_dtypes,
-                              donate=donate, batch=batch,
-                              interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            lhs_full = [jnp.asarray(v).reshape(
+                (1, c) if role == "param_k" else (rows, k_dim))
+                for (role, _, c), v in zip(lhs_specs, lhs_operands)]
+            g = pro_fn(*lhs_full, block_rows=rows)
+            if batch > 1:
+                h = jax.lax.dot_general(
+                    g.reshape(batch, rows // batch, k_dim),
+                    jnp.asarray(rhs).reshape(batch, n_dim, k_dim),
+                    (((2,), (2,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32,
+                ).reshape(rows, n_dim).astype(acc_dtype)
+            else:
+                h = jax.lax.dot_general(
+                    g, jnp.asarray(rhs).reshape(n_dim, k_dim),
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32).astype(acc_dtype)
+            full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
+            outs = epi_fn(*full, block_rows=rows)
+            return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+        return _fused_dlhs_pallas(pro_fn, epi_fn, lhs_operands, lhs_specs,
+                                  rhs, epi_operands, epi_specs, rows=rows,
+                                  k_dim=k_dim, n_dim=n_dim,
+                                  acc_dtype=acc_dtype, out_cols=out_cols,
+                                  out_dtypes=out_dtypes, donate=donate,
+                                  batch=batch,
+                                  interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("fused_matmul_dlhs", impl, attempt)
 
 
 def fused_matmul_drhs_segment(epi_fn, lhs, rhs, epi_operands, epi_specs, *,
@@ -291,30 +313,31 @@ def fused_matmul_drhs_segment(epi_fn, lhs, rhs, epi_operands, epi_specs, *,
     accumulated over the row (M) axis into an f32 [Kb, Nb] scratch.  The
     "ref" path runs one XLA dot_general contracting both row axes.
     ``batch`` > 1 reduces each batch slice's own m rows only."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        if batch > 1:
-            h = jax.lax.dot_general(
-                jnp.asarray(lhs).reshape(batch, m_dim, rows // batch),
-                jnp.asarray(rhs).reshape(batch, m_dim, n_dim),
-                (((1,), (1,)), ((0,), (0,))),
-                preferred_element_type=jnp.float32,
-            ).reshape(rows, n_dim).astype(acc_dtype)
-        else:
-            h = jax.lax.dot_general(
-                jnp.asarray(lhs).reshape(m_dim, rows),
-                jnp.asarray(rhs).reshape(m_dim, n_dim),
-                (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32).astype(acc_dtype)
-        full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
-        outs = epi_fn(*full, block_rows=rows)
-        return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
-    return _fused_drhs_pallas(epi_fn, lhs, rhs, epi_operands, epi_specs,
-                              m_dim=m_dim, rows=rows, n_dim=n_dim,
-                              acc_dtype=acc_dtype, out_cols=out_cols,
-                              out_dtypes=out_dtypes, donate=donate,
-                              batch=batch,
-                              interpret=(impl == "interpret"), **kw)
+    def attempt(im):
+        if im == "ref":
+            if batch > 1:
+                h = jax.lax.dot_general(
+                    jnp.asarray(lhs).reshape(batch, m_dim, rows // batch),
+                    jnp.asarray(rhs).reshape(batch, m_dim, n_dim),
+                    (((1,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32,
+                ).reshape(rows, n_dim).astype(acc_dtype)
+            else:
+                h = jax.lax.dot_general(
+                    jnp.asarray(lhs).reshape(m_dim, rows),
+                    jnp.asarray(rhs).reshape(m_dim, n_dim),
+                    (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32).astype(acc_dtype)
+            full = [h] + _epi_full_views(epi_specs, epi_operands, rows)
+            outs = epi_fn(*full, block_rows=rows)
+            return tuple(o.astype(dt) for o, dt in zip(outs, out_dtypes))
+        return _fused_drhs_pallas(epi_fn, lhs, rhs, epi_operands, epi_specs,
+                                  m_dim=m_dim, rows=rows, n_dim=n_dim,
+                                  acc_dtype=acc_dtype, out_cols=out_cols,
+                                  out_dtypes=out_dtypes, donate=donate,
+                                  batch=batch,
+                                  interpret=(im == "interpret"), **kw)
+    return kernel_guard().run("fused_matmul_drhs", impl, attempt)
 
 
 def fused_flash_segment(softmax_fn, q, k, v, *, batch, rows, head_dim,
@@ -329,24 +352,26 @@ def fused_flash_segment(softmax_fn, q, k, v, *, batch, rows, head_dim,
     ``rows`` spans all batch slices; per slice q is [S, head_dim],
     k is [t_dim, head_dim], v is [t_dim, n_dim] with n_dim == head_dim
     (the flash kernel's scratch/PV layout requires it)."""
-    impl = _resolve(impl)
     s_pb = rows // batch
-    if impl == "ref":
-        q3 = jnp.asarray(q).reshape(batch, s_pb, head_dim)
-        k3 = jnp.asarray(k).reshape(batch, t_dim, head_dim)
-        v3 = jnp.asarray(v).reshape(batch, t_dim, n_dim)
-        s = jax.lax.dot_general(
-            q3, k3, (((2,), (2,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32).astype(scores_dtype)
-        p = softmax_fn(s.reshape(scores_shape))
-        o = jax.lax.dot_general(
-            jnp.asarray(p).reshape(batch, s_pb, t_dim), v3,
-            (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32)
+
+    def attempt(im):
+        if im == "ref":
+            q3 = jnp.asarray(q).reshape(batch, s_pb, head_dim)
+            k3 = jnp.asarray(k).reshape(batch, t_dim, head_dim)
+            v3 = jnp.asarray(v).reshape(batch, t_dim, n_dim)
+            s = jax.lax.dot_general(
+                q3, k3, (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32).astype(scores_dtype)
+            p = softmax_fn(s.reshape(scores_shape))
+            o = jax.lax.dot_general(
+                jnp.asarray(p).reshape(batch, s_pb, t_dim), v3,
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+            return (o.reshape(rows, n_dim).astype(out_dtype),)
+        q4 = jnp.asarray(q).reshape(batch, s_pb, 1, head_dim)
+        k4 = jnp.asarray(k).reshape(batch, t_dim, 1, head_dim)
+        v4 = jnp.asarray(v).reshape(batch, t_dim, 1, n_dim)
+        o = _flash_pallas(q4, k4, v4, causal=False, window=0, scale=scale,
+                          interpret=(im == "interpret"), **kw)
         return (o.reshape(rows, n_dim).astype(out_dtype),)
-    q4 = jnp.asarray(q).reshape(batch, s_pb, 1, head_dim)
-    k4 = jnp.asarray(k).reshape(batch, t_dim, 1, head_dim)
-    v4 = jnp.asarray(v).reshape(batch, t_dim, 1, n_dim)
-    o = _flash_pallas(q4, k4, v4, causal=False, window=0, scale=scale,
-                      interpret=(impl == "interpret"), **kw)
-    return (o.reshape(rows, n_dim).astype(out_dtype),)
+    return kernel_guard().run("fused_flash", impl, attempt)

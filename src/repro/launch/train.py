@@ -98,7 +98,7 @@ def main():
 
         step_fn = jax.jit(train_step, donate_argnums=(0,))
         data = SyntheticLM(make_data_config(cfg, shape, tcfg.seed))
-        mon = StragglerMonitor()
+        mon = StragglerMonitor(deadline_s=tcfg.step_deadline_s)
         for step in range(start, tcfg.total_steps):
             batch = data.batch(step)
             if cfg.frontend != "none":
@@ -112,7 +112,7 @@ def main():
             if step % 10 == 0:
                 print(f"step {step}: loss={float(metrics['loss']):.4f}"
                       f"{' [straggler]' if slow else ''}")
-            mgr.maybe_save(step, state)
+            mgr.maybe_save(step, state, force=mon.missed_deadline(step))
     print("done")
 
 

@@ -1,5 +1,12 @@
 from repro.serve.engine import Completion, Engine, FixedSlotEngine, Request
+from repro.serve.faults import (
+    FaultConfig,
+    FaultInjected,
+    FaultInjector,
+    inject,
+)
 from repro.serve.kv_pool import PagePool, bucket_length, ceil_pow2
 
-__all__ = ["Completion", "Engine", "FixedSlotEngine", "PagePool", "Request",
-           "bucket_length", "ceil_pow2"]
+__all__ = ["Completion", "Engine", "FaultConfig", "FaultInjected",
+           "FaultInjector", "FixedSlotEngine", "PagePool", "Request",
+           "bucket_length", "ceil_pow2", "inject"]

@@ -41,6 +41,7 @@ prompts), ``bucket_prompts`` (pow2 admit bucketing).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -49,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.guard import kernel_guard
 from repro.models import build_model
 from repro.models.transformer import attention_only_pattern
 from repro.serve.kv_pool import PagePool, bucket_length, ceil_pow2
@@ -60,12 +62,22 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     rid: int = 0
+    deadline_s: float = 0.0       # relative budget; 0 = no deadline
+    deadline_at: float = 0.0      # absolute monotonic; stamped at submit/admit
+    preempts: int = 0             # times preempted (bounded by max_preempts)
+
+
+#: Completion.status values — "ok" is the only one with a full token
+#: stream; the others are terminal non-success outcomes.
+STATUSES = ("ok", "cancelled", "aborted", "rejected")
 
 
 @dataclass
 class Completion:
     rid: int
     tokens: list[int] = field(default_factory=list)
+    status: str = "ok"
+    reason: str = ""              # e.g. "deadline", "nan_logits", "queue_full"
 
 
 class Engine:
@@ -77,7 +89,9 @@ class Engine:
                  offload_bulk_threshold: int | None = None,
                  offload_max_plans: int | None = None,
                  page_size: int = 64, num_pages: int | None = None,
-                 prefill_chunk: int = 0, bucket_prompts: bool = True):
+                 prefill_chunk: int = 0, bucket_prompts: bool = True,
+                 max_preempts: int = 3, max_queue: int = 0,
+                 fault_injector: Any = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -116,6 +130,18 @@ class Engine:
         self._admit_seq = 0
         self._prefilling: dict[int, dict] = {}  # slot -> {req, prompt, ctx}
         self._requeue: list[Request] = []
+        # robustness state: submit() queue (bounded by max_queue),
+        # terminal events for pop_finished(), slots paused on transient
+        # page-alloc faults, and the kernel-guard epoch the jitted step
+        # was last built against
+        self.max_preempts = max_preempts
+        self.max_queue = max_queue
+        self._injector = fault_injector
+        self._queue: list[Request] = []
+        self._events: list[Completion] = []
+        self._paused = np.zeros((slots,), bool)
+        self._transient_fault = False
+        self._guard_epoch = kernel_guard().epoch
 
         self.rng = jax.random.PRNGKey(seed)
         self._has_frontend = cfg.frontend != "none"
@@ -134,7 +160,16 @@ class Engine:
 
         self.serve_counters = {"admit_traces": 0, "step_traces": 0,
                                "chunk_traces": 0, "control_traces": 0,
-                               "preemptions": 0}
+                               "preemptions": 0, "preemption_retries": 0,
+                               "preempt_vetoes": 0, "deadline_cancels": 0,
+                               "nan_aborts": 0, "page_faults": 0,
+                               "alloc_stalls": 0, "kernel_replans": 0,
+                               "reject_queue_full": 0, "reject_deadline": 0}
+        if fault_injector is not None:
+            # make trace-time kernel dispatch see the same injector the
+            # step-time fault classes use (see serve.faults)
+            from repro.kernels.guard import set_injector
+            set_injector(fault_injector)
 
         # the hot path: with offload on, the decode step goes through
         # the compile-time near-bank rewriter; the plan is built once
@@ -153,37 +188,50 @@ class Engine:
                 max_plans=offload_max_plans)
         self.offload = offload
         self.offload_policy = offload_policy
+        self._decode_offload = None
         self._build_fns()
 
     # -- jitted functions ---------------------------------------------------
-    def _build_fns(self):
-        model, cfg = self.model, self.cfg
-        max_len, cap = self.max_len, self.kv_capacity
-        page, counters = self.page_size, self.serve_counters
-        w, has_frontend = cfg.sliding_window, self._has_frontend
-        pool = self.pool
+    def _build_step_fn(self):
+        """(Re)build the jitted decode step.  Called once at init and
+        again on kernel-guard epoch changes (``kernel_replans``): the
+        fresh ``jax.jit`` re-enters the offload wrapper at trace time,
+        which drops quarantine-stale plans and re-plans under the
+        degraded (all_far) policy — the only way a quarantine can reach
+        an already-compiled hot path.  The wrapper object itself is
+        preserved so its stats/cache accumulate across rebuilds."""
+        model, max_len = self.model, self.max_len
+        counters = self.serve_counters
 
         def paged_decode(params, cache, tok, pos, tables, active):
             return model.decode_step_paged(params, cache, tok, pos,
                                            tables, active, max_len=max_len)
 
         if self.offload:
-            from repro.core.offload import mpu_offload
-            self._decode_offload = mpu_offload(
-                paged_decode, policy=self.offload_policy)
+            if self._decode_offload is None:
+                from repro.core.offload import mpu_offload
+                self._decode_offload = mpu_offload(
+                    paged_decode, policy=self.offload_policy)
             decode_fn = self._decode_offload
         else:
-            self._decode_offload = None
             decode_fn = paged_decode
 
-        def step_impl(params, cache, state, tables, sub):
+        def step_impl(params, cache, state, tables, sub, poison):
             counters["step_traces"] += 1   # fires at trace time only
             logits, cache = decode_fn(params, cache, state["tok"],
                                       state["pos"], tables, state["active"])
-            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            # chaos: poisoned rows get non-finite logits (no-op select
+            # when poison is all-False, so fault-free runs stay exact)
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            # a poisoned row must not kill the batch: detect non-finite
+            # logits per row, sample that row from neutral logits, and
+            # report the mask so the host aborts just that request
+            bad = state["active"] & ~jnp.isfinite(logits).all(-1)
+            safe = jnp.where(bad[:, None], 0.0, logits)
+            greedy = jnp.argmax(safe, -1).astype(jnp.int32)
             temps = state["temp"]
             sampled = jax.random.categorical(
-                sub, logits / jnp.maximum(temps[:, None], 1e-3)
+                sub, safe / jnp.maximum(temps[:, None], 1e-3)
             ).astype(jnp.int32)
             nxt = jnp.where(temps > 0, sampled, greedy)
             emitted, was_active = state["tok"], state["active"]
@@ -198,9 +246,18 @@ class Engine:
                 "temp": state["temp"],
                 "active": was_active & ~done,
             }
-            return emitted, was_active, done, new_state, cache
+            return emitted, was_active, done, bad, new_state, cache
 
         self._step_fn = jax.jit(step_impl, donate_argnums=(1, 2))
+
+    def _build_fns(self):
+        model, cfg = self.model, self.cfg
+        max_len, cap = self.max_len, self.kv_capacity
+        page, counters = self.page_size, self.serve_counters
+        w, has_frontend = cfg.sliding_window, self._has_frontend
+        pool = self.pool
+
+        self._build_step_fn()
 
         def admit_impl(params, cache, state, tokens, frontend, length,
                        slot, table_row, budget, temp):
@@ -251,6 +308,14 @@ class Engine:
 
         self._deactivate_fn = jax.jit(deactivate_impl, donate_argnums=(0,))
 
+        def reactivate_impl(state, slot):
+            counters["control_traces"] += 1
+            return {**state, "active": state["active"].at[slot].set(True)}
+
+        # resume a slot paused on a transient page-alloc fault: pos/tok/
+        # budget were never touched, so flipping active back is exact
+        self._reactivate_fn = jax.jit(reactivate_impl, donate_argnums=(0,))
+
     # -- introspection ------------------------------------------------------
     @property
     def offload_stats(self) -> dict | None:
@@ -263,10 +328,18 @@ class Engine:
         evictions never re-enter Python.  Growing ``traces`` /
         ``plan_misses`` would mean the decode signature is unstable;
         growing ``evictions`` means signature churn exceeds the policy's
-        ``max_plans`` LRU bound."""
+        ``max_plans`` LRU bound.
+
+        Kernel-guard health (``kernel_failures`` / ``kernel_fallbacks``
+        / ``quarantines``, process-wide) is merged in, plus this
+        wrapper's ``plan_invalidations``: under faults the bounded form
+        of the zero-retrace contract is ``plan_misses <= 1 +
+        plan_invalidations`` — re-plans happen only on quarantine
+        events, never per step."""
         if self._decode_offload is None:
             return None
-        return self._decode_offload.stats.as_dict()
+        return {**self._decode_offload.stats.as_dict(),
+                **kernel_guard().stats()}
 
     @property
     def serve_stats(self) -> dict:
@@ -311,14 +384,26 @@ class Engine:
         self.pool.free_slot(slot)
         self._host_active[slot] = False
         self._decode_active[slot] = False
+        self._paused[slot] = False
         self._slot_req[slot] = None
         self._slot_rid[slot] = -1
         self._prefilling.pop(slot, None)
 
+    def _finish(self, slot: int, status: str = "ok", reason: str = ""):
+        """Terminal transition: record the completion event (drained by
+        ``pop_finished``) and free the slot + its pages immediately."""
+        self._events.append(Completion(
+            int(self._slot_rid[slot]), list(self._slot_emitted[slot]),
+            status, reason))
+        self._release(slot)
+
     def _preempt(self, slot: int):
         """Evict by recompute: requeue the request's prompt + emitted
-        tokens (exact for greedy; sampled requests resample the tail)."""
+        tokens (exact for greedy; sampled requests resample the tail).
+        The requeued request carries its preemption count (victim
+        eligibility bound) and its absolute deadline."""
         req = self._slot_req[slot]
+        req.preempts += 1
         if slot in self._prefilling:
             self._requeue.append(req)   # nothing emitted yet
         else:
@@ -329,33 +414,63 @@ class Engine:
                     np.asarray(req.prompt, np.int32),
                     np.asarray(emitted, np.int32)])
                 self._requeue.append(Request(
-                    prompt, remaining, req.temperature, req.rid))
+                    prompt, remaining, req.temperature, req.rid,
+                    deadline_s=req.deadline_s, deadline_at=req.deadline_at,
+                    preempts=req.preempts))
+                self.serve_counters["preemption_retries"] += 1
             self._state = self._deactivate_fn(self._state, slot)
         self._release(slot)
         self.serve_counters["preemptions"] += 1
 
     def _preempt_for_pages(self, protect: int) -> bool:
-        """Free pages by preempting the youngest decoding slot other
-        than ``protect``.  Returns True if a victim was evicted."""
-        victims = [s for s in range(self.slots)
-                   if self._decode_active[s] and s != protect]
+        """Free pages by preempting the youngest *eligible* decoding
+        slot other than ``protect``.  Eligibility is the anti-starvation
+        bound: a request preempted ``max_preempts`` times is exempt from
+        further eviction, so two oversized requests can no longer
+        preempt each other forever — the aged one keeps its pages and
+        the other waits for completions.  Returns True if a victim was
+        evicted."""
+        candidates = [s for s in range(self.slots)
+                      if self._decode_active[s] and s != protect]
+        victims = [s for s in candidates
+                   if self._slot_req[s].preempts < self.max_preempts]
         if not victims:
+            if candidates:
+                self.serve_counters["preempt_vetoes"] += 1
             return False
         self._preempt(max(victims, key=lambda s: self._slot_seq[s]))
         return True
 
     # -- admission ----------------------------------------------------------
+    def _pool_ensure(self, slot: int, need: int) -> tuple[bool, bool]:
+        """``pool.ensure`` with fault injection: returns (ok, injected).
+        The injector is only consulted when the call would actually
+        allocate (growth), so already-satisfied ensures never fault; an
+        injected failure is transient — the caller stalls/pauses and
+        retries instead of preempting."""
+        if need > self.pool.allocated(slot) and self._injector is not None \
+                and self._injector.page_alloc():
+            self.serve_counters["page_faults"] += 1
+            self._transient_fault = True
+            return False, True
+        return self.pool.ensure(slot, need), False
+
+    def _stamp_deadline(self, req: Request):
+        if req.deadline_s > 0 and req.deadline_at == 0.0:
+            req.deadline_at = time.monotonic() + req.deadline_s
+
     def admit(self, req: Request) -> bool:
         """Admit a request into a free slot (prefill now, or start a
         chunked prefill).  Returns False when no slot/pages are free."""
         slot = self._free_slot()
         if slot is None:
             return False
+        self._stamp_deadline(req)
         toks = np.asarray(req.prompt, np.int32).reshape(-1)
         s = toks.shape[0]
         if self._chunkable and s > self.prefill_chunk:
             need = self.pool.pages_for(min(self.prefill_chunk, s))
-            if not self.pool.ensure(slot, need):
+            if not self._pool_ensure(slot, need)[0]:
                 return False
             self._occupy(slot, req, pos0=s)
             self._prefilling[slot] = {"req": req, "prompt": toks, "ctx": 0}
@@ -364,7 +479,7 @@ class Engine:
         need = (self.pool.pages_for(self.kv_capacity)
                 if self.cfg.sliding_window > 0
                 else self.pool.pages_for(min(s_b, self.kv_capacity)))
-        if not self.pool.ensure(slot, need):
+        if not self._pool_ensure(slot, need)[0]:
             return False
         tokens = np.zeros((1, s_b), np.int32)
         tokens[0, :s] = toks
@@ -390,7 +505,12 @@ class Engine:
         prompt, ctx, c = info["prompt"], info["ctx"], self.prefill_chunk
         n_valid = min(c, prompt.shape[0] - ctx)
         need = self.pool.pages_for(ctx + n_valid)
-        while not self.pool.ensure(slot, need):
+        while True:
+            ok, injected = self._pool_ensure(slot, need)
+            if ok:
+                break
+            if injected:
+                return  # transient fault: retry this chunk next step
             if not self._preempt_for_pages(protect=slot):
                 if not self._decode_active.any():
                     raise RuntimeError(
@@ -416,26 +536,96 @@ class Engine:
             info["ctx"] = ctx
 
     # -- decode -------------------------------------------------------------
+    def _slot_page_need(self, s: int) -> int:
+        write_idx = min(int(self._host_pos[s]), self.kv_capacity - 1)
+        return write_idx // self.page_size + 1
+
+    def _pause_slot(self, s: int):
+        """Transient page-alloc fault mid-decode: park the slot instead
+        of preempting.  Its device state freezes (active=False) and its
+        pages stay owned, so resuming later continues token-exact."""
+        self._state = self._deactivate_fn(self._state, int(s))
+        self._decode_active[s] = False
+        self._paused[s] = True
+        self.serve_counters["alloc_stalls"] += 1
+
+    def _resume_paused(self):
+        """Retry the page growth that paused each parked slot; on
+        success flip the slot live again."""
+        for s in np.flatnonzero(self._paused):
+            ok, _ = self._pool_ensure(int(s), self._slot_page_need(int(s)))
+            if ok:
+                self._paused[s] = False
+                self._decode_active[s] = True
+                self._state = self._reactivate_fn(self._state, int(s))
+
+    def _check_deadlines(self):
+        """Cancel every occupied slot whose absolute deadline has
+        passed: pages are reclaimed immediately and the completion
+        carries the tokens emitted so far.  Queued/requeued requests
+        expire the same way (see ``_pump``)."""
+        now = time.monotonic()
+        for s in range(self.slots):
+            if not self._host_active[s]:
+                continue
+            req = self._slot_req[s]
+            if req.deadline_at > 0 and now > req.deadline_at:
+                if self._decode_active[s]:
+                    self._state = self._deactivate_fn(self._state, int(s))
+                self._finish(int(s), "cancelled", "deadline")
+                self.serve_counters["deadline_cancels"] += 1
+
+    def _check_guard_epoch(self):
+        """Kernel quarantine (or reset) bumped the guard epoch: rebuild
+        the jitted step so the next call re-traces through the offload
+        wrapper and picks up the degraded/restored plan."""
+        if self._decode_offload is None:
+            return
+        if kernel_guard().epoch != self._guard_epoch:
+            self._guard_epoch = kernel_guard().epoch
+            self._build_step_fn()
+            self.serve_counters["kernel_replans"] += 1
+
     def _grow_pages(self):
         """Before a decode step, make sure every active slot owns the
         page its next write lands in (dense caches grow with ``pos``;
-        SWA slots are fully allocated at admit)."""
+        SWA slots are fully allocated at admit).  Injected alloc faults
+        pause the slot (transient); real exhaustion preempts a victim
+        or — with no eligible victim and nothing running — raises."""
         if self.cfg.sliding_window > 0:
             return
         for s in np.where(self._decode_active)[0]:
-            write_idx = min(int(self._host_pos[s]), self.kv_capacity - 1)
-            need = write_idx // self.page_size + 1
-            while self._decode_active[s] and \
-                    not self.pool.ensure(int(s), need):
+            need = self._slot_page_need(int(s))
+            while self._decode_active[s]:
+                ok, injected = self._pool_ensure(int(s), need)
+                if ok:
+                    break
+                if injected:
+                    self._pause_slot(int(s))
+                    break
                 if not self._preempt_for_pages(protect=int(s)):
+                    others = [o for o in range(self.slots)
+                              if o != s and self._decode_active[o]]
+                    if others or self._prefilling:
+                        # every candidate victim is preemption-exempt:
+                        # park this slot until their completions free
+                        # pages (resumed by _resume_paused)
+                        self._pause_slot(int(s))
+                        break
                     raise RuntimeError(
                         "paged KV pool too small for a single request: "
                         f"need {need} pages, width {self.table_width}, "
                         f"free {self.pool.free_pages}")
 
     def step(self) -> list[tuple[int, int]]:
-        """One engine step: advance at most one prefill chunk, then one
-        fused decode for all active slots.  Returns [(rid, token)]."""
+        """One engine step: sweep deadlines, resume paused slots,
+        advance at most one prefill chunk, then one fused decode for all
+        active slots.  Returns [(rid, token)]."""
+        if self._injector is not None:
+            self._injector.slow_step()
+        self._check_deadlines()
+        self._resume_paused()
+        self._check_guard_epoch()
         if self._prefilling:
             self._advance_prefill()
         if not self._decode_active.any():
@@ -443,13 +633,17 @@ class Engine:
         self._grow_pages()
         if not self._decode_active.any():
             return []
+        if self._injector is not None:
+            poison = self._injector.poison_slots(self._decode_active)
+        else:
+            poison = np.zeros((self.slots,), bool)
         self.rng, sub = jax.random.split(self.rng)
-        emitted, was_active, done, self._state, self.cache = self._step_fn(
-            self.params, self.cache, self._state,
-            jnp.asarray(self.pool.tables), sub)
+        emitted, was_active, done, bad, self._state, self.cache = \
+            self._step_fn(self.params, self.cache, self._state,
+                          jnp.asarray(self.pool.tables), sub, poison)
         # the single host sync of the step
-        em, wa, dn = (np.asarray(emitted), np.asarray(was_active),
-                      np.asarray(done))
+        em, wa, dn, bd = (np.asarray(emitted), np.asarray(was_active),
+                          np.asarray(done), np.asarray(bad))
         out = []
         for s in range(self.slots):
             if not wa[s]:
@@ -458,30 +652,111 @@ class Engine:
             out.append((int(self._slot_rid[s]), tok))
             self._slot_emitted[s].append(tok)
             self._host_pos[s] += 1
-            if dn[s]:
-                self._release(s)
+            if bd[s]:
+                # non-finite logits: this step's emit (computed from the
+                # previous step's finite logits) stands, the NEXT token
+                # would be garbage — abort just this request
+                if not dn[s]:
+                    self._state = self._deactivate_fn(self._state, int(s))
+                self._finish(s, "aborted", "nan_logits")
+                self.serve_counters["nan_aborts"] += 1
+            elif dn[s]:
+                self._finish(s)
         return out
+
+    # -- submission / lifecycle --------------------------------------------
+    def submit(self, req: Request) -> str:
+        """Queue a request with admission control.  Returns "queued", or
+        a typed rejection reason — "rejected_queue_full" when the
+        backlog is at ``max_queue`` (backpressure; 0 = unbounded), or
+        "rejected_deadline" when the deadline already passed.  Rejected
+        requests also surface as Completion events (``pop_finished``)."""
+        self._stamp_deadline(req)
+        if self.max_queue > 0 and \
+                len(self._queue) + len(self._requeue) >= self.max_queue:
+            self.serve_counters["reject_queue_full"] += 1
+            self._events.append(Completion(
+                req.rid, [], "rejected", "queue_full"))
+            return "rejected_queue_full"
+        if req.deadline_at > 0 and time.monotonic() > req.deadline_at:
+            self.serve_counters["reject_deadline"] += 1
+            self._events.append(Completion(
+                req.rid, [], "rejected", "deadline"))
+            return "rejected_deadline"
+        self._queue.append(req)
+        return "queued"
+
+    def pop_finished(self) -> list[Completion]:
+        """Drain terminal events (ok / cancelled / aborted / rejected)
+        accumulated since the last call."""
+        out, self._events = self._events, []
+        return out
+
+    def _pump(self) -> bool:
+        """Admit as many queued requests as slots/pages allow — aged
+        (preempted) requests first so re-queueing can never starve them
+        behind fresh arrivals.  Expired queue entries are cancelled
+        without occupying a slot.  Returns True if anything moved."""
+        moved = False
+        now = time.monotonic()
+        for queue in (self._requeue, self._queue):
+            while queue:
+                head = queue[0]
+                if head.deadline_at > 0 and now > head.deadline_at:
+                    queue.pop(0)
+                    self._events.append(Completion(
+                        head.rid, [], "cancelled", "deadline"))
+                    self.serve_counters["deadline_cancels"] += 1
+                    moved = True
+                    continue
+                if not self.admit(head):
+                    # a blocked aged head also blocks fresh admissions:
+                    # a fresh request must not steal the slot/pages the
+                    # aged one is waiting on
+                    return moved
+                queue.pop(0)
+                moved = True
+        return moved
 
     def generate(self, requests: list[Request]) -> dict[int, Completion]:
         """Run a request list to completion with continuous batching
-        (per-step admission; preempted requests re-queue internally)."""
-        pending = list(requests)
+        (per-step admission; preempted requests re-queue internally).
+        Completions carry a terminal ``status``: "ok", "cancelled"
+        (deadline), "aborted" (non-finite logits), or "rejected"
+        (backpressure) — tokens are whatever was emitted before the
+        terminal transition."""
         done: dict[int, Completion] = {
             r.rid: Completion(r.rid) for r in requests}
-        while pending or self._requeue or self._host_active.any():
-            while self._requeue and self.admit(self._requeue[0]):
-                self._requeue.pop(0)
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+        for r in requests:
+            self.submit(r)
+        stalls = 0
+        while self._queue or self._requeue or self._host_active.any():
+            moved = self._pump()
             made = self.step()
             for rid, tok in made:
                 done[rid].tokens.append(tok)
-            if not made and not self._prefilling \
-                    and not self._host_active.any():
+            for ev in self.pop_finished():
+                done[ev.rid].status = ev.status
+                done[ev.rid].reason = ev.reason
+            if made or moved:
+                stalls = 0
+                continue
+            # nothing moved this iteration: transient injected faults
+            # and pages-in-flight (prefill stall, paused slots) deserve
+            # bounded patience; an empty engine that cannot admit its
+            # head request is stuck for good
+            stalls += 1
+            stuck_empty = not (self._prefilling or self._host_active.any()
+                               or self._transient_fault)
+            self._transient_fault = False
+            if stuck_empty or stalls >= 10_000:
                 raise RuntimeError(
                     "no progress: request cannot be admitted "
                     f"(free pages {self.pool.free_pages}, "
                     f"page_size {self.page_size})")
+        for ev in self.pop_finished():
+            done[ev.rid].status = ev.status
+            done[ev.rid].reason = ev.reason
         return done
 
 

@@ -52,6 +52,7 @@ class PagePool:
     tables: np.ndarray = field(init=False)
     _counts: np.ndarray = field(init=False)
     _free: list[int] = field(init=False)
+    _owner: np.ndarray = field(init=False)   # page -> slot, -1 = free
 
     def __post_init__(self):
         if self.num_pages < 2:
@@ -60,6 +61,7 @@ class PagePool:
         self._counts = np.zeros((self.slots,), np.int32)
         # LIFO free list keeps recently-used pages hot
         self._free = list(range(self.num_pages - 1, 0, -1))
+        self._owner = np.full((self.num_pages,), -1, np.int32)
 
     # -- queries ------------------------------------------------------------
     @property
@@ -80,14 +82,23 @@ class PagePool:
     # -- alloc / free -------------------------------------------------------
     def alloc(self, slot: int, n: int) -> bool:
         """Grow ``slot`` by ``n`` pages.  All-or-nothing: on exhaustion
-        nothing is taken and False is returned (caller evicts/preempts)."""
+        nothing is taken and False is returned (caller evicts/preempts).
+        Raises on double-alloc — a page coming off the free list that
+        some slot still owns means the free list is corrupt, and
+        continuing would silently alias two requests' KV."""
         if n <= 0:
             return True
         have = int(self._counts[slot])
         if have + n > self.table_width or n > len(self._free):
             return False
         for i in range(have, have + n):
-            self.tables[slot, i] = self._free.pop()
+            p = self._free.pop()
+            if self._owner[p] != -1:
+                raise RuntimeError(
+                    f"double-alloc: page {p} handed to slot {slot} but "
+                    f"still owned by slot {int(self._owner[p])}")
+            self._owner[p] = slot
+            self.tables[slot, i] = p
         self._counts[slot] = have + n
         return True
 
@@ -96,10 +107,18 @@ class PagePool:
         return self.alloc(slot, n_pages - int(self._counts[slot]))
 
     def free_slot(self, slot: int) -> int:
-        """Return all of ``slot``'s pages to the free list (evict)."""
+        """Return all of ``slot``'s pages to the free list (evict).
+        Freeing an empty slot is a no-op; returning a page the slot does
+        not own (double-free) raises instead of corrupting the list."""
         n = int(self._counts[slot])
         for i in range(n):
-            self._free.append(int(self.tables[slot, i]))
+            p = int(self.tables[slot, i])
+            if self._owner[p] != slot:
+                raise RuntimeError(
+                    f"double-free: slot {slot} returning page {p} owned "
+                    f"by slot {int(self._owner[p])}")
+            self._owner[p] = -1
+            self._free.append(p)
         self.tables[slot, :] = 0
         self._counts[slot] = 0
         return n

@@ -30,7 +30,8 @@ def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
     train_step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
     data = SyntheticLM(make_data_config(cfg, shape, tcfg.seed))
     mgr = CheckpointManager(tcfg, host_id=host_id, num_hosts=num_hosts)
-    straggler = StragglerMonitor(tolerance=2.0)
+    straggler = StragglerMonitor(tolerance=2.0,
+                                 deadline_s=tcfg.step_deadline_s)
 
     rng = jax.random.PRNGKey(tcfg.seed)
     state, start = mgr.restore_or_init(lambda: init_train_state(model, rng))
@@ -50,7 +51,9 @@ def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
         state, metrics = train_step(state, batch)
         metrics = {k: float(v) for k, v in metrics.items()}
         was_slow = straggler.stop(step)
+        missed = straggler.missed_deadline(step)
         metrics["straggler"] = float(was_slow)
+        metrics["deadline_miss"] = float(missed)
         history.append({"step": step, **metrics})
         if on_metrics:
             on_metrics(step, metrics)
@@ -59,6 +62,8 @@ def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
             print(f"step {step:5d} loss={metrics['loss']:.4f} "
                   f"gnorm={metrics['grad_norm']:.3f} "
                   f"lr={metrics['lr']:.2e} ({dt:.0f}s)")
-        mgr.maybe_save(step, state)
+        # a hard-deadline miss is the runbook's swap/restart trigger:
+        # commit the state first so the restart loses nothing
+        mgr.maybe_save(step, state, force=missed)
     mgr.maybe_save(total - 1, state, force=(tcfg.checkpoint_every > 0))
     return state, history
