@@ -50,6 +50,16 @@ bytes) and ``BATCHED_GEMM_BWD`` the batched N-D-grid backward anchors.
    greedy's — cost picks the cheaper side per candidate, so a violation
    means the decision backend and the pricing have drifted apart.
 
+5. **Persistent plan cache**: with ``MPU_PLAN_CACHE`` set, every
+   compiled wrapper persists its plan to the shared artifact store and
+   the summary aggregates the disk counters (``disk_hits`` /
+   ``disk_misses`` / ``disk_corrupt`` plus total ``plan_misses``).
+   ``--assert-warm`` turns the warm-restart contract into an exit
+   code: a second run against the same cache directory must plan
+   NOTHING fresh (``plan_misses == 0``) and serve every plan from disk
+   (``disk_hits > 0``) — the CI warm-start smoke runs the bench twice
+   and passes ``--assert-warm`` on the second.
+
 Writes a versioned ``BENCH_offload.json`` artifact at the repo root
 (greedy runs only — non-default policies must not clobber the ratchet
 baseline).  ``--smoke`` runs a reduced rep count for per-push CI
@@ -60,6 +70,7 @@ appended to the job summary via ``$GITHUB_STEP_SUMMARY``.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import sys
 import time
@@ -78,7 +89,9 @@ from repro.core.machine import V5E
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 ARTIFACT = ROOT / "BENCH_offload.json"
 
-SCHEMA_VERSION = 6
+# v7: rows/summary grow persistent-plan-cache counters (disk_hits /
+# disk_misses / disk_corrupt, summary["plan_cache"])
+SCHEMA_VERSION = 7
 
 # Committed fusion contract: chain -> (segments, traffic_reduction
 # floor, anchored-backward-segment floor).  A later segmenter change
@@ -327,6 +340,9 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5,
             "plan_misses": st["plan_misses"],
             "plan_evictions": st["evictions"],
             "plan_hit_rate": st["hit_rate"],
+            "disk_hits": st["disk_hits"],
+            "disk_misses": st["disk_misses"],
+            "disk_corrupt": st["disk_corrupt"],
         })
 
     mean_traffic = sum(r["traffic_reduction"] for r in rows) / len(rows)
@@ -344,6 +360,16 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5,
         "geomean_effective_mb": _geomean([r["effective_mb"] for r in rows]),
         "max_retraces": max(r["retraces"] for r in rows),
         "backend": jax.default_backend(),
+        # warm-restart accounting across every compiled wrapper: with a
+        # shared MPU_PLAN_CACHE a SECOND run must show plan_misses == 0
+        # and disk_hits == number of chains (--assert-warm enforces it)
+        "plan_cache": {
+            "dir": os.environ.get("MPU_PLAN_CACHE") or None,
+            "plan_misses": sum(r["plan_misses"] for r in rows),
+            "disk_hits": sum(r["disk_hits"] for r in rows),
+            "disk_misses": sum(r["disk_misses"] for r in rows),
+            "disk_corrupt": sum(r["disk_corrupt"] for r in rows),
+        },
     }
 
     # the committed artifact is the greedy ratchet baseline: a run under
@@ -437,7 +463,8 @@ _CSV_COLS = ["chain", "segments", "declined", "near_far_ratio",
              "donated_mb", "effective_mb", "traffic_reduction",
              "naive_us_v5e", "fused_us_v5e", "interpreted_us",
              "compiled_us", "compiled_speedup", "retraces", "plan_hits",
-             "plan_misses", "plan_evictions", "plan_hit_rate"]
+             "plan_misses", "plan_evictions", "plan_hit_rate",
+             "disk_hits", "disk_misses", "disk_corrupt"]
 
 
 def _print_csv(rows):
@@ -458,16 +485,28 @@ def _geomean_line(summary) -> str:
             f"artifact: {ARTIFACT.name})")
 
 
-def _write_step_summary(summary, regressed) -> None:
-    """Append the geomean one-liner to the GitHub job summary (no-op
-    outside Actions).  Failures land there too so a red PR check shows
-    WHICH chain regressed without opening the log."""
-    import os
+def _plan_cache_line(summary) -> str | None:
+    pc = summary.get("plan_cache", {})
+    if not pc.get("dir"):
+        return None
+    return (f"plan cache ({pc['dir']}): disk_hits={pc['disk_hits']} "
+            f"disk_misses={pc['disk_misses']} "
+            f"disk_corrupt={pc['disk_corrupt']} "
+            f"fresh_plans={pc['plan_misses']}")
 
+
+def _write_step_summary(summary, regressed) -> None:
+    """Append the geomean one-liner (and the disk-cache hit line when a
+    plan cache is active) to the GitHub job summary (no-op outside
+    Actions).  Failures land there too so a red PR check shows WHICH
+    chain regressed without opening the log."""
     path = os.environ.get("GITHUB_STEP_SUMMARY")
     if not path:
         return
     lines = ["### offload bench", "", f"`{_geomean_line(summary)}`", ""]
+    cache_line = _plan_cache_line(summary)
+    if cache_line:
+        lines += [f"`{cache_line}`", ""]
     if regressed:
         lines += ["**FUSION REGRESSION**", ""]
         lines += [f"- {r}" for r in regressed]
@@ -483,6 +522,7 @@ if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     csv = "--csv" in argv
+    assert_warm = "--assert-warm" in argv
     policy_mode = "greedy"
     if "--policy" in argv:
         policy_mode = argv[argv.index("--policy") + 1]
@@ -509,7 +549,22 @@ if __name__ == "__main__":
               "segment; nf = modeled near/far time ratio over all "
               "candidate segments)")
     print(_geomean_line(summary))
+    cache_line = _plan_cache_line(summary)
+    if cache_line:
+        print(cache_line)
     regressed = []
+    if assert_warm:
+        # the warm-restart acceptance bar: everything from disk,
+        # nothing planned fresh
+        pc = summary["plan_cache"]
+        if not pc["dir"]:
+            regressed.append("--assert-warm requires MPU_PLAN_CACHE")
+        else:
+            if pc["plan_misses"] != 0:
+                regressed.append(f"warm run planned {pc['plan_misses']} "
+                                 f"chains fresh (expected 0)")
+            if pc["disk_hits"] <= 0:
+                regressed.append("warm run had zero disk hits")
     if policy_mode == "greedy":
         # the MUST_FUSE contract and the artifact ratchet are committed
         # for the default greedy policy; other policies report only

@@ -40,12 +40,17 @@ Actions the one-liner (and any regression) lands in
 fault storm — every interpret kernel launch fails (guarded dispatch
 falls back to ref, quarantines, and the offload planner degrades to
 all_far), one request's logits are NaN-poisoned, transient page-alloc
-failures pause/resume slots, and slow steps push a deadlined request
-past its budget.  ``MUST_SURVIVE`` is the committed contract for that
-run: requests that finish ``ok`` emit tokens identical to the
-fault-free run, the deadlined request is cancelled (not wedged), no
-pool pages leak, and re-plans stay bounded by quarantine events.  The
-fault-free comparison (and its MUST_SERVE floors) still runs first, so
+failures pause/resume slots, slow steps push a deadlined request past
+its budget, and (since schema v3) the **disk_io fault class** fires on
+every artifact read/write while the engine warm-starts from a
+persistent plan cache whose entries were bit-flipped on disk.
+``MUST_SURVIVE`` is the committed contract for that run: requests that
+finish ``ok`` emit tokens identical to the fault-free run, the
+deadlined request is cancelled (not wedged), no pool pages leak,
+re-plans stay bounded by quarantine events, and every bad plan-cache
+read is a COUNTED ``disk_corrupt`` (quarantined entry + fresh plan) —
+never an exception and never a token divergence.  The fault-free
+comparison (and its MUST_SERVE floors) still runs first, so
 ``--chaos`` is a strict superset of the plain bench.
 """
 from __future__ import annotations
@@ -69,7 +74,9 @@ from repro.serve import Engine, FixedSlotEngine, Request  # noqa: E402
 
 ARTIFACT = ROOT / "BENCH_serve.json"
 
-SCHEMA_VERSION = 2
+# v3: chaos covers the disk_io fault class + corrupted warm plan-cache
+# entries (MUST_SURVIVE gains min_disk_corrupt / min_disk_faults)
+SCHEMA_VERSION = 3
 
 # Committed serving contract.  Deterministic floors are exact
 # (positions-streamed model, token equality, trace counters); the
@@ -95,6 +102,8 @@ MUST_SURVIVE = {
     "min_nan_aborts": 1,       # poisoned logits abort only their request
     "min_page_faults": 1,      # transient alloc failures were exercised
     "bounded_replans": True,   # plan_misses <= 1 + plan_invalidations
+    "min_disk_corrupt": 1,     # bad plan-cache entries detected + counted
+    "min_disk_faults": 1,      # the disk_io fault class actually fired
 }
 
 
@@ -240,7 +249,20 @@ def run(write_artifact: bool = True, n_requests: int = 24,
 
 def run_chaos(n_requests: int = 8, seed: int = 7) -> tuple[dict, list[str]]:
     """Seeded fault storm against a fault-free reference run of the same
-    engine config.  Returns (chaos result dict, MUST_SURVIVE failures)."""
+    engine config.  Returns (chaos result dict, MUST_SURVIVE failures).
+
+    The disk leg: the fault-free reference engine persists its decode
+    plan into a throwaway ``MPU_PLAN_CACHE`` directory; every persisted
+    entry is then bit-flipped on disk, and the chaos engine warm-starts
+    against that poisoned cache with the ``disk_io`` fault class
+    truncating every artifact read/write.  The engine must detect the
+    rot (counted ``disk_corrupt``, entry quarantined), re-plan fresh,
+    and still emit token-exact output."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.core.artifacts import set_disk_injector  # noqa: E402
     from repro.core.policy import OffloadPolicy  # noqa: E402
     from repro.kernels.guard import kernel_guard, set_injector  # noqa: E402
     from repro.serve import FaultConfig, FaultInjector  # noqa: E402
@@ -265,23 +287,45 @@ def run_chaos(n_requests: int = 8, seed: int = 7) -> tuple[dict, list[str]]:
     guard = kernel_guard()
     thr = guard.threshold
     guard.reset()
+    cache_dir = tempfile.mkdtemp(prefix="mpu_chaos_plans_")
+    prev_cache = os.environ.get("MPU_PLAN_CACHE")
+    os.environ["MPU_PLAN_CACHE"] = cache_dir
     try:
         base = Engine(cfg, params, **kw).generate(reqs(False))
 
+        # poison the warm start: bit-flip every plan the fault-free
+        # engine persisted — the chaos engine must detect, count, and
+        # quarantine each one instead of deserializing garbage
+        n_poisoned = 0
+        for b in pathlib.Path(cache_dir).glob("*.bin"):
+            raw = bytearray(b.read_bytes())
+            raw[len(raw) // 2] ^= 0x01
+            b.write_bytes(bytes(raw))
+            n_poisoned += 1
+
         # quarantine after the first failure: a single-segment plan
         # dispatches once per trace, so the default threshold would
-        # never trip inside one trace
+        # never trip inside one trace.  disk faults: truncate every
+        # artifact read/write (truncated reads also exercise the
+        # unparsable-marker corruption path deterministically)
         guard.threshold = 1
         inj = FaultInjector(FaultConfig(
             kernel_fail_rate=1.0, nan_logit_rate=1.0, nan_logit_limit=1,
             page_fail_rate=0.3, slow_step_rate=1.0, slow_step_s=0.02,
+            disk_fail_rate=1.0, disk_truncate_share=1.0,
             seed=seed))
         eng = Engine(cfg, params, fault_injector=inj, **kw)
         done = eng.generate(reqs(True))
     finally:
         set_injector(None)
+        set_disk_injector(None)
         guard.threshold = thr
         guard.reset()
+        if prev_cache is None:
+            os.environ.pop("MPU_PLAN_CACHE", None)
+        else:
+            os.environ["MPU_PLAN_CACHE"] = prev_cache
+        shutil.rmtree(cache_dir, ignore_errors=True)
 
     sv = eng.serve_counters
     st = eng.offload_stats
@@ -308,6 +352,10 @@ def run_chaos(n_requests: int = 8, seed: int = 7) -> tuple[dict, list[str]]:
         "kernel_fallbacks": st["kernel_fallbacks"],
         "plan_misses": st["plan_misses"],
         "plan_invalidations": st["plan_invalidations"],
+        "disk_corrupt": st["disk_corrupt"],
+        "disk_hits": st["disk_hits"],
+        "disk_misses": st["disk_misses"],
+        "plan_cache_entries_poisoned": n_poisoned,
         "injected": dict(inj.counters),
     }
 
@@ -336,6 +384,13 @@ def run_chaos(n_requests: int = 8, seed: int = 7) -> tuple[dict, list[str]]:
         bad.append(f"chaos: plan_misses {st['plan_misses']} > 1 + "
                    f"plan_invalidations {st['plan_invalidations']} "
                    f"(re-planned without a quarantine event)")
+    if st["disk_corrupt"] < MUST_SURVIVE["min_disk_corrupt"]:
+        bad.append(f"chaos: {st['disk_corrupt']} disk_corrupt < "
+                   f"{MUST_SURVIVE['min_disk_corrupt']} (poisoned plan "
+                   f"cache was never detected)")
+    if inj.counters["disk_faults_injected"] < MUST_SURVIVE["min_disk_faults"]:
+        bad.append(f"chaos: {inj.counters['disk_faults_injected']} disk "
+                   f"faults injected < {MUST_SURVIVE['min_disk_faults']}")
     return chaos, bad
 
 
@@ -347,6 +402,8 @@ def _chaos_one_liner(chaos: dict) -> str:
             f"page_faults {chaos['page_faults']}, "
             f"replans {chaos['plan_misses']}<="
             f"1+{chaos['plan_invalidations']}, "
+            f"disk_corrupt {chaos['disk_corrupt']}, "
+            f"disk_faults {chaos['injected']['disk_faults_injected']}, "
             f"pages_leaked {chaos['pages_leaked']}, "
             f"ok tokens exact: {chaos['ok_tokens_exact']})")
 

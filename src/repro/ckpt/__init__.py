@@ -1,4 +1,12 @@
-from repro.ckpt.checkpoint import all_steps, latest_step, restore, save
+from repro.ckpt.checkpoint import (
+    CheckpointCorrupt,
+    all_steps,
+    latest_step,
+    newest_restorable,
+    restore,
+    save,
+    verify_step,
+)
 from repro.ckpt.manager import (
     CheckpointManager,
     StragglerMonitor,
@@ -6,6 +14,7 @@ from repro.ckpt.manager import (
 )
 
 __all__ = [
-    "all_steps", "latest_step", "restore", "save",
+    "CheckpointCorrupt", "all_steps", "latest_step", "newest_restorable",
+    "restore", "save", "verify_step",
     "CheckpointManager", "StragglerMonitor", "elastic_data_axis",
 ]

@@ -1,23 +1,46 @@
-"""Sharded, atomic checkpointing (no external deps).
+"""Sharded, atomic, *verified* checkpointing (no external deps).
 
 Layout:
     <dir>/step_<N>.tmp/            (written)
         manifest.json              pytree structure + leaf metadata
+                                   (paths, dtypes, global shapes)
         shard_<host>.npz           this host's addressable leaf shards
+        shard_<host>.sums.json     per-tensor sha256 + npz file sha256
+        commit.json                commit marker: env key + sha256 of
+                                   every file above (written LAST)
     <dir>/step_<N>/                (atomic rename on completion)
 
 Fault-tolerance properties:
   * atomic commit — a crash mid-write leaves only a .tmp dir, never a
     half-valid checkpoint; ``latest_step`` ignores .tmp;
+  * verified commit — ``commit.json`` is written after every shard and
+    the manifest, and records their checksums: ``verify_step`` can
+    prove a checkpoint complete without trusting the rename alone, and
+    ``restore`` re-checks per-tensor checksums so a bit-flipped shard
+    reads as ``CheckpointCorrupt``, not as silently wrong weights;
+  * walk-back restore — ``newest_restorable``/``restore_or_init`` (see
+    repro.ckpt.manager) skip truncated/corrupt/torn steps and fall back
+    to the newest *complete and verified* one instead of crashing;
   * per-host shard files — restore reads only the shards a host needs;
   * elastic restore — the manifest records *global* leaf shapes, so a
     job restarted on a different mesh reassembles globals and reshards
     (repro.ckpt.manager handles mesh-size changes);
-  * bounded retention (``keep``) with durable deletion ordering (old
-    checkpoints removed only after the new commit).
+  * bounded retention (``keep``) with durable deletion ordering: old
+    checkpoints are removed only after the new commit, and the newest
+    VERIFIED checkpoint is never deleted — a torn or corrupt newer
+    step can never orphan the last-known-good state.
+
+All durable writes go through ``repro.core.artifacts`` (tmp + fsync +
+atomic rename, shared disk-fault injection), so chaos runs exercise
+every failure path above without real disk faults.
+
+Checkpoints written by the pre-checksum format (manifest + shards, no
+``commit.json``) still restore: they verify as ``"legacy"`` and rank
+below any verified step of the same age.
 """
 from __future__ import annotations
 
+import io
 import json
 import pathlib
 import shutil
@@ -25,6 +48,21 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from repro.core.artifacts import (
+    atomic_write_bytes,
+    env_key,
+    file_sha256,
+    fsync_dir,
+    read_bytes,
+    sha256_bytes,
+)
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed verification (missing files, checksum
+    mismatch, unparsable metadata).  Restore walk-back catches this and
+    falls back to an older verified step."""
 
 
 def _flatten_with_paths(tree: Any):
@@ -54,26 +92,50 @@ def save(directory: str | pathlib.Path, step: int, tree: Any, *,
         "treedef": str(treedef),
     }
     arrays = {}
+    sums = {}
     for k, v in keyed:
         arr = np.asarray(jax.device_get(v))
         if num_hosts > 1 and arr.ndim > 0 and arr.shape[0] % num_hosts == 0:
             rows = arr.shape[0] // num_hosts
             arr = arr[host_id * rows:(host_id + 1) * rows]
         arrays[k] = arr
-    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+        sums[k] = sha256_bytes(np.ascontiguousarray(arr).tobytes())
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    shard_name = f"shard_{host_id}.npz"
+    atomic_write_bytes(tmp / shard_name, buf.getvalue())
+    atomic_write_bytes(
+        tmp / f"shard_{host_id}.sums.json",
+        json.dumps({"file_sha256": sha256_bytes(buf.getvalue()),
+                    "tensors": sums}).encode())
     if host_id == 0:
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        atomic_write_bytes(tmp / "manifest.json",
+                           json.dumps(manifest).encode())
     # two-phase commit: rename only once every host's shard (and the
-    # manifest) is present — whichever host finishes last commits.
+    # manifest) is present — whichever host finishes last commits.  The
+    # commit marker goes in LAST, carrying checksums of every file, so
+    # verification never has to trust the rename alone.
     shards_present = len(list(tmp.glob("shard_*.npz")))
     if shards_present >= num_hosts and (tmp / "manifest.json").exists():
+        files = {p.name: file_sha256(p) for p in sorted(tmp.iterdir())
+                 if p.name != "commit.json"}
+        atomic_write_bytes(tmp / "commit.json",
+                           json.dumps({"env": env_key(),
+                                       "step": step,
+                                       "files": files}).encode())
+        fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)
-        # retention: only after a successful commit
-        steps = sorted(all_steps(directory))
-        for old in steps[:-keep]:
-            shutil.rmtree(directory / f"step_{old}", ignore_errors=True)
+        fsync_dir(directory)
+        # retention: only after a commit that VERIFIES.  If this commit
+        # was torn (truncated shard, unwritable marker), deleting older
+        # steps would orphan the last-known-good — so nothing is deleted
+        # until a future save commits clean.
+        if verify_step(directory, step) == "verified":
+            steps = sorted(all_steps(directory))
+            for old in steps[:-keep]:
+                shutil.rmtree(directory / f"step_{old}", ignore_errors=True)
     return final
 
 
@@ -97,33 +159,128 @@ def latest_step(directory: str | pathlib.Path) -> int | None:
     return steps[-1] if steps else None
 
 
+def verify_step(directory: str | pathlib.Path, step: int) -> str:
+    """Integrity status of one checkpoint, without loading tensors:
+
+    * ``"verified"`` — commit marker present and every recorded file
+      exists with a matching sha256;
+    * ``"legacy"``   — no commit marker, but a manifest and at least
+      one shard parse (pre-checksum format: complete as far as the old
+      rename protocol could promise);
+    * ``"corrupt"``  — marker/manifest unparsable, files missing, or
+      checksums disagree;
+    * ``"missing"``  — no such step directory.
+    """
+    d = pathlib.Path(directory) / f"step_{step}"
+    if not d.is_dir():
+        return "missing"
+    marker = d / "commit.json"
+    if not marker.exists():
+        try:
+            json.loads(read_bytes(d / "manifest.json"))
+            if not list(d.glob("shard_*.npz")):
+                return "corrupt"
+            return "legacy"
+        except (OSError, ValueError):
+            return "corrupt"
+    try:
+        rec = json.loads(read_bytes(marker))
+        for name, sha in rec["files"].items():
+            p = d / name
+            if not p.exists() or file_sha256(p) != sha:
+                return "corrupt"
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return "corrupt"
+    return "verified"
+
+
+def newest_restorable(directory: str | pathlib.Path) -> int | None:
+    """The newest step that verifies as complete (``verified`` or
+    ``legacy``) — the step restore walk-back would land on."""
+    for step in reversed(all_steps(directory)):
+        if verify_step(directory, step) in ("verified", "legacy"):
+            return step
+    return None
+
+
 def restore(directory: str | pathlib.Path, step: int, example_tree: Any,
             *, num_hosts_now: int = 1) -> Any:
-    """Restore into the structure of ``example_tree`` (shapes validated).
+    """Restore into the structure of ``example_tree`` (shapes validated,
+    tensors checksum-verified where sums sidecars exist).
 
     Handles host-count changes: all shard files are concatenated along
-    the leading axis to reassemble global leaves."""
+    the leading axis to reassemble global leaves.  Raises
+    ``CheckpointCorrupt`` on truncated/unparsable/bit-flipped data —
+    shape mismatches against ``example_tree`` stay ``AssertionError``
+    (a config error, not data rot)."""
     directory = pathlib.Path(directory) / f"step_{step}"
-    manifest = json.loads((directory / "manifest.json").read_text())
+    try:
+        manifest = json.loads(read_bytes(directory / "manifest.json"))
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(f"step {step}: bad manifest: {e}") from e
     shards = sorted(directory.glob("shard_*.npz"),
                     key=lambda p: int(p.stem.split("_")[1]))
+    if not shards:
+        raise CheckpointCorrupt(f"step {step}: no shard files")
     loaded: dict[str, np.ndarray] = {}
-    per_shard = [np.load(s) for s in shards]
-    for meta in manifest["leaves"]:
-        k, shape = meta["key"], tuple(meta["shape"])
-        parts = [s[k] for s in per_shard if k in s.files]
-        if parts and tuple(parts[0].shape) == shape:
-            # unsharded leaf (scalar / non-divisible): hosts hold replicas
-            loaded[k] = parts[0]
-        else:
-            arr = np.concatenate(parts, axis=0)
-            assert arr.shape == shape, \
-                f"{k}: reassembled {arr.shape} != saved {shape}"
-            loaded[k] = arr
+    per_shard = []
+    per_sums = []
+    for s in shards:
+        try:
+            raw = read_bytes(s)
+            sums_p = s.with_name(s.stem + ".sums.json")
+            sums = None
+            if sums_p.exists():
+                sums = json.loads(read_bytes(sums_p))
+                if sums.get("file_sha256") != sha256_bytes(raw):
+                    raise CheckpointCorrupt(
+                        f"step {step}: {s.name} file checksum mismatch")
+            per_shard.append(np.load(io.BytesIO(raw)))
+            per_sums.append(None if sums is None else sums["tensors"])
+        except CheckpointCorrupt:
+            raise
+        except Exception as e:
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable shard {s.name}: {e}") from e
+    try:
+        for meta in manifest["leaves"]:
+            k, shape = meta["key"], tuple(meta["shape"])
+            parts = []
+            for sh, sums in zip(per_shard, per_sums):
+                if k not in sh.files:
+                    continue
+                arr = sh[k]
+                if sums is not None and k in sums and \
+                        sha256_bytes(np.ascontiguousarray(arr).tobytes()) \
+                        != sums[k]:
+                    raise CheckpointCorrupt(
+                        f"step {step}: tensor {k} checksum mismatch")
+                parts.append(arr)
+            if not parts:
+                raise CheckpointCorrupt(
+                    f"step {step}: leaf {k} missing from all shards")
+            if tuple(parts[0].shape) == shape:
+                # unsharded leaf (scalar / non-divisible): hosts hold
+                # replicas
+                loaded[k] = parts[0]
+            else:
+                arr = np.concatenate(parts, axis=0)
+                if arr.shape != tuple(shape):
+                    raise CheckpointCorrupt(
+                        f"step {step}: {k} reassembled {arr.shape} != "
+                        f"saved {shape}")
+                loaded[k] = arr
+    except CheckpointCorrupt:
+        raise
+    except Exception as e:  # truncated npz members, zlib errors, ...
+        raise CheckpointCorrupt(
+            f"step {step}: shard data unreadable: {e}") from e
 
     keyed, treedef = _flatten_with_paths(example_tree)
     leaves = []
     for k, example in keyed:
+        if k not in loaded:
+            raise CheckpointCorrupt(f"step {step}: leaf {k} absent")
         arr = loaded[k]
         ex = np.asarray(example) if not hasattr(example, "shape") else example
         assert tuple(arr.shape) == tuple(ex.shape), \

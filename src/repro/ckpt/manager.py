@@ -40,6 +40,10 @@ class StragglerMonitor:
     times: list[float] = field(default_factory=list)
     flagged: list[tuple[int, float]] = field(default_factory=list)
     deadline_misses: list[tuple[int, float]] = field(default_factory=list)
+    # lifetime totals survive the window trim (the lists are bounded so
+    # month-long runs don't grow memory; counts must not reset with them)
+    total_flagged: int = 0
+    total_deadline_misses: int = 0
     _t0: float | None = None
 
     def start(self):
@@ -56,8 +60,12 @@ class StragglerMonitor:
         hard = self.deadline_s > 0 and dt > self.deadline_s
         if hard:
             self.deadline_misses.append((step, dt))
+            self.deadline_misses = self.deadline_misses[-self.window:]
+            self.total_deadline_misses += 1
         if hard or (len(self.times) >= 5 and dt > med * self.tolerance):
             self.flagged.append((step, dt))
+            self.flagged = self.flagged[-self.window:]
+            self.total_flagged += 1
             return True
         return False
 
@@ -85,26 +93,52 @@ class CheckpointManager:
         self.cfg = cfg
         self.host_id = host_id
         self.num_hosts = num_hosts
+        # durability observability: how the last restore walked back and
+        # whether any saves were dropped on disk faults
+        self.counters = {"restore_walkbacks": 0, "restore_corrupt_skipped": 0,
+                         "save_failures": 0}
 
     def restore_or_init(self, init_fn: Callable[[], Any]) -> tuple[Any, int]:
         """Returns (state, start_step).  A checkpoint at step N holds
         the state *after* N's update (``maybe_save`` runs post-step), so
         the resumed loop starts at N + 1 — resuming at N would re-apply
         batch N to a state that already contains it, silently diverging
-        from the uninterrupted run."""
-        step = ckpt.latest_step(self.cfg.checkpoint_dir)
+        from the uninterrupted run.
+
+        Walk-back: steps that fail verification (truncated, bit-flipped,
+        torn — see ``ckpt.verify_step``) or fail to load are *skipped*,
+        newest-first, until a complete and verified checkpoint restores.
+        A corrupt latest checkpoint therefore costs the delta to the
+        previous good one, never a crash and never a poisoned state."""
         example = init_fn()
-        if step is None:
-            return example, 0
-        state = ckpt.restore(self.cfg.checkpoint_dir, step, example,
-                             num_hosts_now=self.num_hosts)
-        return state, step + 1
+        for step in reversed(ckpt.all_steps(self.cfg.checkpoint_dir)):
+            status = ckpt.verify_step(self.cfg.checkpoint_dir, step)
+            if status not in ("verified", "legacy"):
+                self.counters["restore_corrupt_skipped"] += 1
+                self.counters["restore_walkbacks"] += 1
+                continue
+            try:
+                state = ckpt.restore(self.cfg.checkpoint_dir, step, example,
+                                     num_hosts_now=self.num_hosts)
+            except ckpt.CheckpointCorrupt:
+                self.counters["restore_corrupt_skipped"] += 1
+                self.counters["restore_walkbacks"] += 1
+                continue
+            return state, step + 1
+        return example, 0
 
     def maybe_save(self, step: int, state: Any, *, force: bool = False):
         if not force and (self.cfg.checkpoint_every <= 0
                           or step % self.cfg.checkpoint_every != 0
                           or step == 0):
             return None
-        return ckpt.save(self.cfg.checkpoint_dir, step, state,
-                         host_id=self.host_id, num_hosts=self.num_hosts,
-                         keep=self.cfg.keep_checkpoints)
+        try:
+            return ckpt.save(self.cfg.checkpoint_dir, step, state,
+                             host_id=self.host_id, num_hosts=self.num_hosts,
+                             keep=self.cfg.keep_checkpoints)
+        except OSError:
+            # a transient disk fault drops THIS save, not the run; the
+            # partial .tmp dir is invisible to restore and the next
+            # cadence point retries
+            self.counters["save_failures"] += 1
+            return None

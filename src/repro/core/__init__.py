@@ -1,3 +1,4 @@
+from repro.core.artifacts import ArtifactStore, set_disk_injector
 from repro.core.isa import (
     Instr,
     Loc,
@@ -39,6 +40,7 @@ from repro.core.policy import (
 from repro.core.simulator import SimConfig, SimResult, end_to_end_time, simulate
 
 __all__ = [
+    "ArtifactStore", "set_disk_injector",
     "Instr", "Loc", "OpKind", "Program", "annotate_locations",
     "apply_policy", "location_stats", "JaxprAnnotation", "annotate_fn",
     "annotate_jaxpr", "MatmulAnchor", "OffloadPlan", "OffloadStats",

@@ -122,6 +122,10 @@ used on any production path.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+import re
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -412,20 +416,30 @@ class OffloadPlan:
 
 @dataclass
 class OffloadStats:
-    """Observability for the plan cache and the staged executable."""
+    """Observability for the plan cache and the staged executable.
+
+    The ``disk_*`` counters cover the persistent plan cache
+    (``mpu_offload(persist_dir=...)`` / ``MPU_PLAN_CACHE``): a disk hit
+    reconstructs the plan from the durable store instead of re-planning
+    (and is NOT a ``plan_miss``); a corrupt/skewed entry is counted,
+    quarantined on disk, and falls back to a fresh plan."""
 
     plan_hits: int = 0
     plan_misses: int = 0
     traces: int = 0
     evictions: int = 0
     plan_invalidations: int = 0  # cached plans dropped on kernel quarantine
+    disk_hits: int = 0           # plans reconstructed from the durable store
+    disk_misses: int = 0         # store consulted, no usable entry
+    disk_corrupt: int = 0        # checksum/version/structure failures
+    disk_evictions: int = 0      # on-disk LRU entries this wrapper evicted
 
     @property
     def hit_rate(self) -> float:
         """Fraction of calls served straight from the plan cache (0.0
         before the first call)."""
-        total = self.plan_hits + self.plan_misses
-        return self.plan_hits / total if total else 0.0
+        total = self.plan_hits + self.plan_misses + self.disk_hits
+        return (self.plan_hits + self.disk_hits) / total if total else 0.0
 
     def as_dict(self) -> dict[str, float]:
         return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
@@ -433,13 +447,22 @@ class OffloadStats:
     def reset(self) -> None:
         self.plan_hits = self.plan_misses = self.traces = 0
         self.evictions = self.plan_invalidations = 0
+        self.disk_hits = self.disk_misses = 0
+        self.disk_corrupt = self.disk_evictions = 0
 
     def __repr__(self) -> str:
+        disk = ""
+        if self.disk_hits or self.disk_misses or self.disk_corrupt \
+                or self.disk_evictions:
+            disk = (f", disk_hits={self.disk_hits}, "
+                    f"disk_misses={self.disk_misses}, "
+                    f"disk_corrupt={self.disk_corrupt}, "
+                    f"disk_evictions={self.disk_evictions}")
         return (f"OffloadStats(plan_hits={self.plan_hits}, "
                 f"plan_misses={self.plan_misses}, traces={self.traces}, "
                 f"plan_evictions={self.evictions}, "
                 f"plan_invalidations={self.plan_invalidations}, "
-                f"hit_rate={self.hit_rate:.3f})")
+                f"hit_rate={self.hit_rate:.3f}{disk})")
 
 
 def _dtype_size(aval) -> int:
@@ -2062,11 +2085,311 @@ def _segment_call(eqns: Sequence, seg: Segment, read, *, impl: str,
 
 
 # ---------------------------------------------------------------------------
+# Plan serialization: the persistent plan cache's payload format.
+#
+# An OffloadPlan references live jaxpr Vars, so it cannot be pickled
+# directly.  But ``jax.make_jaxpr`` + ``_flatten_calls`` on identical
+# avals is deterministic, so a plan serializes as *positional var ids*
+# over a canonical enumeration of the flattened jaxpr's variables, plus
+# a structural fingerprint of that jaxpr.  Deserialization re-traces
+# (tracing is needed to build the runner anyway), verifies the
+# fingerprint, and rebinds the ids to the fresh trace's Vars — skipping
+# the planner entirely.  Anything that fails to match reads as
+# corruption: counted, quarantined, and replanned from scratch.
+# ---------------------------------------------------------------------------
+
+_PLAN_SCHEMA = 1
+_HEXRE = re.compile(r"0x[0-9a-fA-F]+")
+
+
+class _PlanUnserializable(Exception):
+    """This plan cannot round-trip through the payload format (e.g. a
+    Literal where a Var is expected) — persistence is skipped, nothing
+    else changes."""
+
+
+class _PlanLedgerMismatch(Exception):
+    """A persisted plan does not match the freshly traced program
+    (fingerprint skew, exhausted/trailing entries, or a failed
+    verify-on-load re-plan comparison) — the caller falls back to a
+    fresh plan and quarantines the disk entry."""
+
+
+def _enumerate_vars(jaxpr) -> dict:
+    """Canonical Var -> positional id table (constvars, invars, then
+    each eqn's outvars in program order).  Both serialization and
+    deserialization enumerate the SAME deterministic trace, so ids line
+    up across processes."""
+    table: dict[Any, int] = {}
+
+    def add(v):
+        if not isinstance(v, jcore.Literal) and v not in table:
+            table[v] = len(table)
+
+    for v in jaxpr.constvars:
+        add(v)
+    for v in jaxpr.invars:
+        add(v)
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            add(v)
+    return table
+
+
+def _fp_val(h, val) -> None:
+    if isinstance(val, jcore.ClosedJaxpr):
+        _fp_jaxpr(h, val.jaxpr)
+        return
+    if isinstance(val, jcore.Jaxpr):
+        _fp_jaxpr(h, val)
+        return
+    if isinstance(val, (tuple, list)):
+        h.update(b"(")
+        for v in val:
+            _fp_val(h, v)
+        h.update(b")")
+        return
+    if callable(val):
+        # function params (custom_vjp rules, pjit names): identity by
+        # name only — reprs embed process-local addresses
+        h.update(f"fn:{getattr(val, '__name__', type(val).__name__)}"
+                 .encode())
+        return
+    h.update(_HEXRE.sub("0x", repr(val)).encode())
+
+
+def _fp_jaxpr(h, jaxpr) -> None:
+    ids: dict[Any, int] = {}
+
+    def vid(v) -> str:
+        if isinstance(v, jcore.Literal):
+            return f"L:{_HEXRE.sub('0x', repr(v.val))}:{v.aval}"
+        if v not in ids:
+            ids[v] = len(ids)
+        return f"%{ids[v]}:{v.aval}"
+
+    h.update(";".join(vid(v) for v in jaxpr.constvars).encode())
+    h.update(b"|")
+    h.update(";".join(vid(v) for v in jaxpr.invars).encode())
+    for eqn in jaxpr.eqns:
+        h.update(f"\n{eqn.primitive.name}(".encode())
+        h.update(";".join(vid(v) for v in eqn.invars).encode())
+        h.update(b")->")
+        h.update(";".join(vid(v) for v in eqn.outvars).encode())
+        for k in sorted(eqn.params):
+            h.update(f"|{k}=".encode())
+            _fp_val(h, eqn.params[k])
+    h.update(b"\nout:")
+    h.update(";".join(vid(v) for v in jaxpr.outvars).encode())
+
+
+def _jaxpr_fingerprint(closed: jcore.ClosedJaxpr) -> str:
+    h = hashlib.sha256()
+    _fp_jaxpr(h, closed.jaxpr)
+    return h.hexdigest()
+
+
+def _spec_payload(sp: OperandSpec, vid) -> dict:
+    return {"v": vid(sp.var), "role": sp.role, "rows": sp.rows,
+            "cols": sp.cols, "lead": list(sp.lead),
+            "out_lead": list(sp.out_lead)}
+
+
+def _spec_from(d: dict, rev) -> OperandSpec:
+    return OperandSpec(rev[d["v"]], d["role"], d["rows"], d["cols"],
+                       tuple(d["lead"]), tuple(d["out_lead"]))
+
+
+def _plan_payload(plan: OffloadPlan, closed: jcore.ClosedJaxpr) -> dict:
+    """JSON-able structure of ONE plan level (inner plans are separate
+    ledger entries, recorded in recursion order)."""
+    table = _enumerate_vars(closed.jaxpr)
+
+    def vid(v) -> int:
+        if isinstance(v, jcore.Literal) or v not in table:
+            raise _PlanUnserializable(f"unmappable segment var: {v!r}")
+        return table[v]
+
+    def mm_payload(mm: MatmulAnchor | None):
+        if mm is None:
+            return None
+        flash = None
+        if mm.flash is not None:
+            f = mm.flash
+            flash = {
+                "eqn_idx": f["eqn_idx"], "v_var": vid(f["v_var"]),
+                "p_var": vid(f["p_var"]),
+                "softmax_eqns": list(f["softmax_eqns"]),
+                "scale": float(f["scale"]),
+                "scores_var": vid(f["scores_var"]),
+                "scores_shape": list(f["scores_shape"]),
+                "scores_dtype": str(jnp.dtype(f["scores_dtype"])),
+                "t_dim": f["t_dim"],
+                "const_env": [
+                    [vid(v), float(jnp.asarray(c).reshape(())),
+                     str(jnp.asarray(c).dtype), list(jnp.shape(c))]
+                    for v, c in f["const_env"].items()],
+            }
+        return {
+            "eqn_idx": mm.eqn_idx, "lhs_var": vid(mm.lhs_var),
+            "lhs_specs": [_spec_payload(s, vid) for s in mm.lhs_specs],
+            "rhs": vid(mm.rhs), "pro_eqns": list(mm.pro_eqns),
+            "k": mm.k, "n": mm.n, "out_var": vid(mm.out_var),
+            "out_dtype": str(jnp.dtype(mm.out_dtype)), "form": mm.form,
+            "rhs_specs": [_spec_payload(s, vid) for s in mm.rhs_specs],
+            "rhs_pro_eqns": list(mm.rhs_pro_eqns),
+            "extra_eqns": list(mm.extra_eqns), "batch": mm.batch,
+            "batch_shape": list(mm.batch_shape), "flash": flash,
+        }
+
+    return {
+        "fingerprint": _jaxpr_fingerprint(closed),
+        "naive": plan.naive_hbm_bytes,
+        "fused": plan.fused_hbm_bytes,
+        "donated": plan.donated_hbm_bytes,
+        "segments": [{
+            "eqn_idx": list(s.eqn_idx), "rows": s.rows,
+            "bulk_shape": list(s.bulk_shape),
+            "operand_specs": [_spec_payload(sp, vid)
+                              for sp in s.operand_specs],
+            "outputs": [vid(v) for v in s.outputs],
+            "out_cols": list(s.out_cols),
+            "donations": [list(d) for d in s.donations],
+            "pre_eqns": list(s.pre_eqns), "n_compute": s.n_compute,
+            "span_start": s.span_start, "span_end": s.span_end,
+            "matmul": mm_payload(s.matmul), "vmem_bytes": s.vmem_bytes,
+        } for s in plan.segments],
+        "decisions": [dataclasses.asdict(d) for d in plan.decisions],
+    }
+
+
+def _plan_from_payload(payload: dict, closed: jcore.ClosedJaxpr,
+                       policy: OffloadPolicy) -> OffloadPlan:
+    """Rebind a persisted plan to a freshly traced jaxpr.  Raises
+    ``_PlanLedgerMismatch`` on any structural disagreement."""
+    if payload.get("fingerprint") != _jaxpr_fingerprint(closed):
+        raise _PlanLedgerMismatch("jaxpr fingerprint skew")
+    try:
+        rev = {i: v for v, i in _enumerate_vars(closed.jaxpr).items()}
+        n_eqns = len(closed.jaxpr.eqns)
+
+        def mm_from(d):
+            if d is None:
+                return None
+            flash = None
+            if d["flash"] is not None:
+                f = d["flash"]
+                flash = dict(
+                    eqn_idx=f["eqn_idx"], v_var=rev[f["v_var"]],
+                    p_var=rev[f["p_var"]],
+                    softmax_eqns=tuple(f["softmax_eqns"]),
+                    scale=f["scale"], scores_var=rev[f["scores_var"]],
+                    scores_shape=tuple(f["scores_shape"]),
+                    scores_dtype=jnp.dtype(f["scores_dtype"]),
+                    t_dim=f["t_dim"],
+                    const_env={
+                        rev[i]: jnp.asarray(v, dtype=dt).reshape(shp)
+                        for i, v, dt, shp in f["const_env"]})
+            return MatmulAnchor(
+                eqn_idx=d["eqn_idx"], lhs_var=rev[d["lhs_var"]],
+                lhs_specs=[_spec_from(s, rev) for s in d["lhs_specs"]],
+                rhs=rev[d["rhs"]], pro_eqns=list(d["pro_eqns"]),
+                k=d["k"], n=d["n"], out_var=rev[d["out_var"]],
+                out_dtype=jnp.dtype(d["out_dtype"]), form=d["form"],
+                rhs_specs=[_spec_from(s, rev) for s in d["rhs_specs"]],
+                rhs_pro_eqns=list(d["rhs_pro_eqns"]),
+                extra_eqns=list(d["extra_eqns"]), batch=d["batch"],
+                batch_shape=tuple(d["batch_shape"]), flash=flash)
+
+        segments = []
+        for s in payload["segments"]:
+            if not (0 <= s["span_start"] <= s["span_end"] < n_eqns):
+                raise _PlanLedgerMismatch("segment span out of range")
+            segments.append(Segment(
+                eqn_idx=list(s["eqn_idx"]), rows=s["rows"],
+                bulk_shape=tuple(s["bulk_shape"]),
+                operand_specs=[_spec_from(sp, rev)
+                               for sp in s["operand_specs"]],
+                outputs=[rev[i] for i in s["outputs"]],
+                out_cols=list(s["out_cols"]),
+                donations=[tuple(d) for d in s["donations"]],
+                pre_eqns=list(s["pre_eqns"]), n_compute=s["n_compute"],
+                span_start=s["span_start"], span_end=s["span_end"],
+                matmul=mm_from(s["matmul"]),
+                vmem_bytes=s["vmem_bytes"]))
+        decisions = [SegmentDecision(**{
+            **d, "roles": tuple(d["roles"]), "batch": tuple(d["batch"])})
+            for d in payload["decisions"]]
+    except _PlanLedgerMismatch:
+        raise
+    except Exception as e:
+        raise _PlanLedgerMismatch(f"payload decode failed: {e}") from e
+    ann = annotate_jaxpr(closed, bulk_threshold=policy.bulk_threshold)
+    return OffloadPlan(ann, segments, payload["naive"], payload["fused"],
+                       payload["donated"], decisions=decisions,
+                       policy=policy)
+
+
+def _plan_structure(plan: OffloadPlan) -> tuple:
+    """The structural signature verify-on-load compares: segment spans,
+    block views, and anchor identity — everything that determines WHAT
+    the runner fuses (byte accounting rides along in the payload and is
+    not re-derived, so it is excluded)."""
+    out = []
+    for s in plan.segments:
+        mm = s.matmul
+        out.append((tuple(s.eqn_idx), s.span_start, s.span_end, s.rows,
+                    tuple(s.out_cols), tuple(s.pre_eqns),
+                    tuple(sp.meta for sp in s.operand_specs),
+                    None if mm is None else
+                    (mm.eqn_idx, mm.form, mm.k, mm.n, mm.batch,
+                     mm.flash is not None)))
+    return tuple(out)
+
+
+class _PlanLedger:
+    """Ordered record/replay of every plan one ``_build_runner``
+    recursion builds: the top-level plan first, then scan/pjit body
+    plans in recursion order.  Record mode captures payloads for
+    persistence; replay mode feeds them back so a warm process does
+    ZERO fresh planning.  A plan that cannot serialize poisons the
+    ledger (``entries`` becomes None): the build proceeds normally, it
+    just is not persisted."""
+
+    def __init__(self, entries: list | None = None,
+                 policy: OffloadPolicy | None = None):
+        self.replaying = entries is not None
+        self.entries: list | None = list(entries) if entries is not None \
+            else []
+        self.policy = policy
+        self._i = 0
+
+    def record(self, closed: jcore.ClosedJaxpr, plan: OffloadPlan) -> None:
+        if self.entries is None:
+            return
+        try:
+            self.entries.append(_plan_payload(plan, closed))
+        except _PlanUnserializable:
+            self.entries = None
+
+    def take(self, closed: jcore.ClosedJaxpr) -> OffloadPlan:
+        if self.entries is None or self._i >= len(self.entries):
+            raise _PlanLedgerMismatch("ledger exhausted")
+        payload = self.entries[self._i]
+        self._i += 1
+        return _plan_from_payload(payload, closed, self.policy)
+
+    def complete(self) -> bool:
+        return self.entries is not None and self._i == len(self.entries)
+
+
+# ---------------------------------------------------------------------------
 # The compile-time rewriter.
 # ---------------------------------------------------------------------------
 
 def _build_runner(closed: jcore.ClosedJaxpr, *, policy: OffloadPolicy,
-                  donate_leaves: Sequence[int] = ()
+                  donate_leaves: Sequence[int] = (),
+                  ledger: "_PlanLedger | None" = None
                   ) -> tuple[Callable, OffloadPlan, jcore.ClosedJaxpr]:
     """The compile-time pass: flatten + plan once under ``policy``, then
     bake every offload decision into a flat list of step closures.
@@ -2077,11 +2400,21 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, policy: OffloadPolicy,
     ``kops.fused_segment_grid`` (with donation aliases baked in), scan
     bodies carry a pre-rewritten body runner, non-trivial pjit eqns are
     re-emitted through ``jax.jit`` with their shardings/donation, and
-    everything else re-binds its primitive unchanged."""
+    everything else re-binds its primitive unchanged.
+
+    ``ledger`` threads the persistent plan cache through the recursion:
+    in replay mode each level's plan is reconstructed from the durable
+    payload instead of running the planner; in record mode each level's
+    plan is captured for persistence."""
     closed = _flatten_calls(closed)
     donate_invars = frozenset(closed.jaxpr.invars[i] for i in donate_leaves)
-    plan = plan_offload(closed, policy=policy,
-                        donate_invars=donate_invars)
+    if ledger is not None and ledger.replaying:
+        plan = ledger.take(closed)
+    else:
+        plan = plan_offload(closed, policy=policy,
+                            donate_invars=donate_invars)
+        if ledger is not None:
+            ledger.record(closed, plan)
     jaxpr = closed.jaxpr
     eqns = jaxpr.eqns
     seg_by_start = {s.span_start: s for s in plan.segments}
@@ -2089,7 +2422,8 @@ def _build_runner(closed: jcore.ClosedJaxpr, *, policy: OffloadPolicy,
     def recurse(inner: jcore.ClosedJaxpr, donate_inner: Sequence[int] = ()
                 ) -> tuple[Callable, tuple]:
         inner_run, inner_plan, inner_flat = _build_runner(
-            inner, policy=policy, donate_leaves=donate_inner)
+            inner, policy=policy, donate_leaves=donate_inner,
+            ledger=ledger)
         plan.inner_plans.append(inner_plan)
         return inner_run, tuple(inner_flat.consts)
 
@@ -2303,6 +2637,8 @@ class _CompiledOffload:
 
 def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
                 donate_argnums: int | Sequence[int] = (),
+                persist_dir: str | None = None,
+                verify_loaded: bool | None = None,
                 bulk_threshold: int | None = None,
                 min_segment: int | None = None, impl: str | None = None,
                 max_plans: int | None = None) -> Callable:
@@ -2336,6 +2672,22 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
     ``donate_argnums`` AND the kernels' ``input_output_aliases``); as
     with ``jax.jit``, donated arguments must be fresh on every call.
 
+    ``persist_dir`` (default: the ``MPU_PLAN_CACHE`` env var) enables
+    the **persistent plan cache**: plans are serialized to a durable
+    ``ArtifactStore`` keyed by (policy, direction, jaxpr fingerprint,
+    donation), so a fresh process — or a fleet sharing the directory —
+    starts hot: an in-memory miss that hits disk reconstructs the plan
+    with ZERO fresh planning (``stats.disk_hits``, and NOT a
+    ``plan_miss``).  Corrupt / truncated / version-skewed entries are
+    counted (``disk_corrupt``), quarantined on disk, and fall back to a
+    fresh plan — never an exception.  Guard interplay: while the kernel
+    guard is degraded for this policy's impl, the store is neither read
+    nor written (quarantined kernels must never be served from disk,
+    and degraded all_far plans are never persisted).  ``verify_loaded``
+    (default: the ``MPU_PLAN_VERIFY`` env var) re-plans on every disk
+    load and structurally compares — a safety net for fingerprint
+    collisions that turns any mismatch into ``disk_corrupt``.
+
     ``wrapped`` composes with ``jax.jit`` / donation (the inner jit
     collapses into the outer trace), and exposes:
       * ``wrapped.stats``        — OffloadStats
@@ -2354,6 +2706,22 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
     donate = _normalize_donate(donate_argnums)
     cache: OrderedDict[Any, _CompiledOffload] = OrderedDict()
     stats = OffloadStats()
+    if persist_dir is None:
+        persist_dir = os.environ.get("MPU_PLAN_CACHE") or None
+    if verify_loaded is None:
+        verify_loaded = os.environ.get("MPU_PLAN_VERIFY", "") not in ("", "0")
+    store_box: list = []   # lazily-built ArtifactStore (or None on failure)
+
+    def persist_store():
+        if persist_dir is None:
+            return None
+        if not store_box:
+            from repro.core.artifacts import ArtifactStore
+            try:
+                store_box.append(ArtifactStore(persist_dir))
+            except OSError:
+                store_box.append(None)
+        return store_box[0]
     # the LRU bound is a property of this wrapper's cache, fixed at wrap
     # time (a scoped policy override re-keys plans but does not resize)
     cache_bound = (policy or OffloadPolicy()).max_plans
@@ -2391,14 +2759,84 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
             if count:
                 stats.plan_invalidations += 1
 
-    def compile_for(pol: OffloadPolicy, args) -> _CompiledOffload:
+    def try_disk_load(store, dkey, flat0, pol, donate_leaves):
+        """One attempt to rebuild the runner from a persisted ledger.
+        Returns ``(run, plan, flat)`` or None; every failure mode
+        (checksum, version skew, structure mismatch, failed verify)
+        lands in ``disk_corrupt`` + on-disk quarantine."""
+        raw, status = store.fetch(dkey)
+        if status == "corrupt":
+            stats.disk_corrupt += 1
+            return None
+        if raw is None:
+            stats.disk_misses += 1
+            return None
+        try:
+            doc = json.loads(raw.decode())
+            if doc.get("schema") != _PLAN_SCHEMA:
+                raise _PlanLedgerMismatch("plan payload schema skew")
+            ledger = _PlanLedger(entries=doc["plans"], policy=pol)
+            run, plan, flat = _build_runner(
+                flat0, policy=pol, donate_leaves=donate_leaves,
+                ledger=ledger)
+            if not ledger.complete():
+                raise _PlanLedgerMismatch("trailing ledger entries")
+            if verify_loaded:
+                fresh = plan_offload(
+                    flat, policy=pol,
+                    donate_invars=frozenset(flat.jaxpr.invars[i]
+                                            for i in donate_leaves))
+                if _plan_structure(fresh) != _plan_structure(plan):
+                    raise _PlanLedgerMismatch("verify-on-load mismatch")
+            stats.disk_hits += 1
+            return run, plan, flat
+        except Exception as e:  # counted fallback, never an exception
+            stats.disk_corrupt += 1
+            store.quarantine(dkey, f"{type(e).__name__}: {e}")
+            return None
+
+    def compile_for(pol: OffloadPolicy, args,
+                    count: bool = True) -> _CompiledOffload:
         # one trace serves both the jaxpr and the output tree
         closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
         donate_leaves = _donate_leaf_indices(args, donate)
-        run, plan, flat = _build_runner(
-            closed, policy=pol, donate_leaves=donate_leaves)
-        consts = tuple(flat.consts)
         out_tree = jax.tree.structure(out_shape)
+        # the persistent plan cache (count=False introspection probes
+        # leave the store untouched, like the in-memory LRU).  While the
+        # guard is degraded for this impl the store is bypassed both
+        # ways: a quarantined kernel must never be served from disk, and
+        # a degraded (all_far-coerced) plan must never be persisted.
+        store = persist_store() if count else None
+        degraded = kernel_guard().degraded_for(pol.impl)
+        built = None
+        dkey = None
+        ledger = None
+        if store is not None and not degraded:
+            flat0 = _flatten_calls(closed)
+            dkey = store.key_for("plan", "fwd", repr(pol),
+                                 repr(tuple(donate_leaves)),
+                                 _jaxpr_fingerprint(flat0))
+            built = try_disk_load(store, dkey, flat0, pol, donate_leaves)
+            if built is None:
+                ledger = _PlanLedger()
+        if built is None:
+            if count:
+                stats.plan_misses += 1
+            run, plan, flat = _build_runner(
+                closed, policy=pol, donate_leaves=donate_leaves,
+                ledger=ledger)
+            if ledger is not None and ledger.entries is not None and \
+                    dkey is not None:
+                payload = json.dumps({"schema": _PLAN_SCHEMA,
+                                      "plans": ledger.entries}).encode()
+                evicted = store.put(dkey, payload,
+                                    meta={"direction": "fwd",
+                                          "policy": repr(pol)})
+                if evicted > 0:
+                    stats.disk_evictions += evicted
+        else:
+            run, plan, flat = built
+        consts = tuple(flat.consts)
 
         def flat_runner(*flat_args):
             stats.traces += 1  # counted once per (re)trace, not per call
@@ -2428,8 +2866,10 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
         entry = cache.get(key)
         if entry is None:
             if not count:
-                return compile_for(pol, args), leaves
-            stats.plan_misses += 1
+                return compile_for(pol, args, count=False), leaves
+            # a disk hit inside compile_for reconstructs the plan with
+            # zero fresh planning and counts disk_hits INSTEAD of
+            # plan_misses — a warm restart replans nothing
             entry = cache[key] = compile_for(pol, args)
             while len(cache) > cache_bound:
                 cache.popitem(last=False)

@@ -34,10 +34,18 @@ def main():
     ap.add_argument("--explain-offload", action="store_true",
                     help="print the per-segment offload decision table "
                          "for the decode step; implies --offload")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persistent offload-plan cache directory (sets "
+                         "MPU_PLAN_CACHE): a restarted server warm-"
+                         "starts its decode plan from disk with zero "
+                         "fresh planning; implies --offload")
     args = ap.parse_args()
     # asking for a mode or the decision table means offload is wanted
     args.offload = args.offload or args.explain_offload \
-        or args.offload_mode is not None
+        or args.offload_mode is not None or args.plan_cache is not None
+    if args.plan_cache:
+        import os
+        os.environ["MPU_PLAN_CACHE"] = args.plan_cache
 
     cfg = reduced(get_config(args.arch)) if args.local else get_config(
         args.arch)

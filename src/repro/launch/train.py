@@ -54,7 +54,18 @@ def main():
                     help="offload decision backend (OffloadPolicy.mode): "
                          "'cost' prices each candidate segment near-vs-"
                          "far and declines unprofitable fusions")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persistent offload-plan cache directory (sets "
+                         "MPU_PLAN_CACHE): restarts and fleet peers "
+                         "sharing DIR reuse serialized plans instead of "
+                         "re-planning — corrupt entries are counted, "
+                         "quarantined, and re-planned")
     args = ap.parse_args()
+    if args.plan_cache:
+        # env rather than plumbing: every mpu_offload wrapper built
+        # below (train step, optimizer) picks it up at creation
+        import os
+        os.environ["MPU_PLAN_CACHE"] = args.plan_cache
 
     cfg = get_config(args.arch)
     if args.local:

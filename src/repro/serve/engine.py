@@ -166,10 +166,12 @@ class Engine:
                                "alloc_stalls": 0, "kernel_replans": 0,
                                "reject_queue_full": 0, "reject_deadline": 0}
         if fault_injector is not None:
-            # make trace-time kernel dispatch see the same injector the
-            # step-time fault classes use (see serve.faults)
+            # make trace-time kernel dispatch and durable-artifact IO see
+            # the same injector the step-time fault classes use
+            from repro.core.artifacts import set_disk_injector
             from repro.kernels.guard import set_injector
             set_injector(fault_injector)
+            set_disk_injector(fault_injector)
 
         # the hot path: with offload on, the decode step goes through
         # the compile-time near-bank rewriter; the plan is built once

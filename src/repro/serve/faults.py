@@ -17,15 +17,19 @@ classes:
 * **page-alloc failures** — ``page_alloc`` makes ``PagePool`` growth
   transiently fail, driving the engine's pause/retry path.
 * **slow steps** — ``slow_step`` sleeps, driving deadline expiry.
+* **disk IO faults** — ``disk_io`` makes durable-artifact reads/writes
+  (``core/artifacts.py``: the persistent plan cache and the hardened
+  checkpoint store) raise or return truncated bytes, driving the
+  counted-miss / quarantine / walk-back degradation paths.
 
 Each class draws from its own ``numpy`` Generator stream (seed + class
 offset), so enabling one class never perturbs another's sequence — a
 chaos run's fault schedule is a pure function of (seed, call counts).
 
 ``inject(injector)`` installs the injector on the process-wide kernel
-guard for a scope; ``Engine(fault_injector=...)`` does the same for the
-engine's lifetime and additionally consults the injector for the
-step-time classes (NaN, page, slow).
+guard AND the artifact layer for a scope; ``Engine(fault_injector=...)``
+does the same for the engine's lifetime and additionally consults the
+injector for the step-time classes (NaN, page, slow).
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.artifacts import set_disk_injector
 from repro.kernels.guard import set_injector
 
 
@@ -55,6 +60,8 @@ class FaultConfig:
     page_fail_rate: float = 0.0
     slow_step_rate: float = 0.0
     slow_step_s: float = 0.0
+    disk_fail_rate: float = 0.0
+    disk_truncate_share: float = 0.5  # of triggered faults: torn vs raise
     seed: int = 0
 
 
@@ -72,10 +79,11 @@ class FaultInjector:
         self._rng_nan = np.random.default_rng(s + 2)
         self._rng_page = np.random.default_rng(s + 3)
         self._rng_slow = np.random.default_rng(s + 4)
+        self._rng_disk = np.random.default_rng(s + 5)
         self._burst: dict = {}      # (kernel, impl) -> remaining failures
         self._nan_total = 0
         for k in ("kernel_faults", "nan_injected", "page_faults_injected",
-                  "slow_steps"):
+                  "slow_steps", "disk_faults_injected"):
             self.counters.setdefault(k, 0)
 
     # -- kernel launch (called from KernelGuard.run, trace time) ------------
@@ -133,16 +141,33 @@ class FaultInjector:
             self.counters["slow_steps"] += 1
             time.sleep(self.cfg.slow_step_s)
 
+    def disk_io(self, op: str) -> str | None:
+        """Consulted by ``core/artifacts.py`` on every durable read or
+        write.  Returns ``None`` (no fault), ``"raise"`` (IO error) or
+        ``"truncate"`` (torn transfer: the payload is cut short, which a
+        reader must detect via the commit marker's checksum)."""
+        if self.cfg.disk_fail_rate <= 0.0:
+            return None
+        if self._rng_disk.random() >= self.cfg.disk_fail_rate:
+            return None
+        self.counters["disk_faults_injected"] += 1
+        if self._rng_disk.random() < self.cfg.disk_truncate_share:
+            return "truncate"
+        return "raise"
+
     def stats(self) -> dict:
         return dict(self.counters)
 
 
 @contextlib.contextmanager
 def inject(injector: FaultInjector | None):
-    """Install ``injector`` on the process kernel guard for the scope of
-    the ``with`` block (restores the previous injector on exit)."""
+    """Install ``injector`` on the process kernel guard AND the durable
+    artifact layer for the scope of the ``with`` block (restores the
+    previous injectors on exit)."""
     prev = set_injector(injector)
+    prev_disk = set_disk_injector(injector)
     try:
         yield injector
     finally:
         set_injector(prev)
+        set_disk_injector(prev_disk)

@@ -39,6 +39,7 @@ def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
 
     history: list[dict] = []
     t_start = time.monotonic()
+    last_step = start - 1      # last step actually executed THIS run
     for step in range(start, total):
         batch = data.batch(step, host_id=host_id, num_hosts=num_hosts)
         if cfg.frontend != "none":
@@ -65,5 +66,13 @@ def train(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, *,
         # a hard-deadline miss is the runbook's swap/restart trigger:
         # commit the state first so the restart loses nothing
         mgr.maybe_save(step, state, force=missed)
-    mgr.maybe_save(total - 1, state, force=(tcfg.checkpoint_every > 0))
+        last_step = step
+    # final commit: labeled with the step the state actually reflects.
+    # Guarding on last_step >= start matters when a restart finds
+    # start >= total (e.g. total was lowered): force-saving the restored
+    # state under the label total-1 would mislabel a LATER state as an
+    # earlier step — after retention, a future resume at total would
+    # silently re-apply batches the state already contains.
+    if last_step >= start:
+        mgr.maybe_save(last_step, state, force=(tcfg.checkpoint_every > 0))
     return state, history

@@ -1,0 +1,410 @@
+"""Durable artifacts: the store's failure contract and the persistent
+offload-plan cache built on it.
+
+The contract under test (docs/robustness.md "Durable artifacts"):
+  * atomic commit — ``.bin`` without ``.ok`` is a torn write and reads
+    as a MISS, never as data;
+  * every corruption class — bit-flip, truncation, version/environment
+    skew, unparsable marker — is COUNTED, the entry is quarantined on
+    disk, and the caller recomputes: no exception, no wrong answer;
+  * the persistent plan cache serves a warm process with ZERO fresh
+    plans (plan_misses == 0, disk_hits > 0) and bit-identical outputs,
+    and degrades to a counted cold start under any corruption;
+  * injected ``disk_io`` faults (serve.faults) surface as write
+    failures / corrupt reads, not crashes.
+"""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpu_offload
+from repro.core.artifacts import (
+    ArtifactStore,
+    atomic_write_bytes,
+    env_key,
+    file_lock,
+    read_bytes,
+    set_disk_injector,
+    sha256_bytes,
+)
+from repro.kernels.guard import kernel_guard
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def _chain(x, y):
+    h = jnp.tanh(x) * 2.0 + y
+    return h * jax.nn.sigmoid(h)
+
+
+# ---------------------------------------------------------------------------
+# ArtifactStore primitives
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_hit_miss(tmp_path):
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("plan", "fwd", "sig")
+    assert store.get(key) is None
+    assert store.counters["misses"] == 1
+    store.put(key, b"payload-bytes", meta={"kind": "test"})
+    data, status = store.fetch(key)
+    assert status == "hit" and data == b"payload-bytes"
+    assert store.counters == {"hits": 1, "misses": 1, "corrupt": 0,
+                              "writes": 1, "write_failures": 0,
+                              "evictions": 0}
+    assert len(store) == 1 and store.keys() == [key]
+
+
+def test_key_includes_environment(tmp_path):
+    """Two stores over the same dir agree on keys; the env key is baked
+    in, so a schema/version change re-keys every entry."""
+    a, b = ArtifactStore(tmp_path), ArtifactStore(tmp_path)
+    assert a.key_for("x") == b.key_for("x")
+    assert a.key_for("x") != a.key_for("y")
+    b._env = dict(a._env, schema=a._env["schema"] + 1)
+    assert a.key_for("x") != b.key_for("x")
+
+
+def test_torn_write_is_miss_not_corrupt(tmp_path):
+    """A crash between the payload rename and the marker rename leaves
+    ``.bin`` without ``.ok`` — the reader treats it as absent."""
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    (tmp_path / f"{key}.bin").write_bytes(b"half-written")
+    data, status = store.fetch(key)
+    assert data is None and status == "miss"
+    assert store.counters["corrupt"] == 0
+
+
+def test_bitflip_quarantined(tmp_path):
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    store.put(key, b"A" * 64)
+    bin_p = tmp_path / f"{key}.bin"
+    raw = bytearray(bin_p.read_bytes())
+    raw[10] ^= 0x40
+    bin_p.write_bytes(bytes(raw))
+
+    data, status = store.fetch(key)
+    assert data is None and status == "corrupt"
+    assert store.counters["corrupt"] == 1
+    # quarantined on disk: marker gone, payload renamed, reason recorded
+    assert not (tmp_path / f"{key}.ok").exists()
+    assert (tmp_path / f"{key}.corrupt").exists()
+    assert "checksum" in (tmp_path / f"{key}.why").read_text()
+    # never served again: subsequent reads are plain misses
+    assert store.fetch(key) == (None, "miss")
+
+
+def test_truncation_quarantined(tmp_path):
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    store.put(key, b"B" * 128)
+    bin_p = tmp_path / f"{key}.bin"
+    bin_p.write_bytes(bin_p.read_bytes()[:13])
+    assert store.fetch(key) == (None, "corrupt")
+    assert store.counters["corrupt"] == 1
+    assert (tmp_path / f"{key}.corrupt").exists()
+
+
+def test_version_skew_quarantined(tmp_path):
+    """An entry committed by a different repro/jax/schema version must
+    not deserialize — the marker's env key disagrees and the entry is
+    quarantined exactly like checksum corruption."""
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    store.put(key, b"C" * 32)
+    marker_p = tmp_path / f"{key}.ok"
+    rec = json.loads(marker_p.read_text())
+    rec["env"] = dict(rec["env"], jax="0.0.1-other")
+    marker_p.write_text(json.dumps(rec))
+    assert store.fetch(key) == (None, "corrupt")
+    assert "skew" in (tmp_path / f"{key}.why").read_text()
+
+
+def test_unparsable_marker_quarantined(tmp_path):
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    store.put(key, b"D" * 32)
+    (tmp_path / f"{key}.ok").write_bytes(b"not json {")
+    assert store.fetch(key) == (None, "corrupt")
+    assert store.counters["corrupt"] == 1
+
+
+def test_lru_eviction_bounded_and_recency(tmp_path):
+    store = ArtifactStore(tmp_path, max_entries=3)
+    keys = [store.key_for(f"k{i}") for i in range(5)]
+    for i, k in enumerate(keys[:3]):
+        store.put(k, bytes([i]) * 8)
+        os.utime(tmp_path / f"{k}.ok", (1000 + i, 1000 + i))
+    # touch k0 (a hit bumps recency) so k1 becomes the LRU victim
+    os.utime(tmp_path / f"{keys[0]}.ok", (2000, 2000))
+    store.put(keys[3], b"x" * 8)
+    assert len(store) == 3
+    assert store.counters["evictions"] == 1
+    assert store.get(keys[1]) is None          # evicted
+    assert store.get(keys[0]) is not None      # kept: recently touched
+    assert store.get(keys[3]) is not None      # kept: just written
+
+
+def test_max_bytes_eviction(tmp_path):
+    store = ArtifactStore(tmp_path, max_bytes=100)
+    k1, k2 = store.key_for("a"), store.key_for("b")
+    store.put(k1, b"x" * 80)
+    os.utime(tmp_path / f"{k1}.ok", (1000, 1000))
+    evicted = store.put(k2, b"y" * 80)
+    assert evicted == 1 and len(store) == 1
+    assert store.get(k2) is not None
+
+
+def test_atomic_write_and_lock(tmp_path):
+    p = tmp_path / "f.bin"
+    atomic_write_bytes(p, b"hello")
+    assert read_bytes(p) == b"hello"
+    assert not p.with_name("f.bin.tmp").exists()
+    with file_lock(tmp_path / ".lock"):
+        atomic_write_bytes(p, b"world")
+    assert read_bytes(p) == b"world"
+    assert sha256_bytes(b"world") != sha256_bytes(b"hello")
+    assert set(env_key()) == {"repro", "jax", "schema"}
+
+
+# ---------------------------------------------------------------------------
+# injected disk faults (the serve.faults "disk_io" class)
+# ---------------------------------------------------------------------------
+
+def test_disk_fault_raise_is_counted_write_failure(tmp_path):
+    from repro.serve.faults import FaultConfig, FaultInjector
+
+    store = ArtifactStore(tmp_path)
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=0.0, seed=0))
+    prev = set_disk_injector(inj)
+    try:
+        assert store.put(store.key_for("k"), b"payload") == -1
+    finally:
+        set_disk_injector(prev)
+    assert store.counters["write_failures"] == 1
+    assert inj.counters["disk_faults_injected"] >= 1
+    assert len(store) == 0                     # nothing half-committed
+
+
+def test_disk_fault_truncate_reads_as_corrupt(tmp_path):
+    """A torn transfer (write truncated under the marker's nose) is
+    caught by the checksum on the NEXT read and quarantined."""
+    from repro.serve.faults import FaultConfig, FaultInjector
+
+    store = ArtifactStore(tmp_path)
+    key = store.key_for("k")
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=1.0, seed=0))
+    prev = set_disk_injector(inj)
+    try:
+        store.put(key, b"E" * 256)
+    finally:
+        set_disk_injector(prev)
+    assert store.fetch(key)[1] in ("corrupt", "miss")
+    assert store.counters["corrupt"] + store.counters["misses"] >= 1
+    assert store.get(key) is None
+
+
+def test_inject_contextmanager_installs_disk_hook(tmp_path):
+    from repro.serve.faults import FaultConfig, FaultInjector, inject
+
+    store = ArtifactStore(tmp_path)
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=0.0, seed=0))
+    with inject(inj):
+        assert store.put(store.key_for("k"), b"z") == -1
+    # restored on exit: writes succeed again
+    assert store.put(store.key_for("k"), b"z") >= 0
+
+
+# ---------------------------------------------------------------------------
+# persistent plan cache (mpu_offload persist_dir / MPU_PLAN_CACHE)
+# ---------------------------------------------------------------------------
+
+def _warm_pair(tmp_path, fn, *args, **kw):
+    """Cold wrapper persists; a FRESH wrapper over the same dir warms."""
+    cold = mpu_offload(fn, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path, **kw)
+    out_cold = cold(*args)
+    warm = mpu_offload(fn, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path, **kw)
+    out_warm = warm(*args)
+    return cold, warm, out_cold, out_warm
+
+
+def test_plan_cache_warm_start_zero_fresh_plans(tmp_path):
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    cold, warm, out_cold, out_warm = _warm_pair(tmp_path, _chain, x, y)
+    assert cold.stats.plan_misses == 1 and cold.stats.disk_misses == 1
+    # the acceptance bar: a warm restart replans NOTHING
+    assert warm.stats.plan_misses == 0
+    assert warm.stats.disk_hits == 1 and warm.stats.disk_corrupt == 0
+    np.testing.assert_array_equal(np.asarray(out_cold), np.asarray(out_warm))
+
+
+def test_plan_cache_scan_inner_plans_roundtrip(tmp_path):
+    w = _rand((64, 64), 2) * 0.1
+
+    def f(x):
+        def body(c, _):
+            h = jax.nn.gelu(c @ w) * 1.5 + c
+            return h, jnp.sum(h)
+        return jax.lax.scan(body, x, None, length=4)
+
+    x = _rand((128, 64), 3)
+    cold, warm, out_cold, out_warm = _warm_pair(tmp_path, f, x)
+    assert warm.stats.plan_misses == 0 and warm.stats.disk_hits == 1
+    for a, b in zip(jax.tree.leaves(out_cold), jax.tree.leaves(out_warm)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the warm plan has the same segment structure (scan body included)
+    assert warm.plan_for(x).total_segments == cold.plan_for(x).total_segments
+
+
+def _corrupt_one_bin(d: pathlib.Path, mutate):
+    bins = sorted(pathlib.Path(d).glob("*.bin"))
+    assert bins, "no persisted plan entry found"
+    raw = bytearray(bins[0].read_bytes())
+    bins[0].write_bytes(bytes(mutate(raw)))
+
+
+def test_plan_cache_bitflip_counted_and_cold_identical(tmp_path):
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    ref = mpu_offload(_chain, bulk_threshold=64, impl="interpret")(x, y)
+    cold = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path)
+    cold(x, y)
+
+    def flip(raw):
+        raw[len(raw) // 2] ^= 0x01
+        return raw
+    _corrupt_one_bin(tmp_path, flip)
+
+    warm = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path)
+    out = warm(x, y)
+    assert warm.stats.disk_corrupt == 1
+    assert warm.stats.plan_misses == 1         # counted re-plan, no crash
+    assert list(pathlib.Path(tmp_path).glob("*.corrupt"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_plan_cache_truncation_counted_and_cold_identical(tmp_path):
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    ref = mpu_offload(_chain, bulk_threshold=64, impl="interpret")(x, y)
+    mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                persist_dir=tmp_path)(x, y)
+    _corrupt_one_bin(tmp_path, lambda raw: raw[:len(raw) // 3])
+    warm = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path)
+    out = warm(x, y)
+    assert warm.stats.disk_corrupt == 1 and warm.stats.plan_misses == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_plan_cache_version_skew_counted(tmp_path):
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                persist_dir=tmp_path)(x, y)
+    for marker_p in pathlib.Path(tmp_path).glob("*.ok"):
+        rec = json.loads(marker_p.read_text())
+        rec["env"] = dict(rec["env"], schema=-1)
+        marker_p.write_text(json.dumps(rec))
+    warm = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path)
+    warm(x, y)
+    assert warm.stats.disk_corrupt == 1 and warm.stats.plan_misses == 1
+
+
+def test_plan_cache_verify_on_load(tmp_path):
+    """MPU_PLAN_VERIFY mode re-plans and structurally compares before
+    trusting a loaded entry — a clean entry still counts as a disk hit
+    and stays bit-identical."""
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    cold = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path)
+    out_cold = cold(x, y)
+    warm = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                       persist_dir=tmp_path, verify_loaded=True)
+    out_warm = warm(x, y)
+    assert warm.stats.disk_hits == 1 and warm.stats.plan_misses == 0
+    np.testing.assert_array_equal(np.asarray(out_cold), np.asarray(out_warm))
+
+
+def test_plan_cache_env_var_activates(tmp_path, monkeypatch):
+    monkeypatch.setenv("MPU_PLAN_CACHE", str(tmp_path))
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    mpu_offload(_chain, bulk_threshold=64, impl="interpret")(x, y)
+    assert list(pathlib.Path(tmp_path).glob("*.ok")), \
+        "MPU_PLAN_CACHE did not activate persistence"
+    warm = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    warm(x, y)
+    assert warm.stats.disk_hits == 1 and warm.stats.plan_misses == 0
+
+
+def test_degraded_guard_bypasses_disk_both_ways(tmp_path):
+    """While a fused-segment kernel is quarantined at the policy's impl,
+    plans are degraded (all_far): they must be neither persisted nor
+    served from disk — a degraded plan on disk would poison healthy
+    restarts."""
+    g = kernel_guard()
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    # persist a healthy plan first
+    mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                persist_dir=tmp_path)(x, y)
+    n_entries = len(list(pathlib.Path(tmp_path).glob("*.ok")))
+    assert n_entries >= 1
+    for _ in range(g.threshold):
+        g.record_failure("fused_segment", "interpret")
+    try:
+        assert g.degraded_for("interpret")
+        degraded = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                               persist_dir=tmp_path)
+        out = degraded(x, y)
+        # no disk read, no disk write while degraded
+        assert degraded.stats.disk_hits == 0
+        assert degraded.stats.disk_misses == 0
+        assert len(list(pathlib.Path(tmp_path).glob("*.ok"))) == n_entries
+        np.testing.assert_allclose(np.asarray(out), np.asarray(_chain(x, y)),
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        g.reset()
+
+
+def test_plan_cache_disk_fault_injection_never_raises(tmp_path):
+    """With the disk_io fault class firing on every IO, the wrapper
+    still produces correct output — faults surface only as counters."""
+    from repro.serve.faults import FaultConfig, FaultInjector, inject
+
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=0.5, seed=11))
+    with inject(inj):
+        fn = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                         persist_dir=tmp_path)
+        out = fn(x, y)
+    assert inj.counters["disk_faults_injected"] >= 1
+    assert fn.stats.plan_misses == 1           # planned fresh, no crash
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_chain(x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stats_repr_mentions_disk_only_when_used(tmp_path):
+    x, y = _rand((64, 32)), _rand((64, 32), 1)
+    plain = mpu_offload(_chain, bulk_threshold=64, impl="interpret")
+    plain(x, y)
+    assert "disk" not in repr(plain.stats)     # legacy repr untouched
+    persisted = mpu_offload(_chain, bulk_threshold=64, impl="interpret",
+                            persist_dir=tmp_path)
+    persisted(x, y)
+    assert "disk_misses=1" in repr(persisted.stats)
+    d = persisted.stats.as_dict()
+    assert d["disk_misses"] == 1 and d["disk_hits"] == 0

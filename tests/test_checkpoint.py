@@ -12,12 +12,15 @@ import numpy as np
 import pytest
 
 from repro.ckpt import (
+    CheckpointCorrupt,
     StragglerMonitor,
     all_steps,
     elastic_data_axis,
     latest_step,
+    newest_restorable,
     restore,
     save,
+    verify_step,
 )
 
 
@@ -114,6 +117,175 @@ def test_crash_restart_resumes_bit_identical(tmp_path):
     for h in hist_ref:
         if h["step"] in replayed:
             assert h["loss"] == replayed[h["step"]], h["step"]
+
+
+# ---------------------------------------------------------------------------
+# hardened store: verification, corruption walk-back, retention safety
+# ---------------------------------------------------------------------------
+
+def _mgr(d, **kw):
+    from repro.ckpt import CheckpointManager
+    from repro.configs import TrainConfig
+    return CheckpointManager(
+        TrainConfig(checkpoint_dir=str(d), checkpoint_every=1, **kw))
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_verify_step_statuses(tmp_path):
+    assert verify_step(tmp_path, 1) == "missing"
+    save(tmp_path, 1, _tree())
+    assert verify_step(tmp_path, 1) == "verified"
+    # pre-checksum format: manifest + shards but no commit marker
+    save(tmp_path, 2, _tree())
+    (tmp_path / "step_2" / "commit.json").unlink()
+    assert verify_step(tmp_path, 2) == "legacy"
+    # bit-flip a shard: the marker's file sha disagrees
+    save(tmp_path, 3, _tree())
+    shard = next((tmp_path / "step_3").glob("shard_*.npz"))
+    raw = bytearray(shard.read_bytes())
+    raw[len(raw) // 2] ^= 0x10
+    shard.write_bytes(bytes(raw))
+    assert verify_step(tmp_path, 3) == "corrupt"
+    assert newest_restorable(tmp_path) == 2
+
+
+def test_crash_between_write_and_rename_falls_back_bit_exact(tmp_path):
+    """Kill between the tmp-dir write and the rename: only a ``.tmp``
+    dir exists for the newest step; restore lands on the previous
+    complete step, bit-exactly."""
+    t1, t2 = _tree(1), _tree(2)
+    save(tmp_path, 1, t1)
+    save(tmp_path, 2, t2)
+    # simulated crash mid-save of step 3: full payload, no rename
+    import shutil
+    shutil.copytree(tmp_path / "step_2", tmp_path / "step_3.tmp")
+    mgr = _mgr(tmp_path)
+    state, start = mgr.restore_or_init(lambda: jax.tree.map(
+        jnp.zeros_like, t2))
+    assert start == 3                      # resumed after step 2
+    _assert_trees_equal(state, t2)
+    assert mgr.counters["restore_walkbacks"] == 0   # .tmp is invisible
+
+
+def test_corrupt_newest_walks_back_bit_exact(tmp_path):
+    t1, t2, t3 = _tree(1), _tree(2), _tree(3)
+    save(tmp_path, 1, t1)
+    save(tmp_path, 2, t2)
+    save(tmp_path, 3, t3)
+    # bit-flip newest; truncate its manifest for good measure
+    shard = next((tmp_path / "step_3").glob("shard_*.npz"))
+    shard.write_bytes(shard.read_bytes()[:40])
+    mgr = _mgr(tmp_path)
+    state, start = mgr.restore_or_init(lambda: jax.tree.map(
+        jnp.zeros_like, t3))
+    assert start == 3                      # walked back to step 2
+    _assert_trees_equal(state, t2)
+    assert mgr.counters["restore_corrupt_skipped"] == 1
+    assert mgr.counters["restore_walkbacks"] == 1
+
+
+def test_restore_raises_checkpoint_corrupt_on_bitflip(tmp_path):
+    tree = _tree()
+    save(tmp_path, 1, tree)
+    shard = next((tmp_path / "step_1").glob("shard_*.npz"))
+    raw = bytearray(shard.read_bytes())
+    raw[-30] ^= 0x01
+    shard.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointCorrupt):
+        restore(tmp_path, 1, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_retention_never_deletes_last_known_good(tmp_path):
+    """A torn commit (every write truncated by the injected disk fault)
+    must not trigger retention: the older verified steps survive, and
+    restore walks back to them."""
+    from repro.serve.faults import FaultConfig, FaultInjector, inject
+
+    t1, t2 = _tree(1), _tree(2)
+    save(tmp_path, 1, t1, keep=5)
+    save(tmp_path, 2, t2, keep=5)
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=1.0, seed=3))
+    with inject(inj):
+        save(tmp_path, 3, _tree(3), keep=1)
+    assert inj.counters["disk_faults_injected"] >= 1
+    # keep=1 would normally leave only step 3 — but 3's commit is torn,
+    # so nothing was deleted and the good history survives
+    assert all_steps(tmp_path) == [1, 2, 3]
+    assert verify_step(tmp_path, 3) == "corrupt"
+    assert newest_restorable(tmp_path) == 2
+    mgr = _mgr(tmp_path)
+    state, start = mgr.restore_or_init(lambda: jax.tree.map(
+        jnp.zeros_like, t2))
+    assert start == 3
+    _assert_trees_equal(state, t2)
+    # a later healthy commit resumes retention
+    save(tmp_path, 4, _tree(4), keep=1)
+    assert all_steps(tmp_path) == [4]
+
+
+def test_save_failure_is_counted_not_raised(tmp_path):
+    from repro.serve.faults import FaultConfig, FaultInjector, inject
+
+    mgr = _mgr(tmp_path)
+    inj = FaultInjector(FaultConfig(disk_fail_rate=1.0,
+                                    disk_truncate_share=0.0, seed=0))
+    with inject(inj):
+        assert mgr.maybe_save(1, _tree(), force=True) is None
+    assert mgr.counters["save_failures"] == 1
+    assert all_steps(tmp_path) == []
+
+
+def test_final_save_not_mislabeled_when_total_shrinks(tmp_path):
+    """Regression for the final-commit off-by-one: restarting with a
+    LOWER total than the restored step must not force-save the restored
+    (later) state under the label ``total - 1`` — that checkpoint would
+    silently re-apply batches on the next resume."""
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.train.loop import train
+
+    import dataclasses
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              num_layers=2, dtype="float32")
+    shape = ShapeConfig("smoke", 32, 4, "train")
+
+    def tcfg(total):
+        return TrainConfig(total_steps=total, warmup_steps=2,
+                           checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                           learning_rate=1e-3)
+
+    train(cfg, shape, tcfg(6), log_every=0)
+    steps_before = all_steps(tmp_path)
+    assert latest_step(tmp_path) == 5
+    # restart with total lowered below the restored start: the loop body
+    # never runs, so NOTHING new may be committed (the old bug force-
+    # saved state-after-5 as step 3)
+    _, hist = train(cfg, shape, tcfg(4), log_every=0)
+    assert hist == []
+    assert all_steps(tmp_path) == steps_before
+    assert latest_step(tmp_path) == 5
+
+
+def test_straggler_monitor_bounded_window():
+    """times/flagged/deadline_misses stay bounded by ``window`` over an
+    unbounded run; lifetime totals and missed_deadline() still work."""
+    mon = StragglerMonitor(tolerance=2.0, window=5, deadline_s=1e-9)
+    for step in range(40):
+        mon.start()
+        mon._t0 -= 1.0                     # every step "takes" ~1s
+        assert mon.stop(step) is True      # trips the hard deadline
+        assert mon.missed_deadline(step) is True
+    assert len(mon.times) <= 5
+    assert len(mon.flagged) <= 5
+    assert len(mon.deadline_misses) <= 5
+    assert mon.total_deadline_misses == 40
+    assert mon.total_flagged == 40
+    assert mon.flagged[-1][0] == 39
 
 
 def test_straggler_monitor_flags_outliers():
