@@ -91,7 +91,10 @@ ARTIFACT = ROOT / "BENCH_offload.json"
 
 # v7: rows/summary grow persistent-plan-cache counters (disk_hits /
 # disk_misses / disk_corrupt, summary["plan_cache"])
-SCHEMA_VERSION = 7
+# v8: rows grow a static-verifier verdict ("verified": no finding of
+# severity >= error from repro.analysis.verify_plan); check_regressions
+# fails any unverified chain
+SCHEMA_VERSION = 8
 
 # Committed fusion contract: chain -> (segments, traffic_reduction
 # floor, anchored-backward-segment floor).  A later segmenter change
@@ -305,6 +308,11 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5,
         # executable does NOT donate (the timing loop reuses its inputs)
         plan = offload_report(fn, *args, policy=policy,
                               donate_argnums=donate)
+        # static-verifier verdict on the measured plan: alias safety,
+        # index bounds, VMEM legality (warnings are advisory; errors
+        # fail the contract check below)
+        from repro.analysis import verify_plan
+        verified = not any(f.severity == "error" for f in verify_plan(plan))
 
         compiled = mpu_offload(fn, policy=policy)
         interpreted = mpu_offload_interpreted(fn, policy=policy)
@@ -317,6 +325,7 @@ def run(write_artifact: bool = True, reps: int = 30, interp_reps: int = 5,
 
         rows.append({
             "chain": name,
+            "verified": verified,
             "segments": len(plan.segments),
             "declined": sum(1 for d in plan.decisions if not d.fused),
             "near_far_ratio": near_us / far_us if far_us else 0.0,
@@ -425,6 +434,11 @@ def check_regressions(rows, baseline: dict | None = None) -> list[str]:
     if missing:        # a contracted chain vanished from the suite
         bad.append(f"chains missing from the run: {sorted(missing)}")
     for r in rows:
+        # schema v8: every chain's plan must pass the static verifier
+        # (rows from a pre-v8 baseline lack the key — default to True)
+        if not r.get("verified", True):
+            bad.append(f"{r['chain']} plan failed static verification "
+                       f"(run python -m repro.analysis.lint --chains)")
         contract = MUST_FUSE.get(r["chain"])
         if contract is None:
             continue
@@ -457,7 +471,7 @@ def _load_baseline() -> dict | None:
     return prev if prev.get("schema_version") == SCHEMA_VERSION else None
 
 
-_CSV_COLS = ["chain", "segments", "declined", "near_far_ratio",
+_CSV_COLS = ["chain", "verified", "segments", "declined", "near_far_ratio",
              "anchored", "anchored_bwd",
              "naive_mb", "fused_mb",
              "donated_mb", "effective_mb", "traffic_reduction",
@@ -536,6 +550,7 @@ if __name__ == "__main__":
         for r in rows:
             mark = "*" if r["anchored"] else " "
             mark = "+" if r["anchored_bwd"] else mark
+            mark = "!" if not r["verified"] else mark
             print(f"{r['chain']:14s} segs={r['segments']}{mark} "
                   f"declined={r['declined']} "
                   f"nf={r['near_far_ratio']:.2f} "
@@ -546,8 +561,8 @@ if __name__ == "__main__":
                   f"speedup={r['compiled_speedup']:7.1f}x "
                   f"retraces={r['retraces']}")
         print("(* = matmul-anchored segment, + = anchored backward "
-              "segment; nf = modeled near/far time ratio over all "
-              "candidate segments)")
+              "segment, ! = failed static verification; nf = modeled "
+              "near/far time ratio over all candidate segments)")
     print(_geomean_line(summary))
     cache_line = _plan_cache_line(summary)
     if cache_line:
@@ -568,7 +583,8 @@ if __name__ == "__main__":
     if policy_mode == "greedy":
         # the MUST_FUSE contract and the artifact ratchet are committed
         # for the default greedy policy; other policies report only
-        regressed = check_regressions(rows, baseline)
+        # (+=: an --assert-warm failure above must survive this block)
+        regressed += check_regressions(rows, baseline)
         cost_bad, g_cost = check_cost_vs_greedy()
         regressed += cost_bad
         print(f"cost-mode geomean traffic_reduction={g_cost:.2f}x "

@@ -386,15 +386,30 @@ class OffloadPlan:
 
     def report(self) -> DecisionReport:
         """The per-segment decision report (see ``DecisionReport``),
-        nested reports covering scan/pjit bodies."""
+        nested reports covering scan/pjit bodies.  Every fused decision
+        row is cross-checked against its emitted segment and rendered
+        with a ``verified`` status ("ok" / "MISMATCH(...)" /
+        "MISSING-SEGMENT") so decision/plan drift is visible instead of
+        silently unreported."""
+        from repro.analysis.verifier import decision_statuses
         from repro.core.policy import DEFAULT_POLICY
 
+        statuses = decision_statuses(self)
         return DecisionReport(
             policy=self.policy or DEFAULT_POLICY,
-            decisions=list(self.decisions),
+            decisions=[d._with(verified=s)
+                       for d, s in zip(self.decisions, statuses)],
             naive_bytes=self.naive_hbm_bytes,
             fused_bytes=self.fused_hbm_bytes,
             inner=[p.report() for p in self.inner_plans])
+
+    def verify(self, closed=None) -> list:
+        """Statically verify this plan (alias safety, index-map
+        coverage/bounds, VMEM legality, well-formedness); returns the
+        list of ``repro.analysis.Finding``.  See docs/analysis.md."""
+        from repro.analysis import verify_plan
+
+        return verify_plan(self, closed)
 
     @property
     def traffic_reduction(self) -> float:
@@ -2639,6 +2654,7 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
                 donate_argnums: int | Sequence[int] = (),
                 persist_dir: str | None = None,
                 verify_loaded: bool | None = None,
+                verify_plans: bool | None = None,
                 bulk_threshold: int | None = None,
                 min_segment: int | None = None, impl: str | None = None,
                 max_plans: int | None = None) -> Callable:
@@ -2688,6 +2704,13 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
     load and structurally compares — a safety net for fingerprint
     collisions that turns any mismatch into ``disk_corrupt``.
 
+    ``verify_plans`` (default: the ``MPU_VERIFY_PLANS`` env var) runs
+    the static plan verifier (``repro.analysis``) over every plan this
+    wrapper compiles — fresh AND disk-loaded — and raises
+    ``PlanVerificationError`` on any error-severity finding before the
+    plan is staged.  Plans persisted under verification carry a
+    ``verified`` marker in their artifact meta.
+
     ``wrapped`` composes with ``jax.jit`` / donation (the inner jit
     collapses into the outer trace), and exposes:
       * ``wrapped.stats``        — OffloadStats
@@ -2700,6 +2723,14 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
       * ``wrapped.rewritten(*a)``— the rewritten ClosedJaxpr
       * ``wrapped.cache_clear()`` / ``wrapped.cache_size()``
     """
+    def _enforce_verified(plan: OffloadPlan) -> None:
+        from repro.analysis import PlanVerificationError, verify_plan
+
+        findings = verify_plan(plan)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise PlanVerificationError(errors)
+
     policy = fold_legacy_kwargs(
         policy, where="mpu_offload", bulk_threshold=bulk_threshold,
         min_segment=min_segment, impl=impl, max_plans=max_plans)
@@ -2710,6 +2741,9 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
         persist_dir = os.environ.get("MPU_PLAN_CACHE") or None
     if verify_loaded is None:
         verify_loaded = os.environ.get("MPU_PLAN_VERIFY", "") not in ("", "0")
+    if verify_plans is None:
+        verify_plans = os.environ.get("MPU_VERIFY_PLANS", "") \
+            not in ("", "0")
     store_box: list = []   # lazily-built ArtifactStore (or None on failure)
 
     def persist_store():
@@ -2825,17 +2859,26 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
             run, plan, flat = _build_runner(
                 closed, policy=pol, donate_leaves=donate_leaves,
                 ledger=ledger)
+            if verify_plans:
+                _enforce_verified(plan)   # before persisting: the
+                                          # "verified" marker is honest
             if ledger is not None and ledger.entries is not None and \
                     dkey is not None:
                 payload = json.dumps({"schema": _PLAN_SCHEMA,
                                       "plans": ledger.entries}).encode()
                 evicted = store.put(dkey, payload,
                                     meta={"direction": "fwd",
-                                          "policy": repr(pol)})
+                                          "policy": repr(pol),
+                                          "verified": bool(verify_plans)})
                 if evicted > 0:
                     stats.disk_evictions += evicted
         else:
             run, plan, flat = built
+            if verify_plans:
+                # disk-loaded plans are re-verified too: the persisted
+                # payload may predate the verifier (or carry
+                # verified=False meta) and reconstruction trusts it
+                _enforce_verified(plan)
         consts = tuple(flat.consts)
 
         def flat_runner(*flat_args):
@@ -2887,6 +2930,8 @@ def mpu_offload(fn: Callable, *, policy: OffloadPolicy | None = None,
     wrapped.stats = stats
     wrapped.policy = policy
     wrapped.plan_for = lambda *args: entry_for(args, count=False)[0].plan
+    wrapped.verify = lambda *args: \
+        entry_for(args, count=False)[0].plan.verify()
     wrapped.explain = lambda *args: \
         entry_for(args, count=False)[0].plan.report()
     wrapped.rewritten = lambda *args: \

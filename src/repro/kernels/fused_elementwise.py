@@ -152,6 +152,43 @@ def _bcast_row_index(op_lead: tuple, out_lead: tuple,
     return rb, fn
 
 
+def segment_row_block(rows: int, specs: Sequence[tuple],
+                      rows_block: int = 512,
+                      donate: bool = False) -> tuple[int, int, bool]:
+    """Row-block selection for ``fused_segment_grid`` — exported so the
+    static plan verifier (``repro.analysis``) re-derives the EXACT block
+    sizes this kernel will pick, rather than re-implementing (and
+    drifting from) the math.
+
+    Returns ``(rb, pad, donate_kept)``: the block extent, the row padding
+    the kernel will add, and whether donation survives (padding forces
+    the kernel to drop ``input_output_aliases`` unless a row-dividing
+    block of acceptable size exists)."""
+    limit = max(min(rows_block, rows), 1)
+    g = 0   # rb must divide every rep repeat factor and tile period
+    for spec in specs:
+        role, op_rows = spec[0], spec[1]
+        if role == "rep":
+            g = math.gcd(g, rows // op_rows)
+        elif role == "tile":
+            g = math.gcd(g, op_rows)
+        elif role == "bcast":   # must divide the innermost out lead dim
+            g = math.gcd(g, spec[4][-1])
+    # largest divisor that fits the block budget (NOT gcd with the
+    # budget, which collapses to 1 for coprime extents like 511)
+    rb = _largest_divisor_leq(g, limit) if g else limit
+    pad = (-rows) % rb
+    if pad and donate:
+        # aliasing a jnp.pad temporary reuses a dead buffer, not the
+        # real boundary tensor; prefer a row-dividing block (rep/tile
+        # constraints guarantee pad == 0, so g is 0 here), and only
+        # give up donation when that would tank the block size
+        alt = _largest_divisor_leq(rows, limit)
+        if alt >= max(limit // 8, 16):
+            rb, pad = alt, 0
+    return rb, pad, donate and not pad
+
+
 def _seg_kernel(*refs, fn: Callable, n_in: int):
     vals = [r[...] for r in refs[:n_in]]
     outs = fn(*vals)
@@ -199,29 +236,9 @@ def fused_segment_grid(
     no extra HBM traffic (rmsnorm/softmax row stats; see
     ``repro.core.offload`` REDUCE_LANE_PRIMS admission).
     """
-    limit = max(min(rows_block, rows), 1)
-    g = 0   # rb must divide every rep repeat factor and tile period
-    for spec in specs:
-        role, op_rows = spec[0], spec[1]
-        if role == "rep":
-            g = math.gcd(g, rows // op_rows)
-        elif role == "tile":
-            g = math.gcd(g, op_rows)
-        elif role == "bcast":   # must divide the innermost out lead dim
-            g = math.gcd(g, spec[4][-1])
-    # largest divisor that fits the block budget (NOT gcd with the
-    # budget, which collapses to 1 for coprime extents like 511)
-    rb = _largest_divisor_leq(g, limit) if g else limit
-    pad = (-rows) % rb
-    if pad and donate:
-        # aliasing a jnp.pad temporary reuses a dead buffer, not the
-        # real boundary tensor; prefer a row-dividing block (rep/tile
-        # constraints guarantee pad == 0, so g is 0 here), and only
-        # give up donation when that would tank the block size
-        alt = _largest_divisor_leq(rows, limit)
-        if alt >= max(limit // 8, 16):
-            rb, pad = alt, 0
-    if pad:
+    rb, pad, keep = segment_row_block(rows, specs, rows_block,
+                                      donate=bool(donate))
+    if not keep:
         donate = ()
     grid = ((rows + pad) // rb,)
 

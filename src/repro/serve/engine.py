@@ -368,6 +368,18 @@ class Engine:
             self.params, self.cache, self._state["tok"], self._state["pos"],
             jnp.asarray(self.pool.tables), self._state["active"])
 
+    def verify_paged_tables(self):
+        """Static bounds proof for the paged decode kernel's
+        scalar-prefetched gathers: every block-table entry — padding
+        slots included, because the K/V index map runs on masked grid
+        steps too — must name a real page, and no slot's position may
+        exceed what its table row addresses.  Returns the (possibly
+        empty) list of ``repro.analysis`` findings."""
+        from repro.analysis import verify_paged_decode
+        return verify_paged_decode(
+            self.pool.tables, np.asarray(self._state["pos"]),
+            num_pages=self.num_pages, page_size=self.page_size)
+
     # -- slot management ----------------------------------------------------
     def _free_slot(self) -> int | None:
         idx = np.where(~self._host_active)[0]

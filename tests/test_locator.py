@@ -183,6 +183,25 @@ def test_far_prims_are_real_primitive_names():
         assert not missing, f"dead primitive names: {sorted(missing)}"
 
 
+def test_prim_registry_is_single_sourced():
+    """The locator and the plan verifier must consume the SAME opcode
+    tables (object identity, not equality): a primitive added to one
+    consumer's private copy would silently drift the other's notion of
+    near/far.  ``repro.core.prims`` is the single source of truth."""
+    from repro.analysis import verifier
+    from repro.core import locator, prims
+
+    assert locator.ELEMENTWISE_PRIMS is prims.ELEMENTWISE_PRIMS
+    assert locator.LAYOUT_PRIMS is prims.LAYOUT_PRIMS
+    assert locator.ANCHOR_PRIMS is prims.ANCHOR_PRIMS
+    assert locator.REDUCE_LANE_PRIMS is prims.REDUCE_LANE_PRIMS
+    assert locator.FAR_PRIMS is prims.FAR_PRIMS
+    assert locator._INDEX_OPERANDS is prims._INDEX_OPERANDS
+    assert locator.eqn_tier is prims.eqn_tier
+    # the verifier reaches the registry through the module, never a copy
+    assert verifier.prims is prims
+
+
 def test_eqn_tier_classification():
     from repro.core.locator import eqn_tier
 

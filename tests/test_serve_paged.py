@@ -286,3 +286,18 @@ def test_paged_pool_smaller_than_fixed_cache():
     # fixed-slot equivalent would pin 4 * 256 = 1024 positions; the pool
     # held at most 24 pages * 16 = 384
     assert eng.num_pages * eng.page_size < 4 * 256
+
+
+def test_verify_paged_tables_catches_corruption():
+    """The static bounds proof over the live page tables: clean after
+    real traffic (padding entries included — the decode kernel gathers
+    them on masked grid steps), and a poisoned entry or an impossible
+    slot length is reported with its rule id."""
+    cfg, params = _mk()
+    eng = Engine(cfg, params, slots=2, max_len=32, page_size=8)
+    assert eng.verify_paged_tables() == []
+    eng.generate(_prompts(3, lo=5, hi=12, seed=7))
+    assert eng.verify_paged_tables() == []
+    eng.pool.tables[0, 1] = eng.num_pages + 7
+    rules = {f.rule for f in eng.verify_paged_tables()}
+    assert "page-table-bounds" in rules
